@@ -1,0 +1,34 @@
+"""Paper §5.2.4: Bloom-filter false-positive impact, at the paper's exact
+catalog configuration (1M capacity, 1% target)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_line, make_world
+from repro.core.bloom import BloomFilter
+
+
+def main():
+    bf = BloomFilter(capacity=1_000_000, fp_rate=0.01)
+    rng = np.random.default_rng(0)
+    n_inserted = 1_000_000
+    for _ in range(n_inserted):
+        bf.add(rng.bytes(16))
+    probes = 200_000
+    fp = sum(rng.bytes(17) in bf for _ in range(probes)) / probes
+
+    # expected Case-1 TTFT penalty = fp * (wasted GET round trip)
+    w = make_world("low")
+    from repro.core.sizing import state_bytes
+    wasted = w.net.transfer_time(256)              # miss response is tiny
+    paper_penalty = 0.86 * 0.01                    # paper's own estimate
+    lines = [csv_line(
+        "bloom_fp_at_capacity", fp * 1e6,
+        f"fp_rate={fp:.4f};target=0.01;size_MB={bf.size_bytes / 1e6:.2f};"
+        f"k={bf.k};case1_ttft_penalty_ms={fp * wasted * 1e3:.3f};"
+        f"paper_penalty_ms={paper_penalty * 1e3:.1f}")]
+    return lines
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Paper §5.3 break-even analysis, generalized (beyond-paper): for each
+device class x architecture, the prompt length-independent ratio
+
+    gain(n) = TTFT_hit(n) / TTFT_miss(n)
+            ~ transfer(state_bytes(n)) / prefill(n)
+
+determines whether distributed prompt caching pays. We sweep bandwidth and
+device speed, and place every assigned architecture on the map (MLA's
+compact latent cache vs dense GQA vs SSM constant state)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_line
+from repro.configs import get_config
+from repro.configs.registry import ASSIGNED
+from repro.core.netsim import SimNetwork
+from repro.core.perfmodel import PI_5, PI_ZERO_2W, TPU_V5E
+from repro.core.sizing import state_bytes
+
+
+def breakeven_bandwidth(cfg, perf, n_tokens: int = 405) -> float:
+    """Bandwidth (bit/s) where full-hit TTFT == miss TTFT."""
+    t_prefill = perf.time_prefill(cfg, n_tokens)
+    nbytes = state_bytes(cfg, n_tokens)
+    if t_prefill <= 0:
+        return float("inf")
+    return nbytes * 8.0 / t_prefill
+
+
+def main():
+    lines = []
+    # paper's own settings
+    for name, cfg_name, perf in (("low", "gemma3-270m", PI_ZERO_2W),
+                                 ("high", "gemma3-1b", PI_5)):
+        cfg = get_config(cfg_name)
+        bw = breakeven_bandwidth(cfg, perf)
+        wifi = SimNetwork().bandwidth_bps
+        wins = "hit-wins" if bw < wifi else "miss-wins"
+        lines.append(csv_line(
+            f"breakeven_{name}", bw,
+            f"breakeven_bw={bw / 1e6:.2f}Mbps;wifi=21Mbps;{wins};"
+            f"state_bytes={state_bytes(cfg, 405)};"
+            f"prefill_405tok={perf.time_prefill(cfg, 405):.2f}s"))
+
+    # every assigned architecture on a TPU v5e replica over 100 Gb/s DCN
+    dcn = 100e9
+    for arch in sorted(ASSIGNED):
+        cfg = get_config(arch)
+        bw = breakeven_bandwidth(cfg, TPU_V5E, n_tokens=32768)
+        lines.append(csv_line(
+            f"breakeven_tpu_{arch}", bw,
+            f"breakeven_bw={bw / 1e9:.2f}Gbps;dcn=100Gbps;"
+            f"{'hit-wins' if bw < dcn else 'miss-wins'};"
+            f"state_MB_32k={state_bytes(cfg, 32768) / 1e6:.1f}"))
+    return lines
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Paper §5.2.3: benefit of the local catalog. Under a 0%-hit workload,
+clients WITHOUT a catalog pay a server round-trip per range probe on every
+request; clients WITH a catalog never touch the network."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_line, make_world
+from repro.data import MMLU_DOMAINS
+
+
+def main():
+    w = make_world("low")
+    with_cat = w.client("with", use_catalog=True)
+    without = w.client("without", use_catalog=False)
+    t_with, t_without = [], []
+    for p in w.gen.stream(12, MMLU_DOMAINS[8:12]):
+        r1 = with_cat.infer(p.segments, max_new_tokens=2,
+                            upload_on_miss=False)
+        r2 = without.infer(p.segments, max_new_tokens=2,
+                           upload_on_miss=False)
+        t_with.append(r1.sim.ttft)
+        t_without.append(r2.sim.ttft)
+    a, b = float(np.mean(t_with)), float(np.mean(t_without))
+    return [csv_line(
+        "catalog_ablation_cold_ttft", a * 1e6,
+        f"with_catalog={a:.3f}s;without={b:.3f}s;"
+        f"overhead_avoided={(b - a) * 1e3:.1f}ms;"
+        f"catalog_size_MB={with_cat.catalog.size_bytes / 1e6:.2f}")]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Engine micro-benchmarks (real wall time on this host): prefill and
+decode us/call for the reduced executable model, plus state blob
+serialize/restore throughput — the operations on the paper's critical
+path."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_line, make_world
+from repro.core import state_io
+from repro.core.keys import model_meta
+from repro.serving.engine import InferenceEngine
+
+
+def main():
+    w = make_world("low")
+    eng = InferenceEngine(w.model, w.params, max_len=256)
+    toks = np.arange(3, 131, dtype=np.int32)[None]
+    # warm up compile
+    st = eng.start({"tokens": toks})
+    eng.generate(st, 4)
+
+    n = 10
+    t0 = time.perf_counter()
+    for _ in range(n):
+        st = eng.start({"tokens": toks})
+    t_pref = (time.perf_counter() - t0) / n
+    st = eng.start({"tokens": toks})
+    t0 = time.perf_counter()
+    eng.generate(st, 32)
+    t_dec = (time.perf_counter() - t0) / 32
+
+    meta = model_meta(w.exec_cfg, "float32")
+    t0 = time.perf_counter()
+    for _ in range(n):
+        blob = state_io.extract_state(st.cache, 128, meta,
+                                      logits=st.last_logits)
+    t_ser = (time.perf_counter() - t0) / n
+    template = eng.new_cache()
+    payload = state_io.parse_state(blob, meta)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        state_io.restore_state(payload, template)
+    t_res = (time.perf_counter() - t0) / n
+
+    return [
+        csv_line("engine_prefill_128tok", t_pref * 1e6,
+                 f"tok_per_s={128 / t_pref:.0f}"),
+        csv_line("engine_decode_step", t_dec * 1e6,
+                 f"tok_per_s={1 / t_dec:.1f}"),
+        csv_line("state_serialize_128tok", t_ser * 1e6,
+                 f"blob_bytes={len(blob)};MBps={len(blob) / t_ser / 1e6:.1f}"),
+        csv_line("state_restore_128tok", t_res * 1e6,
+                 f"MBps={len(blob) / t_res / 1e6:.1f}"),
+    ]
+
+
+if __name__ == "__main__":
+    main()

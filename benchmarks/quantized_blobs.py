@@ -1,0 +1,53 @@
+"""Beyond-paper (CacheGen-adjacent, [8] in the paper): int8 prompt-cache
+blobs. Measures blob-size reduction and the resulting TTFT-hit change on
+the low-end setting, plus greedy-output fidelity."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_line, make_world
+from repro.config import CacheConfig
+from repro.core import EdgeClient, state_io
+from repro.core.keys import model_meta
+from repro.core.transport import InProcTransport
+from repro.serving.engine import InferenceEngine
+from repro.data import MMLU_DOMAINS
+
+
+def main():
+    w = make_world("low")
+    sizes = {}
+    outputs = {}
+    for mode, quant in (("fp", False), ("int8", True)):
+        w.server.__init__(CacheConfig(quantize=quant))
+        ccfg = CacheConfig(quantize=quant)
+
+        def client(name):
+            eng = InferenceEngine(w.model, w.params, max_len=1024)
+            tr = InProcTransport(w.server, w.net, w.clock)
+            return EdgeClient(name, eng, tr, ccfg, perf=w.perf,
+                              perf_cfg=w.cfg)
+        c1, c2 = client("a"), client("b")
+        blob_bytes, hit_ttft, outs = [], [], []
+        for p in w.gen.stream(6, MMLU_DOMAINS[:6]):
+            r1 = c1.infer(p.segments, max_new_tokens=8)
+            c2.sync_catalog()
+            c2.catalog.last_sync_t = -1e18
+            r2 = c2.infer(p.segments, max_new_tokens=8)
+            blob_bytes.append(r2.blob_bytes_down)
+            outs.append((r1.output_tokens, r2.output_tokens))
+            hit_ttft.append(r2.sim.ttft)
+        sizes[mode] = float(np.mean(blob_bytes))
+        outputs[mode] = outs
+
+    fidelity = sum(a == b for a, b in outputs["int8"]) / len(
+        outputs["int8"])
+    return [csv_line(
+        "quantized_blobs", sizes["int8"],
+        f"fp_bytes={sizes['fp']:.0f};int8_bytes={sizes['int8']:.0f};"
+        f"ratio={sizes['int8'] / sizes['fp']:.2f};"
+        f"hit_vs_miss_output_match={fidelity:.2f}")]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""§Roofline: three-term roofline per (arch x shape) from the dry-run
+records (experiments/dryrun_single.jsonl). Uses depth-extrapolated
+FLOPs/bytes/collectives when probes are present, else raw; adds
+MODEL_FLOPS = 6*N_active*D (train) / 2*N_active*D (inference) and the
+useful-compute ratio."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import csv_line
+from repro.config import SHAPES
+from repro.configs import get_config
+from repro.roofline.analysis import roofline_terms
+from repro.roofline.hw import V5E
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                      "dryrun_single.jsonl")
+
+
+def model_flops(cfg, shape) -> float:
+    n = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    per_tok = 6 * n if shape.kind == "train" else 2 * n
+    return per_tok * tokens
+
+
+def load_records(path=DRYRUN):
+    recs = {}
+    if not os.path.exists(path):
+        return recs
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            if r.get("ok"):
+                recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+def terms_for(rec):
+    flops = rec.get("ext_flops", rec.get("raw_flops", 0.0))
+    bytes_ = rec.get("ext_bytes", rec.get("raw_bytes", 0.0))
+    coll = rec.get("ext_coll_bytes", rec.get("raw_coll_bytes", 0.0))
+    return roofline_terms(flops, bytes_, coll, rec["chips"], V5E), \
+        flops, bytes_, coll
+
+
+def main():
+    recs = load_records()
+    lines = []
+    for (arch, shape_name), rec in sorted(recs.items()):
+        shape = SHAPES[shape_name]
+        cfg = get_config(arch)
+        terms, flops, bytes_, coll = terms_for(rec)
+        mf = model_flops(cfg, shape) / rec["chips"]   # per-chip
+        useful = mf / flops if flops else 0.0
+        step = max(terms["compute_s"], terms["memory_s"],
+                   terms["collective_s"])
+        lines.append(csv_line(
+            f"roofline_{arch}_{shape_name}", step * 1e6,
+            f"compute={terms['compute_s']:.2e}s;"
+            f"memory={terms['memory_s']:.2e}s;"
+            f"collective={terms['collective_s']:.2e}s;"
+            f"dominant={terms['dominant']};"
+            f"useful_flops_ratio={useful:.2f};"
+            f"fits_hbm={rec.get('fits_hbm')}"))
+    if not lines:
+        lines.append(csv_line("roofline_table", 0,
+                              "no dryrun records; run launch.dryrun first"))
+    return lines
+
+
+if __name__ == "__main__":
+    main()

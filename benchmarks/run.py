@@ -1,0 +1,51 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines. Usage:
+    PYTHONPATH=src python -m benchmarks.run [--only substr]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    "benchmarks.table2_ttft_ttlt",     # paper Table 2 / Fig 4
+    "benchmarks.table3_breakdown",     # paper Table 3
+    "benchmarks.table4_partial",       # paper Table 4 / Fig 5
+    "benchmarks.bloom_fp",             # paper §5.2.4
+    "benchmarks.catalog_ablation",     # paper §5.2.3
+    "benchmarks.breakeven",            # paper §5.3 + beyond-paper
+    "benchmarks.quantized_blobs",      # beyond-paper: int8 KV blobs
+    "benchmarks.range_stride",         # beyond-paper: dense range regs
+    "benchmarks.workload_sim",         # full 6434-prompt workload (§5.1)
+    "benchmarks.engine_micro",         # substrate microbenchmarks
+    "benchmarks.roofline_table",       # §Roofline (from dry-run records)
+]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod_name in MODULES:
+        if args.only and args.only not in mod_name:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(mod_name, fromlist=["main"])
+            mod.main()
+            print(f"# {mod_name} done in {time.time() - t0:.1f}s",
+                  file=sys.stderr)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"{mod_name},0,FAILED")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,56 @@
+"""Paper Table 3: latency breakdown (Token / Bloom / P-decode / Redis /
+R-decode / Sample) under Case 1 and Case 5, low-end and high-end."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_line, make_world
+from repro.core.metrics import COMPONENTS
+from repro.data import MMLU_DOMAINS
+
+PAPER_MS = {   # msec from the paper's Table 3
+    ("low", 1): dict(token=3.46, bloom=0.30, p_decode=12580.85, redis=2.42,
+                     r_decode=11061.04, sample=95.69),
+    ("low", 5): dict(token=3.46, bloom=0.19, p_decode=0.0, redis=861.92,
+                     r_decode=10904.67, sample=84.82),
+    ("high", 1): dict(token=1.61, bloom=0.0, p_decode=2688.17, redis=7.84,
+                      r_decode=72.59, sample=1.45),
+    ("high", 5): dict(token=1.56, bloom=0.0, p_decode=0.0, redis=2887.04,
+                      r_decode=78.12, sample=1.67),
+}
+
+
+def run_setting(setting: str, n_prompts: int = 16):
+    w = make_world(setting)
+    # decode lengths per the paper: low-end ~57 output tokens, high-end ~2
+    max_new = 57 if setting == "low" else 2
+    c1, c2 = w.client("a"), w.client("b")
+    rows = {1: [], 5: []}
+    for p in w.gen.stream(n_prompts, MMLU_DOMAINS[:n_prompts]):
+        r1 = c1.infer(p.segments, max_new_tokens=max_new)
+        c2.sync_catalog()
+        c2.catalog.last_sync_t = -1e18
+        r2 = c2.infer(p.segments, max_new_tokens=max_new)
+        rows[1].append(r1.sim.as_dict())
+        rows[5].append(r2.sim.as_dict())
+    return {case: {k: float(np.mean([r[k] for r in rs])) for k in rs[0]}
+            for case, rs in rows.items()}
+
+
+def main():
+    lines = []
+    for setting in ("low", "high"):
+        avg = run_setting(setting)
+        for case in (1, 5):
+            parts = ";".join(f"{c}={avg[case][c] * 1e3:.2f}ms"
+                             for c in COMPONENTS)
+            paper = PAPER_MS[(setting, case)]
+            ref = ";".join(f"paper_{k}={v:.2f}ms" for k, v in paper.items())
+            lines.append(csv_line(
+                f"table3_{setting}_case{case}",
+                avg[case]["ttlt"] * 1e6, parts + ";" + ref))
+    return lines
+
+
+if __name__ == "__main__":
+    main()

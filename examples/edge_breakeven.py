@@ -1,0 +1,45 @@
+"""Break-even explorer (paper §5.3): ASCII map of where distributed prompt
+caching wins, over (device speed x network bandwidth), for a chosen arch.
+
+    PYTHONPATH=src python examples/edge_breakeven.py --arch gemma3-270m
+    PYTHONPATH=src python examples/edge_breakeven.py --arch deepseek-v3-671b
+"""
+import argparse
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.perfmodel import DevicePerfModel
+from repro.core.sizing import state_bytes
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-270m")
+    ap.add_argument("--tokens", type=int, default=405)
+    args = ap.parse_args()
+    cfg = get_config(args.arch)
+    nbytes = state_bytes(cfg, args.tokens)
+    print(f"arch={cfg.name}  prompt={args.tokens} tokens  "
+          f"state blob={nbytes / 1e6:.2f} MB  "
+          f"active params={cfg.active_param_count() / 1e9:.2f}B\n")
+
+    speeds = np.logspace(9, 14, 11)        # 1 GFLOP/s .. 100 TFLOP/s
+    bands = np.logspace(6, 11, 13)         # 1 Mb/s .. 100 Gb/s
+    print("rows: device FLOP/s; cols: bandwidth;  #=hit wins  .=miss wins")
+    hdr = "            " + "".join(f"{b / 1e6:>9.0f}M" for b in bands)
+    print(hdr)
+    for s in speeds:
+        perf = DevicePerfModel("x", s, s, 0, 0, 0)
+        t_prefill = perf.time_prefill(cfg, args.tokens)
+        row = ""
+        for b in bands:
+            t_xfer = nbytes * 8 / b
+            row += ("        #" if t_xfer < t_prefill else "        .") + " "
+        print(f"{s:10.1e}  {row}")
+    print("\n(paper: Pi Zero 2W ~ 2e9 eff FLOP/s @ 21 Mb/s -> '#';"
+          " Pi 5 ~ 2.5e11 @ 21 Mb/s -> '.')")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the sweep
+records. Usage: PYTHONPATH=src python experiments/render_tables.py"""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.config import SHAPES  # noqa: E402
+from repro.configs import get_config  # noqa: E402
+from repro.roofline.analysis import roofline_terms  # noqa: E402
+from repro.roofline.hw import V5E  # noqa: E402
+
+HERE = os.path.dirname(__file__)
+
+
+def load(path):
+    out = {}
+    with open(os.path.join(HERE, path)) as f:
+        for line in f:
+            r = json.loads(line)
+            if r.get("ok"):
+                out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def gib(n):
+    return f"{(n or 0) / 2**30:.2f}"
+
+
+def model_flops(cfg, shape, chips):
+    n = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    per = 6 * n if shape.kind == "train" else 2 * n
+    return per * tokens / chips
+
+
+def main():
+    single = load("dryrun_single.jsonl")
+    multi = load("dryrun_multi.jsonl")
+
+    print("### §Dry-run — per-device memory (single-pod 16x16 / "
+          "multi-pod 2x16x16)\n")
+    print("| arch | shape | layout | compile s | args GiB (1pod/2pod) | "
+          "temp GiB (1pod/2pod) | fits v5e (1pod/2pod) |")
+    print("|---|---|---|---|---|---|---|")
+    for (arch, shape), r in sorted(single.items()):
+        m = multi.get((arch, shape), {})
+        print(f"| {arch} | {shape} | {r.get('layout', 'tp')} "
+              f"| {r['compile_s']} "
+              f"| {gib(r['argument_size_in_bytes'])}/"
+              f"{gib(m.get('argument_size_in_bytes'))} "
+              f"| {gib(r['temp_size_in_bytes'])}/"
+              f"{gib(m.get('temp_size_in_bytes'))} "
+              f"| {r['fits_hbm']}/{m.get('fits_hbm')} |")
+
+    print("\n### §Roofline — depth-extrapolated terms, single-pod "
+          "(256 chips)\n")
+    print("| arch | shape | compute s | memory s | collective s | "
+          "dominant | MODEL_FLOPS/HLO |")
+    print("|---|---|---|---|---|---|---|")
+    for (arch, shape), r in sorted(single.items()):
+        fl = r.get("ext_flops", r["raw_flops"])
+        by = r.get("ext_bytes", r["raw_bytes"])
+        co = r.get("ext_coll_bytes", r["raw_coll_bytes"])
+        t = roofline_terms(fl, by, co, r["chips"], V5E)
+        mf = model_flops(get_config(arch), SHAPES[shape], r["chips"])
+        print(f"| {arch} | {shape} | {t['compute_s']:.2e} "
+              f"| {t['memory_s']:.2e} | {t['collective_s']:.2e} "
+              f"| {t['dominant']} | {min(mf / fl, 9.99):.2f} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""repro: distributed prompt caching for LLM serving, in JAX.
+
+The paper (Matsutani et al.) as a multi-pod framework: see README.md.
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,284 @@
+"""Configuration system: model architecture, input shapes, mesh, runtime.
+
+Every assigned architecture is expressed as a ``ModelConfig``; reduced
+variants for CPU smoke tests come from ``ModelConfig.reduced()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Model architecture config
+# ---------------------------------------------------------------------------
+
+FAMILIES = ("dense", "moe", "ssm", "hybrid", "encdec", "vlm")
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 0            # routed experts
+    top_k: int = 0
+    n_shared: int = 0             # shared (always-on) experts
+    expert_ff: int = 0            # hidden dim of each routed expert
+    shared_ff: int = 0            # hidden dim of the shared expert(s)
+    first_k_dense: int = 0        # leading dense layers (deepseek-v3 style)
+    dense_ff: int = 0             # ff of those leading dense layers
+    aux_coef: float = 0.01        # load-balance aux loss coefficient
+    capacity_factor: float = 2.0  # EP dispatch capacity slack
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    d_conv: int = 4
+    chunk: int = 64               # SSD chunk length
+    n_groups: int = 1             # B/C groups (mamba2 "G")
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_dim: int = 128
+
+
+@dataclass(frozen=True)
+class EncDecConfig:
+    n_enc_layers: int = 6
+    n_frames: int = 1500          # stub audio frontend output length
+    max_target_positions: int = 448
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # one of FAMILIES
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0             # 0 -> d_model // n_heads
+    act: str = "silu"             # silu | gelu | relu2
+    gated_mlp: bool = True
+    norm: str = "rmsnorm"         # rmsnorm | layernorm
+    qk_norm: bool = False
+    attn_bias: bool = False
+    rope: str = "standard"        # standard | mrope | none
+    rope_theta: float = 10000.0
+    mrope_sections: Tuple[int, ...] = ()
+    tie_embeddings: bool = False
+    window: Optional[int] = None  # sliding-window size (None = full attention)
+    n_meta_tokens: int = 0        # hymba learned prefix tokens
+    mtp: bool = False             # deepseek multi-token prediction head
+    moe: MoEConfig = field(default_factory=MoEConfig)
+    ssm: SSMConfig = field(default_factory=SSMConfig)
+    mla: MLAConfig = field(default_factory=MLAConfig)
+    encdec: EncDecConfig = field(default_factory=EncDecConfig)
+    source: str = ""              # citation for the config
+
+    # ------------------------------------------------------------------
+    @property
+    def dh(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def uses_mla(self) -> bool:
+        return self.family == "moe" and self.mla.kv_lora_rank > 0 and \
+            self.name.startswith("deepseek")
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm.expand * self.d_model
+
+    @property
+    def ssm_n_heads(self) -> int:
+        return self.ssm_d_inner // self.ssm.head_dim
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def reduced(self) -> "ModelConfig":
+        """A tiny same-family variant for CPU smoke tests.
+
+        2 layers, d_model<=512, <=4 experts, small vocab.
+        """
+        kw = dict(
+            name=self.name + "-reduced",
+            n_layers=2,
+            d_model=min(self.d_model, 128),
+            n_heads=min(self.n_heads, 4),
+            n_kv_heads=min(self.n_kv_heads, 2),
+            head_dim=32 if self.head_dim else 0,
+            d_ff=min(self.d_ff, 256) if self.d_ff else 0,
+            vocab=min(self.vocab, 512),
+        )
+        if self.family == "moe":
+            kw["moe"] = dataclasses.replace(
+                self.moe,
+                n_experts=min(self.moe.n_experts, 4),
+                top_k=min(self.moe.top_k, 2),
+                expert_ff=min(self.moe.expert_ff, 128),
+                shared_ff=min(self.moe.shared_ff, 128) if self.moe.shared_ff else 0,
+                first_k_dense=min(self.moe.first_k_dense, 1),
+                dense_ff=min(self.moe.dense_ff, 128) if self.moe.dense_ff else 0,
+            )
+        if self.family in ("ssm", "hybrid"):
+            kw["ssm"] = dataclasses.replace(
+                self.ssm, d_state=min(self.ssm.d_state, 16),
+                head_dim=16, chunk=16)
+        if self.family == "encdec":
+            kw["encdec"] = dataclasses.replace(
+                self.encdec, n_enc_layers=2, n_frames=16)
+        if self.rope == "mrope":
+            # keep 3 sections summing to head_dim//2 = 16
+            kw["mrope_sections"] = (4, 6, 6)
+        if self.n_meta_tokens:
+            kw["n_meta_tokens"] = 8
+        if self.window is not None:
+            kw["window"] = min(self.window, 16)
+        return self.replace(**kw)
+
+    # ------------------------------------------------------------------
+    def param_count(self) -> int:
+        """Analytical parameter count, N (used for 6*N*D roofline terms)."""
+        d, dh = self.d_model, self.dh
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        if self.family == "encdec":
+            e = self.encdec
+            # encoder self-attn + mlp, decoder self + cross + mlp
+            attn = 2 * d * (self.n_heads + 2 * self.n_kv_heads) * dh + \
+                self.n_heads * dh * d  # qkv (+bias ignored) + o ... approx
+            enc_l = attn + 2 * d * self.d_ff
+            dec_l = 2 * attn + 2 * d * self.d_ff
+            return emb + e.n_enc_layers * enc_l + self.n_layers * dec_l
+        if self.family == "ssm":
+            di, ns = self.ssm_d_inner, self.ssm.d_state
+            g = self.ssm.n_groups
+            in_proj = d * (2 * di + 2 * g * ns + self.ssm_n_heads)
+            out_proj = di * d
+            per = in_proj + out_proj + di * self.ssm.d_conv
+            return emb + self.n_layers * per
+        # attention part
+        if self.uses_mla:
+            m = self.mla
+            attn = (d * m.q_lora_rank
+                    + m.q_lora_rank * self.n_heads * (m.qk_nope_dim + m.qk_rope_dim)
+                    + d * (m.kv_lora_rank + m.qk_rope_dim)
+                    + m.kv_lora_rank * self.n_heads * (m.qk_nope_dim + m.v_dim)
+                    + self.n_heads * m.v_dim * d)
+        else:
+            attn = d * (self.n_heads + 2 * self.n_kv_heads) * dh \
+                + self.n_heads * dh * d
+        # mlp part per layer
+        mult = 3 if self.gated_mlp else 2
+        if self.family == "moe":
+            mo = self.moe
+            moe_mlp = mo.n_experts * mult * d * mo.expert_ff \
+                + mo.n_shared * mult * d * (mo.shared_ff or mo.expert_ff) \
+                + d * mo.n_experts  # router
+            n_moe = self.n_layers - mo.first_k_dense
+            dense_mlp = mult * d * (mo.dense_ff or self.d_ff)
+            mlp_total = n_moe * moe_mlp + mo.first_k_dense * dense_mlp
+        else:
+            mlp_total = self.n_layers * mult * d * self.d_ff
+        per_layer_extra = 0
+        if self.family == "hybrid":
+            di, ns = self.ssm_d_inner, self.ssm.d_state
+            per_layer_extra = d * (2 * di + 2 * ns + self.ssm_n_heads) + di * d
+        return emb + self.n_layers * (attn + per_layer_extra) + mlp_total
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only routed top-k + shared)."""
+        if self.family != "moe":
+            return self.param_count()
+        mo = self.moe
+        full = self.param_count()
+        mult = 3 if self.gated_mlp else 2
+        n_moe = self.n_layers - mo.first_k_dense
+        all_experts = n_moe * mo.n_experts * mult * self.d_model * mo.expert_ff
+        active_experts = n_moe * mo.top_k * mult * self.d_model * mo.expert_ff
+        return full - all_experts + active_experts
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # train | prefill | decode
+    # decode shapes lower serve_step: 1 new token vs a seq_len KV cache.
+    # long-context decode forces a sliding window on full-attention archs.
+    force_window: Optional[int] = None
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode",
+                             force_window=8192),
+}
+
+
+# ---------------------------------------------------------------------------
+# Runtime / cache-system config (the paper's knobs)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class CacheConfig:
+    """Distributed prompt cache configuration (paper §3-§4)."""
+    bloom_capacity: int = 1_000_000   # paper: 1M entries
+    bloom_fp_rate: float = 0.01       # paper: 1% target FP ratio
+    compress: bool = True             # zstd state blobs (beyond-paper)
+    compress_level: int = 1
+    quantize: bool = False            # int8 KV blobs (beyond-paper)
+    max_ranges: int = 4               # prompt ranges registered per upload
+    range_stride: int = 0             # >0: also register every k tokens
+    min_match_tokens: int = 4         # minimum prefix worth fetching
+    sync_interval_s: float = 1.0      # async catalog sync period
+    # server-side LRU byte budget (0 = unbounded). Evicted keys linger in
+    # the Bloom catalogs and surface as false positives — handled by the
+    # paper's §3.3 fallback, so eviction needs no catalog invalidation.
+    max_store_bytes: int = 0
+
+
+@dataclass(frozen=True)
+class NetConfig:
+    """Simulated network (paper: 2.4GHz Wi-Fi 4).
+
+    Calibrated so a 2.25MB blob takes ~0.86s (paper Table 3):
+    2.25e6*8/0.86 ~= 21 Mb/s effective.
+    """
+    bandwidth_bps: float = 21e6
+    rtt_s: float = 0.003              # observed small-op Redis latency
+
+
+@dataclass(frozen=True)
+class DeviceClass:
+    """Device performance model for edge-latency emulation (paper Table 1)."""
+    name: str
+    flops: float                      # effective sustained FLOP/s
+    # calibration: gemma3-270m prefill of 405 tok in 12.58s on Pi Zero 2W
+    #   6*N*D flops = 6*268e6*405 = 6.5e11 -> ~5.2e10 eff FLOP/s... but the
+    #   A53 does ~2-4 GFLOP/s/core*4; llama.cpp Q-quantized. We calibrate
+    #   empirically per model in perfmodel.py; `flops` is the default.
+
+
+PI_ZERO_2W = DeviceClass("pi-zero-2w", 2.1e9)
+PI_5 = DeviceClass("pi-5", 38e9)

@@ -1,0 +1,3 @@
+"""Architecture registry: 10 assigned archs + the paper's own Gemma-3 models."""
+from repro.configs.registry import ARCHS, get_config, list_archs  # noqa: F401
+from repro.config import SHAPES, ShapeConfig  # noqa: F401

@@ -1,0 +1,28 @@
+"""deepseek-v3-671b [moe] — MLA, 1 shared + 256 routed top-8, MTP.
+
+[arXiv:2412.19437]
+61L d_model=7168 128H d_ff(expert)=2048 vocab=129280, MoE 256e top-8.
+First 3 layers dense (d_ff=18432) per the source paper. MLA latent KV cache
+(kv_lora 512 + rope 64) makes the prompt-cache blob ~8x smaller than
+equivalent GQA — the best case for the paper's distributed cache.
+"""
+from repro.config import MLAConfig, MoEConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=128,
+    n_kv_heads=128,
+    head_dim=128,
+    d_ff=18432,
+    vocab=129280,
+    act="silu",
+    mtp=True,
+    moe=MoEConfig(n_experts=256, top_k=8, n_shared=1, expert_ff=2048,
+                  shared_ff=2048, first_k_dense=3, dense_ff=18432),
+    mla=MLAConfig(q_lora_rank=1536, kv_lora_rank=512,
+                  qk_nope_dim=128, qk_rope_dim=64, v_dim=128),
+    source="arXiv:2412.19437",
+)

@@ -1,0 +1,23 @@
+"""gemma3-1b — the paper's own high-end model (Gemma-3 1B).
+
+[deepmind.google/models/gemma/gemma-3] Used by the paper-reproduction
+benchmarks (high-end edge setting).
+"""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-1b",
+    family="dense",
+    n_layers=26,
+    d_model=1152,
+    n_heads=4,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=6912,
+    vocab=262144,
+    act="gelu",
+    qk_norm=True,
+    tie_embeddings=True,
+    rope_theta=1e6,
+    source="gemma-3 model card (paper's high-end model)",
+)

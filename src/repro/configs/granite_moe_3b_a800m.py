@@ -1,0 +1,21 @@
+"""granite-moe-3b-a800m [moe] — 40 routed experts, top-8.
+
+[hf:ibm-granite/granite-3.0-1b-a400m-base family]
+32L d_model=1536 24H (GQA kv=8) expert_ff=512 vocab=49155, MoE 40e top-8.
+"""
+from repro.config import MoEConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-3b-a800m",
+    family="moe",
+    n_layers=32,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=8,
+    d_ff=512,
+    vocab=49155,
+    act="silu",
+    tie_embeddings=True,
+    moe=MoEConfig(n_experts=40, top_k=8, expert_ff=512),
+    source="hf:ibm-granite/granite-3.0-1b-a400m-base",
+)

@@ -1,0 +1,23 @@
+"""hymba-1.5b [hybrid] — parallel attention + mamba heads. [arXiv:2411.13676]
+
+32L d_model=1600 25H (GQA kv=5) d_ff=5504 vocab=32001, ssm_state=16.
+Meta tokens (learned prefix) + sliding-window attention in parallel with an
+SSM branch per layer; outputs mean-fused after per-branch normalization.
+"""
+from repro.config import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    d_ff=5504,
+    vocab=32001,
+    act="silu",
+    window=1024,            # hymba uses SWA on most layers
+    n_meta_tokens=128,
+    ssm=SSMConfig(d_state=16, head_dim=64, expand=2, d_conv=4, chunk=64),
+    source="arXiv:2411.13676",
+)

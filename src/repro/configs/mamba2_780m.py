@@ -1,0 +1,23 @@
+"""mamba2-780m [ssm] — SSD (state-space duality), attention-free.
+
+[arXiv:2405.21060]
+48L d_model=1536 vocab=50280, ssm_state=128, expand=2 (d_inner=3072),
+head_dim=64 (48 SSM heads), depthwise conv k=4, gated (z) branch.
+"""
+from repro.config import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-780m",
+    family="ssm",
+    n_layers=48,
+    d_model=1536,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,
+    vocab=50280,
+    rope="none",
+    tie_embeddings=True,
+    ssm=SSMConfig(d_state=128, head_dim=64, expand=2, d_conv=4, chunk=256,
+                  n_groups=1),
+    source="arXiv:2405.21060",
+)

@@ -1,0 +1,25 @@
+"""qwen2-vl-2b [vlm] — M-RoPE, dynamic resolution. [arXiv:2409.12191]
+
+28L d_model=1536 12H (GQA kv=2) d_ff=8960 vocab=151936. The ViT vision
+encoder + projector is a STUB: input_specs provides merged token/patch
+embeddings [B, S, D] plus 3-component M-RoPE position ids [3, B, S].
+"""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-2b",
+    family="vlm",
+    n_layers=28,
+    d_model=1536,
+    n_heads=12,
+    n_kv_heads=2,
+    d_ff=8960,
+    vocab=151936,
+    act="silu",
+    attn_bias=True,
+    rope="mrope",
+    rope_theta=1e6,
+    mrope_sections=(16, 24, 24),   # sums to head_dim//2 = 64
+    tie_embeddings=True,
+    source="arXiv:2409.12191",
+)

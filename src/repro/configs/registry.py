@@ -1,0 +1,44 @@
+"""Registry of selectable architectures (``--arch <id>``)."""
+from repro.configs import (  # noqa: E501
+    deepseek_v3_671b,
+    gemma3_1b,
+    gemma3_270m,
+    granite_moe_3b_a800m,
+    hymba_1_5b,
+    llama3_2_1b,
+    mamba2_780m,
+    nemotron_4_15b,
+    qwen2_vl_2b,
+    qwen3_4b,
+    whisper_base,
+    yi_6b,
+)
+
+# The 10 assigned architectures.
+ASSIGNED = {
+    "whisper-base": whisper_base.CONFIG,
+    "granite-moe-3b-a800m": granite_moe_3b_a800m.CONFIG,
+    "qwen2-vl-2b": qwen2_vl_2b.CONFIG,
+    "yi-6b": yi_6b.CONFIG,
+    "nemotron-4-15b": nemotron_4_15b.CONFIG,
+    "hymba-1.5b": hymba_1_5b.CONFIG,
+    "deepseek-v3-671b": deepseek_v3_671b.CONFIG,
+    "llama3.2-1b": llama3_2_1b.CONFIG,
+    "mamba2-780m": mamba2_780m.CONFIG,
+    "qwen3-4b": qwen3_4b.CONFIG,
+}
+
+# Plus the paper's own models (used by the reproduction benchmarks).
+ARCHS = dict(ASSIGNED)
+ARCHS["gemma3-270m"] = gemma3_270m.CONFIG
+ARCHS["gemma3-1b"] = gemma3_1b.CONFIG
+
+
+def get_config(arch: str):
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS)}")
+    return ARCHS[arch]
+
+
+def list_archs():
+    return sorted(ARCHS)

@@ -1,0 +1,26 @@
+"""whisper-base [audio] — enc-dec, conv frontend (stub). [arXiv:2212.04356]
+
+6L (enc+dec) d_model=512 8H (MHA kv=8) d_ff=2048 vocab=51865. The
+mel-spectrogram + conv feature extractor is a STUB: input_specs provides
+precomputed frame embeddings [B, n_frames, 512].
+"""
+from repro.config import EncDecConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    family="encdec",
+    n_layers=6,
+    d_model=512,
+    n_heads=8,
+    n_kv_heads=8,
+    d_ff=2048,
+    vocab=51865,
+    act="gelu",
+    gated_mlp=False,
+    norm="layernorm",
+    attn_bias=True,
+    rope="none",
+    encdec=EncDecConfig(n_enc_layers=6, n_frames=1500,
+                        max_target_positions=448),
+    source="arXiv:2212.04356",
+)

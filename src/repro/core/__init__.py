@@ -1,0 +1,14 @@
+"""The paper's contribution: distributed prompt caching with a Bloom catalog.
+
+Public API:
+    BloomFilter, Catalog, PromptKey, PromptSegments,
+    CacheServer, EdgeClient, SimNetwork, SimClock, DevicePerfModel
+"""
+from repro.core.bloom import BloomFilter  # noqa: F401
+from repro.core.catalog import Catalog  # noqa: F401
+from repro.core.keys import PromptKey, model_meta  # noqa: F401
+from repro.core.segments import PromptSegments  # noqa: F401
+from repro.core.netsim import SimClock, SimNetwork  # noqa: F401
+from repro.core.server import CacheServer  # noqa: F401
+from repro.core.client import EdgeClient  # noqa: F401
+from repro.core.perfmodel import DevicePerfModel  # noqa: F401

@@ -1,0 +1,75 @@
+"""Bloom filter — the *catalog* data structure (paper §3.1, libbloom-style).
+
+Configured like the paper: capacity 1M entries at 1% target FP ratio
+=> m = -n ln p / (ln 2)^2 ≈ 9.59e6 bits ≈ 1.20 MB, k = 7 hash functions.
+
+Hashing uses the double-hashing scheme (Kirsch & Mitzenmacher): two 64-bit
+halves of blake2b(key) combine as h1 + i*h2 mod m — matching libbloom's
+approach and cheap enough for edge devices.
+"""
+from __future__ import annotations
+
+import hashlib
+import math
+
+import numpy as np
+
+
+class BloomFilter:
+    def __init__(self, capacity: int = 1_000_000, fp_rate: float = 0.01):
+        if not (0 < fp_rate < 1):
+            raise ValueError("fp_rate must be in (0,1)")
+        self.capacity = int(capacity)
+        self.fp_rate = float(fp_rate)
+        ln2 = math.log(2.0)
+        self.m = max(64, int(math.ceil(-capacity * math.log(fp_rate) / ln2 ** 2)))
+        self.k = max(1, int(round(self.m / capacity * ln2)))
+        self.bits = np.zeros((self.m + 7) // 8, dtype=np.uint8)
+        self.n_added = 0
+
+    # -- hashing ---------------------------------------------------------
+    def _indices(self, key: bytes):
+        d = hashlib.blake2b(key, digest_size=16).digest()
+        h1 = int.from_bytes(d[:8], "little")
+        h2 = int.from_bytes(d[8:], "little") | 1
+        return [(h1 + i * h2) % self.m for i in range(self.k)]
+
+    # -- operations ------------------------------------------------------
+    def add(self, key: bytes) -> None:
+        for ix in self._indices(key):
+            self.bits[ix >> 3] |= 1 << (ix & 7)
+        self.n_added += 1
+
+    def __contains__(self, key: bytes) -> bool:
+        return all(self.bits[ix >> 3] & (1 << (ix & 7))
+                   for ix in self._indices(key))
+
+    def merge(self, other: "BloomFilter") -> None:
+        if (self.m, self.k) != (other.m, other.k):
+            raise ValueError("incompatible bloom parameters")
+        np.bitwise_or(self.bits, other.bits, out=self.bits)
+        self.n_added += other.n_added
+
+    def clear(self) -> None:
+        self.bits[:] = 0
+        self.n_added = 0
+
+    # -- wire format -----------------------------------------------------
+    @property
+    def size_bytes(self) -> int:
+        return self.bits.nbytes
+
+    def to_bytes(self) -> bytes:
+        return self.bits.tobytes()
+
+    def load_bytes(self, raw: bytes) -> None:
+        arr = np.frombuffer(raw, dtype=np.uint8)
+        if arr.shape != self.bits.shape:
+            raise ValueError("bloom size mismatch")
+        self.bits = arr.copy()
+
+    # -- analytics -------------------------------------------------------
+    def expected_fp_rate(self) -> float:
+        """FP probability at the current fill level."""
+        frac = np.unpackbits(self.bits).mean() if self.n_added else 0.0
+        return float(frac) ** self.k

@@ -1,0 +1,47 @@
+"""Local *catalog*: a Bloom filter summarizing the server's contents
+(paper §3.1). Queried before any remote access; synchronized with the
+master asynchronously (off the request's critical path)."""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.config import CacheConfig
+from repro.core.bloom import BloomFilter
+
+
+class Catalog:
+    def __init__(self, cache_cfg: CacheConfig = CacheConfig()):
+        self.cfg = cache_cfg
+        self.bloom = BloomFilter(cache_cfg.bloom_capacity,
+                                 cache_cfg.bloom_fp_rate)
+        self.version = 0            # last master version folded in
+        self.last_sync_t: float = -1e18
+        self.sync_bytes = 0
+
+    # ------------------------------------------------------------------
+    def lookup(self, key_digest: bytes) -> bool:
+        return key_digest in self.bloom
+
+    def register(self, key_digest: bytes) -> None:
+        """Local update after a successful upload (paper Step 3)."""
+        self.bloom.add(key_digest)
+
+    # ------------------------------------------------------------------
+    def maybe_sync(self, transport, now: float) -> bool:
+        """Asynchronous master sync: pull key digests added since our last
+        version. Network cost is tracked but NOT charged to the request
+        path (advance_clock=False) — matching the paper's async design."""
+        if now - self.last_sync_t < self.cfg.sync_interval_s:
+            return False
+        self.last_sync_t = now
+        resp, _, nbytes = transport.request(
+            "sync", {"since": self.version}, advance_clock=False)
+        self.sync_bytes += nbytes
+        for k in resp.get("keys", []):
+            self.bloom.add(k)
+        self.version = resp.get("version", self.version)
+        return True
+
+    @property
+    def size_bytes(self) -> int:
+        return self.bloom.size_bytes

@@ -1,0 +1,204 @@
+"""Edge client — the paper's inference procedure (§3.1 Steps 1-4 + §3.2).
+
+Given a structured prompt, the client:
+  1. tokenizes (prompts arrive pre-tokenized; time is modeled+measured),
+  2. probes the *local* catalog for each prefix range, longest first,
+  3. on a probable hit downloads the prompt cache and resumes prefill from
+     the matched prefix (full hit: adopts the state with zero compute);
+     on a miss prefills locally, uploads the range states, and updates the
+     local catalog,
+  4. decodes the response tokens.
+
+Bloom false positives surface as a failed GET: the client falls back to
+local prefill — correctness is never affected (paper §3.3), only latency.
+
+Both a *wall* breakdown (real times in this process) and a *sim* breakdown
+(emulated edge device + simulated Wi-Fi) are produced per request.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from repro.config import CacheConfig
+from repro.core.catalog import Catalog
+from repro.core.keys import PromptKey, model_meta
+from repro.core.metrics import Breakdown, InferResult
+from repro.core.perfmodel import DevicePerfModel
+from repro.core.segments import PromptSegments
+from repro.core import state_io
+from repro.serving.engine import InferenceEngine
+from repro.serving.sampler import greedy
+
+
+class EdgeClient:
+    def __init__(self, name: str, engine: InferenceEngine, transport,
+                 cache_cfg: CacheConfig = CacheConfig(),
+                 perf: Optional[DevicePerfModel] = None,
+                 catalog: Optional[Catalog] = None,
+                 use_catalog: bool = True, perf_cfg=None):
+        self.name = name
+        self.engine = engine
+        self.transport = transport
+        self.cache_cfg = cache_cfg
+        self.perf = perf
+        # emulate a FULL-SIZE model's timing/blob-size while executing a
+        # reduced model (benchmarks): sim times & transfer bytes use this
+        self.perf_cfg = perf_cfg or engine.model.cfg
+        self.catalog = catalog or Catalog(cache_cfg)
+        self.use_catalog = use_catalog
+        self.meta = model_meta(engine.model.cfg,
+                               np.dtype(engine.cache_dtype).name
+                               if not hasattr(engine.cache_dtype, "name")
+                               else engine.cache_dtype.name)
+        self.clock = getattr(transport, "clock", None)
+
+    # ------------------------------------------------------------------
+    def sync_catalog(self) -> None:
+        now = self.clock.now() if self.clock else time.monotonic()
+        self.catalog.maybe_sync(self.transport, now)
+
+    # ------------------------------------------------------------------
+    def infer(self, prompt: PromptSegments, max_new_tokens: int = 16,
+              sampler: Callable = greedy, rng=None,
+              upload_on_miss: bool = True) -> InferResult:
+        cfg = self.perf_cfg
+        n = len(prompt.token_ids)
+        sim, wall = Breakdown(), Breakdown()
+        keys = prompt.keys(self.meta, self.cache_cfg.max_ranges,
+                           self.cache_cfg.range_stride)
+
+        # Step 1: tokenize (modeled; prompts arrive as token ids)
+        if self.perf:
+            sim.token = self.perf.time_tokenize(n)
+
+        # Step 2: catalog probe, longest range first
+        t0 = time.perf_counter()
+        candidates: List[PromptKey] = []
+        if self.use_catalog:
+            candidates = [k for k in keys
+                          if k.n_tokens >= self.cache_cfg.min_match_tokens
+                          and self.catalog.lookup(k.digest)]
+            wall.bloom = time.perf_counter() - t0
+            if self.perf:
+                sim.bloom = self.perf.time_bloom(len(keys))
+        else:
+            # ablation (§5.2.3): no catalog — ask the server directly
+            candidates = [k for k in keys
+                          if k.n_tokens >= self.cache_cfg.min_match_tokens]
+
+        matched, false_pos, down_bytes = 0, False, 0
+        state = None
+        emulated = self.perf_cfg is not self.engine.model.cfg
+        for cand in candidates:         # longest first
+            resp, dt, nb = self.transport.request("get",
+                                                  {"key": cand.digest})
+            if self.clock is not None:
+                if emulated:
+                    from repro.core.sizing import state_bytes
+                    net = self.transport.net
+                    full = (resp.get("ok") and resp.get("blob")) or False
+                    nb_full = state_bytes(cfg, cand.n_tokens,
+                                          with_logits=bool(full))
+                    sim.redis += net.transfer_time(nb_full if full
+                                                   else 256)
+                else:
+                    sim.redis += dt
+            else:
+                wall.redis += dt
+            if resp.get("ok") and resp.get("blob"):
+                blob = resp["blob"]
+                down_bytes = len(blob)
+                payload = state_io.parse_state(blob, self.meta)
+                template = self.engine.new_cache()
+                cache, n_eff, logits = state_io.restore_state(payload,
+                                                              template)
+                matched = cand.n_tokens
+                state = (cache, n_eff, logits)
+                break
+            else:
+                false_pos = True     # catalog said yes, server said no
+
+        # Step 3: prefill (full local / resumed / skipped)
+        if matched == n and state is not None and state[2] is not None:
+            cache, n_eff, logits = state
+            st = self.engine.adopt(cache, n, logits)
+            case_suffix = 0
+        elif matched > 0 and state is not None:
+            cache, n_eff, logits = state
+            resume_from = matched if state[2] is not None else matched - 1
+            suffix = np.asarray(prompt.token_ids[resume_from:],
+                                np.int32)[None]
+            st = self.engine.resume({"tokens": suffix}, cache, resume_from)
+            wall.p_decode += st.timings["prefill_wall"]
+            if self.perf:
+                sim.p_decode += self.perf.time_prefill(cfg, n - resume_from)
+            case_suffix = n - resume_from
+        else:
+            tokens = np.asarray(prompt.token_ids, np.int32)[None]
+            st = self.engine.start({"tokens": tokens})
+            wall.p_decode += st.timings["prefill_wall"]
+            if self.perf:
+                sim.p_decode += self.perf.time_prefill(cfg, n)
+            case_suffix = n
+            if upload_on_miss:
+                up = self._upload_ranges(prompt, keys, st)
+            else:
+                up = 0
+
+        # Step 4: decode the response
+        out = self.engine.generate(st, max_new_tokens, sampler, rng=rng)
+        wall.r_decode = st.timings["decode_wall"]
+        n_out = st.timings["decode_tokens"]
+        if self.perf:
+            sim.r_decode = self.perf.time_decode(cfg, n_out)
+            sim.sample = self.perf.time_sample(n_out)
+
+        case = self._case_of(prompt, matched)
+        return InferResult(
+            case=case, matched_tokens=matched, prompt_tokens=n,
+            output_tokens=list(np.asarray(out)[0]),
+            sim=sim, wall=wall,
+            blob_bytes_down=down_bytes,
+            blob_bytes_up=(up if (matched == 0 and upload_on_miss) else 0),
+            false_positive=false_pos and matched == 0)
+
+    # ------------------------------------------------------------------
+    def _upload_ranges(self, prompt: PromptSegments,
+                       keys: List[PromptKey], st) -> int:
+        """Register every prefix range of this prompt (paper Fig. 3).
+
+        Upload is asynchronous in the paper (off the latency path); we
+        track bytes but do not charge request time
+        (advance_clock=False)."""
+        model = self.engine.model
+        total = 0
+        for k in keys:
+            n_eff = model.cache_len(k.n_tokens)
+            logits = (st.last_logits
+                      if k.n_tokens == len(prompt.token_ids) else None)
+            blob = state_io.extract_state(
+                st.cache, n_eff, self.meta, logits=logits,
+                compress=self.cache_cfg.compress,
+                level=self.cache_cfg.compress_level,
+                quantize=self.cache_cfg.quantize)
+            self.transport.request("put", {"key": k.digest, "blob": blob},
+                                   advance_clock=False)
+            self.catalog.register(k.digest)
+            total += len(blob)
+        return total
+
+    def _case_of(self, prompt: PromptSegments, matched: int) -> int:
+        """Map matched length onto the paper's Cases 1-5."""
+        if matched == 0:
+            return 1
+        bounds = list(prompt.boundaries)
+        if matched == len(prompt.token_ids):
+            return 5
+        try:
+            i = bounds.index(matched)
+        except ValueError:
+            return 1
+        return min(2 + i, 4)

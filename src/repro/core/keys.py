@@ -1,0 +1,41 @@
+"""Prompt-cache lookup keys (paper §3.1, Figure 3 top).
+
+A key is a hash of (model metadata || token-id prefix). The metadata —
+model name, architecture dims, cache dtype, meta-token count — guards
+integrity: states produced under a different model/quantization hash to
+different keys and can never be cross-restored.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass
+from typing import Sequence
+
+import numpy as np
+
+
+def model_meta(cfg, dtype_name: str) -> bytes:
+    fields = (cfg.name, cfg.family, cfg.n_layers, cfg.d_model, cfg.n_heads,
+              cfg.n_kv_heads, cfg.dh, cfg.vocab, cfg.window,
+              cfg.n_meta_tokens, dtype_name)
+    return ("|".join(str(f) for f in fields)).encode()
+
+
+@dataclass(frozen=True)
+class PromptKey:
+    digest: bytes          # 32-byte blake2b
+    n_tokens: int          # prefix length this key covers
+
+    @classmethod
+    def for_prefix(cls, meta: bytes, token_ids: Sequence[int],
+                   n: int) -> "PromptKey":
+        ids = np.asarray(token_ids[:n], dtype=np.int32)
+        h = hashlib.blake2b(digest_size=32)
+        h.update(meta)
+        h.update(n.to_bytes(4, "little"))
+        h.update(ids.tobytes())
+        return cls(h.digest(), n)
+
+    @property
+    def hex(self) -> str:
+        return self.digest.hex()

@@ -1,0 +1,46 @@
+"""Latency accounting in the paper's Table-3 vocabulary."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict
+
+
+COMPONENTS = ("token", "bloom", "p_decode", "redis", "r_decode", "sample")
+
+
+@dataclass
+class Breakdown:
+    token: float = 0.0
+    bloom: float = 0.0
+    p_decode: float = 0.0
+    redis: float = 0.0
+    r_decode: float = 0.0
+    sample: float = 0.0
+
+    @property
+    def ttft(self) -> float:
+        return self.token + self.bloom + self.p_decode + self.redis
+
+    @property
+    def ttlt(self) -> float:
+        return self.ttft + self.r_decode + self.sample
+
+    def as_dict(self) -> Dict[str, float]:
+        d = {c: getattr(self, c) for c in COMPONENTS}
+        d["ttft"] = self.ttft
+        d["ttlt"] = self.ttlt
+        return d
+
+
+@dataclass
+class InferResult:
+    case: int                      # paper Cases 1-5
+    matched_tokens: int
+    prompt_tokens: int
+    output_tokens: list
+    sim: Breakdown                 # emulated edge device + simulated net
+    wall: Breakdown                # real measured times in this process
+    blob_bytes_down: int = 0
+    blob_bytes_up: int = 0
+    false_positive: bool = False
+    extra: Dict[str, float] = field(default_factory=dict)

@@ -1,0 +1,71 @@
+"""Prompt structure & partial matching ranges (paper §3.2, Figure 3).
+
+A prompt's logical structure (instruction / few-shot examples / target
+question) yields a list of *boundaries* in token space. Following the paper
+we register up to ``max_ranges`` prefix ranges:
+
+  1) the instruction alone
+  2) the instruction + first example
+  3) the instruction + all examples
+  4) the entire prompt
+
+and at lookup time probe them longest-first, fetching the longest hit.
+The class is generic over any boundary list, so other prompt templates
+(system prompt / history / turn) map onto the same mechanism.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Sequence
+
+from repro.core.keys import PromptKey
+
+
+@dataclass(frozen=True)
+class PromptSegments:
+    token_ids: tuple               # full prompt token ids
+    boundaries: tuple              # ascending token counts of logical prefixes
+
+    @classmethod
+    def make(cls, token_ids: Sequence[int], boundaries: Sequence[int]):
+        n = len(token_ids)
+        bs = sorted({min(b, n) for b in boundaries if b > 0} | {n})
+        return cls(tuple(int(t) for t in token_ids), tuple(bs))
+
+    @classmethod
+    def mmlu_style(cls, token_ids: Sequence[int], instruction_len: int,
+                   example_lens: Sequence[int]):
+        """Paper Figure 3: instruction | N examples | question."""
+        bounds = [instruction_len]
+        if example_lens:
+            bounds.append(instruction_len + example_lens[0])
+            bounds.append(instruction_len + sum(example_lens))
+        bounds.append(len(token_ids))
+        return cls.make(token_ids, bounds)
+
+    # ------------------------------------------------------------------
+    def ranges(self, max_ranges: int = 4, stride: int = 0) -> List[int]:
+        """Prefix lengths to register/probe, longest first.
+
+        ``stride`` > 0 is a beyond-paper mode: register every
+        ``stride``-th token boundary in addition to the structural ones,
+        enabling partial matches between prompts that diverge *inside* a
+        logical segment (the paper's fixed 4 ranges only match at
+        segment boundaries). Costs more uploads + catalog entries;
+        benchmarks/range_stride.py quantifies the trade."""
+        n = len(self.token_ids)
+        if stride > 0:
+            bs = sorted(set(list(self.boundaries)
+                            + list(range(stride, n, stride)) + [n]))
+            return bs[::-1]
+        bs = list(self.boundaries)
+        if len(bs) > max_ranges:
+            # always keep the shortest (instruction) and the full prompt
+            keep = [bs[0]] + bs[-(max_ranges - 1):]
+            bs = sorted(set(keep))
+        return bs[::-1]
+
+    def keys(self, meta: bytes, max_ranges: int = 4,
+             stride: int = 0) -> List[PromptKey]:
+        return [PromptKey.for_prefix(meta, self.token_ids, n)
+                for n in self.ranges(max_ranges, stride)]

@@ -1,0 +1,94 @@
+"""Cache server ("cache box") — the paper's Redis-on-Pi-5 middle node.
+
+Holds the blob store (key -> prompt-cache state) and the *master catalog*.
+Synchronization is incremental: clients pull the key digests added since
+their last-seen version and fold them into their local Bloom filter
+(paper §3.1: "each local catalog is synchronized with the master").
+
+The server is transport-agnostic: ``handle(op, payload)`` is the single
+entry point used by both the in-process and the TCP transports.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from typing import Dict, List, Optional, Tuple
+
+from repro.config import CacheConfig
+from repro.core.bloom import BloomFilter
+
+
+class CacheServer:
+    def __init__(self, cache_cfg: CacheConfig = CacheConfig()):
+        self.cfg = cache_cfg
+        self.store: "OrderedDict[bytes, bytes]" = OrderedDict()
+        self.stored_bytes = 0
+        self.master = BloomFilter(cache_cfg.bloom_capacity,
+                                  cache_cfg.bloom_fp_rate)
+        self.key_log: List[bytes] = []      # insertion order, for sync
+        self.lock = threading.Lock()
+        self.stats = {"puts": 0, "gets": 0, "hits": 0, "misses": 0,
+                      "bytes_in": 0, "bytes_out": 0, "syncs": 0,
+                      "evictions": 0}
+
+    # ------------------------------------------------------------------
+    def put(self, key: bytes, blob: bytes) -> int:
+        with self.lock:
+            fresh = key not in self.store
+            if not fresh:
+                self.stored_bytes -= len(self.store[key])
+            self.store[key] = blob
+            self.store.move_to_end(key)
+            self.stored_bytes += len(blob)
+            if fresh:
+                self.master.add(key)
+                self.key_log.append(key)
+            self.stats["puts"] += 1
+            self.stats["bytes_in"] += len(blob)
+            # LRU eviction under a byte budget: evicted keys stay in the
+            # Bloom catalogs and degrade into §3.3 false positives.
+            budget = self.cfg.max_store_bytes
+            while budget and self.stored_bytes > budget \
+                    and len(self.store) > 1:
+                old_key, old_blob = self.store.popitem(last=False)
+                self.stored_bytes -= len(old_blob)
+                self.stats["evictions"] += 1
+            return len(self.key_log)
+
+    def get(self, key: bytes) -> Optional[bytes]:
+        with self.lock:
+            blob = self.store.get(key)
+            self.stats["gets"] += 1
+            if blob is None:
+                self.stats["misses"] += 1
+            else:
+                self.store.move_to_end(key)     # LRU touch
+                self.stats["hits"] += 1
+                self.stats["bytes_out"] += len(blob)
+            return blob
+
+    def sync(self, since_version: int) -> Tuple[List[bytes], int]:
+        with self.lock:
+            self.stats["syncs"] += 1
+            new = self.key_log[since_version:]
+            return list(new), len(self.key_log)
+
+    # ------------------------------------------------------------------
+    def handle(self, op: str, payload: dict) -> dict:
+        if op == "put":
+            v = self.put(payload["key"], payload["blob"])
+            return {"ok": True, "version": v}
+        if op == "get":
+            blob = self.get(payload["key"])
+            return {"ok": blob is not None, "blob": blob}
+        if op == "sync":
+            keys, v = self.sync(payload.get("since", 0))
+            return {"ok": True, "keys": keys, "version": v}
+        if op == "stats":
+            with self.lock:
+                return {"ok": True, "stats": dict(self.stats),
+                        "n_entries": len(self.store),
+                        "stored_bytes": self.stored_bytes}
+        if op == "ping":
+            return {"ok": True}
+        return {"ok": False, "error": f"unknown op {op!r}"}

@@ -1,0 +1,50 @@
+"""Analytic prompt-cache state sizing (bytes) per architecture family.
+
+Used by benchmarks to emulate the paper's full-size models (Gemma-3
+270M/1B state blobs of 2.25 / 9.94 MB) while executing reduced models
+for output correctness, and by the break-even analysis to place any
+architecture on the compute-vs-transfer tradeoff (MLA's latent cache is
+~50x smaller per token than dense GQA — see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+
+def state_bytes_per_token(cfg, dtype_bytes: int = 2) -> float:
+    """Marginal serialized state per prompt token."""
+    if cfg.family == "ssm":
+        return 0.0                      # constant-size state
+    if cfg.uses_mla:
+        m = cfg.mla
+        return cfg.n_layers * (m.kv_lora_rank + m.qk_rope_dim) * dtype_bytes
+    per = 2 * cfg.n_kv_heads * cfg.dh * dtype_bytes   # K and V
+    if cfg.family == "encdec":
+        return cfg.n_layers * per       # decoder self-KV only grows
+    return cfg.n_layers * per
+
+
+def state_bytes_const(cfg, dtype_bytes: int = 2,
+                      with_logits: bool = True) -> float:
+    """Sequence-independent state components."""
+    const = 0.0
+    if cfg.family in ("ssm", "hybrid"):
+        s = cfg.ssm
+        conv_dim = cfg.ssm_d_inner + 2 * s.n_groups * s.d_state
+        const += cfg.n_layers * ((s.d_conv - 1) * conv_dim * dtype_bytes
+                                 + cfg.ssm_n_heads * s.head_dim
+                                 * s.d_state * 4)
+    if cfg.family == "encdec":
+        e = cfg.encdec
+        const += cfg.n_layers * 2 * e.n_frames * cfg.n_kv_heads * cfg.dh \
+            * dtype_bytes
+    if with_logits:
+        const += cfg.vocab * 2          # fp16 last-token logits
+    return const
+
+
+def state_bytes(cfg, n_tokens: int, dtype_bytes: int = 2,
+                with_logits: bool = True) -> int:
+    n_eff = n_tokens + cfg.n_meta_tokens
+    if cfg.window:
+        n_eff = min(n_eff, cfg.window)
+    return int(state_bytes_per_token(cfg, dtype_bytes) * n_eff
+               + state_bytes_const(cfg, dtype_bytes, with_logits))

@@ -1,0 +1,161 @@
+"""Prompt-cache state (de)serialization — llama_state_{get,set}_data analogue.
+
+A *state blob* is the transferable artifact of the paper: the per-layer
+KV/latent/SSM cache truncated to the prompt prefix, plus the last-token
+logits (so a full hit needs no model execution at all), plus integrity
+metadata. Format: msgpack (+ optional zstd).
+
+Sequence-sliceable leaves (``k``, ``v``, ``ckv``, ``krope``) are truncated
+to the prefix length; state-like leaves (``conv``, ``ssd``, ``cross_k``,
+``cross_v``) ship whole. Ring-buffer (sliding-window) caches ship whole
+once wrapped — their slot layout is position-consistent because restore
+resumes at the same absolute offset.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Any, Dict, Optional, Tuple
+
+import msgpack
+import numpy as np
+import zstandard as zstd
+
+import jax
+import jax.numpy as jnp
+
+SEQ_LEAVES = {"k", "v", "ckv", "krope"}
+FORMAT_VERSION = 2
+
+# int8 per-channel quantization (CacheGen-style, beyond-paper): halves the
+# transferable blob vs bf16/zstd, shifting the paper's break-even point
+# toward caching. Applied to the large seq-axis leaves only; SSM states
+# (fp32, dynamics-critical) ship unquantized.
+QUANT_LEAVES = {"k", "v", "ckv", "krope", "cross_k", "cross_v"}
+
+
+def _quantize(arr: np.ndarray):
+    """Symmetric int8 over the last axis. Returns (q, scale fp16)."""
+    a = arr.astype(np.float32)
+    scale = np.max(np.abs(a), axis=-1, keepdims=True) / 127.0
+    scale = np.where(scale == 0, 1.0, scale)
+    q = np.clip(np.round(a / scale), -127, 127).astype(np.int8)
+    return q, scale.astype(np.float16)
+
+
+def _dequantize(q: np.ndarray, scale: np.ndarray, dtype) -> np.ndarray:
+    return (q.astype(np.float32) * scale.astype(np.float32)).astype(dtype)
+
+
+def _leaf_name(path) -> str:
+    last = path[-1]
+    return getattr(last, "key", getattr(last, "name", str(last)))
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def extract_state(cache, n_eff: int, meta: bytes,
+                  logits: Optional[np.ndarray] = None,
+                  compress: bool = True, level: int = 1,
+                  quantize: bool = False) -> bytes:
+    """Serialize ``cache`` truncated to ``n_eff`` positions.
+    ``quantize``: int8 per-channel KV quantization (beyond-paper)."""
+    leaves = jax.tree_util.tree_flatten_with_path(cache)[0]
+    out = []
+    for path, leaf in leaves:
+        arr = np.asarray(leaf)
+        name = _leaf_name(path)
+        if name in SEQ_LEAVES:
+            keep = min(int(n_eff), arr.shape[2])
+            arr = arr[:, :, :keep]
+        entry = {
+            "path": _path_str(path),
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+        }
+        if quantize and name in QUANT_LEAVES and arr.ndim >= 3 \
+                and arr.dtype != np.int8:
+            q, scale = _quantize(arr)
+            entry["data"] = np.ascontiguousarray(q).tobytes()
+            entry["q_scale"] = np.ascontiguousarray(scale).tobytes()
+            entry["q_scale_shape"] = list(scale.shape)
+        else:
+            entry["data"] = np.ascontiguousarray(arr).tobytes()
+        out.append(entry)
+    payload = {
+        "version": FORMAT_VERSION,
+        "meta_hash": hashlib.blake2b(meta, digest_size=16).digest(),
+        "n_eff": int(n_eff),
+        "logits": (None if logits is None else {
+            "shape": list(logits.shape),
+            "data": np.asarray(logits, np.float16).tobytes(),
+        }),
+        "leaves": out,
+    }
+    raw = msgpack.packb(payload, use_bin_type=True)
+    if compress:
+        return b"ZST" + zstd.ZstdCompressor(level=level).compress(raw)
+    return b"RAW" + raw
+
+
+def parse_state(blob: bytes, meta: bytes) -> Dict[str, Any]:
+    tag, body = blob[:3], blob[3:]
+    if tag == b"ZST":
+        body = zstd.ZstdDecompressor().decompress(body)
+    elif tag != b"RAW":
+        raise ValueError("bad state blob tag")
+    payload = msgpack.unpackb(body, raw=False)
+    if payload["version"] != FORMAT_VERSION:
+        raise ValueError("state blob version mismatch")
+    want = hashlib.blake2b(meta, digest_size=16).digest()
+    if payload["meta_hash"] != want:
+        raise ValueError("state blob was produced by a different model "
+                         "configuration (integrity check failed)")
+    return payload
+
+
+def restore_state(payload: Dict[str, Any], template) -> Tuple[Any, int,
+                                                              Optional[np.ndarray]]:
+    """Place stored leaves into ``template`` (a freshly-initialized cache of
+    the engine's max_len). Returns (cache, n_eff, logits|None)."""
+    stored = {d["path"]: d for d in payload["leaves"]}
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+    new_leaves = []
+    for path, leaf in leaves:
+        d = stored.get(_path_str(path))
+        if d is None:
+            raise ValueError(f"blob missing leaf {_path_str(path)}")
+        if "q_scale" in d:
+            q = np.frombuffer(d["data"], np.int8).reshape(d["shape"])
+            scale = np.frombuffer(d["q_scale"], np.float16).reshape(
+                d["q_scale_shape"])
+            arr = _dequantize(q, scale, np.dtype(d["dtype"]))
+        else:
+            arr = np.frombuffer(d["data"],
+                                dtype=d["dtype"]).reshape(d["shape"])
+        tl = np.asarray(leaf)
+        if arr.shape != tl.shape:
+            if _leaf_name(path) not in SEQ_LEAVES:
+                raise ValueError(f"shape mismatch on {_path_str(path)}")
+            if arr.shape[2] > tl.shape[2] or arr.shape[:2] != tl.shape[:2] \
+                    or arr.shape[3:] != tl.shape[3:]:
+                raise ValueError(
+                    f"stored prefix longer than engine cache on "
+                    f"{_path_str(path)}: {arr.shape} vs {tl.shape}")
+            full = np.array(tl)
+            full[:, :, :arr.shape[2]] = arr
+            arr = full
+        new_leaves.append(jnp.asarray(arr))
+    cache = jax.tree_util.tree_unflatten(treedef, new_leaves)
+    logits = None
+    if payload.get("logits"):
+        lg = payload["logits"]
+        logits = np.frombuffer(lg["data"], np.float16).reshape(lg["shape"])
+        logits = logits.astype(np.float32)
+    return cache, int(payload["n_eff"]), logits
+
+
+def state_nbytes(blob: bytes) -> int:
+    return len(blob)

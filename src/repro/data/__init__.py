@@ -1,0 +1,2 @@
+from repro.data.tokenizer import WordHashTokenizer  # noqa: F401
+from repro.data.mmlu import MMLUGenerator, MMLU_DOMAINS  # noqa: F401

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the serving hot-spots.
+
+kernels/<name>.py  -- pl.pallas_call + BlockSpec implementation
+kernels/ops.py     -- jitd wrappers with tuned block sizes
+kernels/ref.py     -- pure-jnp oracles (tests assert_allclose against these)
+"""
+from repro.kernels.flash_prefill import flash_prefill  # noqa: F401
+from repro.kernels.flash_decode import flash_decode  # noqa: F401
+from repro.kernels.ssd_scan import ssd_scan  # noqa: F401
+from repro.kernels.mla_decode import mla_decode_kernel  # noqa: F401

@@ -1,0 +1,107 @@
+"""Pallas TPU flash-decode kernel: one query token vs a long KV cache.
+
+This is the R-decode hot-spot (paper Table 3). Decode is HBM-bandwidth
+bound — the kernel streams the KV cache once through VMEM in
+``block_k``-sized slabs with the online-softmax state in scratch, i.e. the
+split-KV "flash decoding" schedule, mapped to the TPU's sequential trailing
+grid dimension.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            bk: int, kv_len: int, window: Optional[int], nk: int,
+            scale: float):
+    # note: v width (dv) may differ from the q/k width (MLA latent decode:
+    # qk = 576 = kv_lora+rope, v = 512 = kv_lora)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    k_lo = j * bk
+    live = k_lo < kv_len
+    if window is not None:
+        live = live & (k_lo + bk - 1 >= kv_len - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0, :].astype(jnp.float32)           # [dh]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)        # [bk, dh]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jnp.sum(k * q[None, :], axis=1) * scale      # [bk]
+        kpos = k_lo + jax.lax.iota(jnp.int32, bk)
+        mask = kpos < kv_len
+        if window is not None:
+            mask = mask & (kpos > (kv_len - 1) - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[0]
+        m_cur = jnp.maximum(m_prev, jnp.max(s))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.where(mask, jnp.exp(s - m_cur), 0.0)     # [bk]
+        l_scr[0] = l_scr[0] * alpha + jnp.sum(p)
+        acc_scr[...] = acc_scr[...] * alpha + jnp.sum(
+            p[:, None] * v, axis=0, keepdims=True)
+        m_scr[0] = m_cur
+
+    @pl.when(j == nk - 1)
+    def _finish():
+        l = l_scr[0]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0, :] = (acc_scr[0] / safe).astype(o_ref.dtype)
+
+
+def flash_decode(q, k, v, *, kv_len: int, window: Optional[int] = None,
+                 block_k: int = 256, interpret: bool = False,
+                 scale: Optional[float] = None):
+    """q: [B,H,dh]; k: [B,Sk,KV,dh]; v: [B,Sk,KV,dv]. Returns [B,H,dv].
+    ``scale`` overrides 1/sqrt(dh) (MLA scales by the pre-absorption
+    head dim, not the latent width)."""
+    B, H, dh = q.shape
+    _, Sk, KV, _ = k.shape
+    dv = v.shape[-1]
+    assert H % KV == 0
+    rep = H // KV
+    bk = min(block_k, Sk)
+    pk = (-Sk) % bk
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    nk = (Sk + pk) // bk
+
+    kernel = functools.partial(_kernel, bk=bk, kv_len=kv_len, window=window,
+                               nk=nk,
+                               scale=scale if scale is not None
+                               else 1.0 / (dh ** 0.5))
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, dh), lambda b, h, j: (b, h, 0)),
+            pl.BlockSpec((1, bk, 1, dh),
+                         lambda b, h, j, rep=rep: (b, j, h // rep, 0)),
+            pl.BlockSpec((1, bk, 1, dv),
+                         lambda b, h, j, rep=rep: (b, j, h // rep, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, dv), lambda b, h, j: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,135 @@
+"""Pallas TPU flash-attention prefill kernel with **prefix-resume** support.
+
+This is the compute hot-spot the paper's technique creates on TPU: prefill
+where the first ``q_offset`` positions of the KV cache were *downloaded*
+from the distributed prompt cache, and only the suffix queries run. The
+causal mask is offset by ``q_offset`` so suffix tokens attend to the full
+cached prefix.
+
+TPU mapping (see DESIGN.md §2 hardware-adaptation):
+  * grid = (B, H, num_q_blocks, num_kv_blocks); the trailing kv dimension
+    iterates sequentially per core, carrying the online-softmax state
+    (m, l, acc) in VMEM scratch — the standard TPU flash schedule.
+  * BlockSpecs tile q/k/v as [block, head_dim] VMEM slabs; block sizes are
+    MXU-aligned (multiples of 128 on the lane dim, head_dim is the lane).
+  * GQA is expressed in the index_map: kv block row = h // (H // KV).
+  * Blocks entirely outside the causal/window band are skipped via
+    ``pl.when`` (no MXU work, no VMEM traffic beyond the prefetch).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            bq: int, bk: int, q_offset: int, kv_len: int,
+            window: Optional[int], nk: int, scale: float):
+    i = pl.program_id(2)      # q block
+    j = pl.program_id(3)      # kv block (sequential)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_lo = q_offset + i * bq
+    q_hi = q_lo + bq - 1
+    k_lo = j * bk
+    # skip blocks with no unmasked element
+    live = (k_lo <= q_hi) & (k_lo < kv_len)
+    if window is not None:
+        live = live & (k_lo + bk - 1 > q_lo - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)        # [bq, dh]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)        # [bk, dh]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # [bq, bk]
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = (kpos <= qpos) & (kpos < kv_len)
+        if window is not None:
+            mask = mask & (kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        p = jnp.where(mask, p, 0.0)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_cur
+
+    @pl.when(j == nk - 1)
+    def _finish():
+        l = l_scr[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, :, 0, :] = (acc_scr[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+def flash_prefill(q, k, v, *, q_offset: int = 0,
+                  kv_len: Optional[int] = None,
+                  window: Optional[int] = None,
+                  block_q: int = 128, block_k: int = 128,
+                  interpret: bool = False):
+    """q: [B,Sq,H,dh]; k,v: [B,Sk,KV,dh] (cache incl. downloaded prefix).
+
+    ``q_offset``/``kv_len``/``window`` are trace-time constants (serving
+    buckets them). Returns [B,Sq,H,dh]."""
+    B, Sq, H, dh = q.shape
+    _, Sk, KV, _ = k.shape
+    assert H % KV == 0
+    rep = H // KV
+    kv_len = Sk if kv_len is None else kv_len
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    # pad to block multiples
+    pq = (-Sq) % bq
+    pk = (-Sk) % bk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    nq = (Sq + pq) // bq
+    nk = (Sk + pk) // bk
+
+    kernel = functools.partial(
+        _kernel, bq=bq, bk=bk, q_offset=q_offset, kv_len=kv_len,
+        window=window, nk=nk, scale=1.0 / (dh ** 0.5))
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, dh), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, bk, 1, dh),
+                         lambda b, h, i, j, rep=rep: (b, j, h // rep, 0)),
+            pl.BlockSpec((1, bk, 1, dh),
+                         lambda b, h, i, j, rep=rep: (b, j, h // rep, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, dh),
+                               lambda b, h, i, j: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sq + pq, H, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),      # running max m
+            pltpu.VMEM((bq,), jnp.float32),      # running sum l
+            pltpu.VMEM((bq, dh), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :Sq]

@@ -1,0 +1,35 @@
+"""Pallas TPU kernel for MLA absorbed decode (DeepSeek serving hot-spot).
+
+Attention is computed directly against the compact latent cache: queries
+are pre-absorbed into latent space (q_lat = q_nope @ W_UK), the latent
+``ckv`` serves as both key (alongside the shared rotary key) and value,
+and the output stays latent until the caller applies W_UV. Maps onto the
+generalized flash-decode schedule with
+
+    q = [q_lat ; q_rope]   (H, R+Dr)
+    k = [ckv   ; krope]    (S, R+Dr)   shared across heads (KV=1)
+    v = ckv                (S, R)      dv != dh
+    scale = 1/sqrt(qk_nope_dim + qk_rope_dim)   <- pre-absorption dim!
+
+so the kernel streams the latent cache through VMEM exactly once.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_decode import flash_decode
+
+
+def mla_decode_kernel(q_lat, q_rope, ckv, krope, *, kv_len: int,
+                      qk_head_dim: int, window: Optional[int] = None,
+                      block_k: int = 256, interpret: bool = False):
+    """q_lat: [B,H,R]; q_rope: [B,H,Dr]; ckv: [B,S,R]; krope: [B,S,Dr].
+    Returns latent output [B,H,R]."""
+    q = jnp.concatenate([q_lat, q_rope], axis=-1)
+    k = jnp.concatenate([ckv, krope], axis=-1)[:, :, None, :]
+    v = ckv[:, :, None, :]
+    return flash_decode(q, k, v, kv_len=kv_len, window=window,
+                        block_k=block_k, interpret=interpret,
+                        scale=1.0 / (qk_head_dim ** 0.5))

@@ -1,0 +1,36 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+VMEM budgeting (TPU v5e: ~128 KiB/lane * 8 = 16 MiB usable VMEM/core):
+  flash_prefill @ (bq=512, bk=512, dh=128, bf16):
+      q/k/v slabs 3 * 512*128*2 = 384 KiB, acc 512*128*4 = 256 KiB,
+      p-matrix 512*512*4 = 1 MiB -> ~2 MiB << VMEM; double-buffered DMA ok.
+  flash_decode @ (bk=2048, dh=128): k/v slabs 2*2048*128*2 = 1 MiB.
+  ssd_scan @ (Q=128, P=64, N=128): x 32 KiB, B/C 2*64 KiB, scores 64 KiB,
+      state 32 KiB -> well under budget.
+Block defaults below are the hillclimbed values (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.flash_decode import flash_decode
+from repro.kernels.flash_prefill import flash_prefill
+from repro.kernels.mla_decode import mla_decode_kernel
+from repro.kernels.ssd_scan import ssd_scan
+
+flash_prefill_op = jax.jit(
+    partial(flash_prefill, block_q=512, block_k=512),
+    static_argnames=("q_offset", "kv_len", "window", "interpret"))
+
+flash_decode_op = jax.jit(
+    partial(flash_decode, block_k=2048),
+    static_argnames=("kv_len", "window", "interpret"))
+
+ssd_scan_op = jax.jit(
+    ssd_scan, static_argnames=("chunk", "interpret"))
+
+mla_decode_op = jax.jit(
+    partial(mla_decode_kernel, block_k=2048),
+    static_argnames=("kv_len", "qk_head_dim", "window", "interpret"))

@@ -1,0 +1,98 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Deliberately naive O(S^2) implementations — independent from the model
+substrate's flash-style code so kernel bugs can't hide behind shared code.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_prefill_ref(q, k, v, q_offset: int = 0,
+                      kv_len: Optional[int] = None,
+                      window: Optional[int] = None):
+    """q: [B,Sq,H,dh]; k,v: [B,Sk,KV,dh]. Queries at absolute positions
+    q_offset..q_offset+Sq-1 attend causally over kv positions < kv_len."""
+    B, Sq, H, dh = q.shape
+    _, Sk, KV, _ = k.shape
+    rep = H // KV
+    kv_len = Sk if kv_len is None else kv_len
+    qf = q.astype(jnp.float32).reshape(B, Sq, KV, rep, dh)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqgrd,bsgd->bgrqs", qf, kf) / jnp.sqrt(float(dh))
+    qpos = q_offset + jnp.arange(Sq)
+    kpos = jnp.arange(Sk)
+    mask = (kpos[None, :] <= qpos[:, None]) & (kpos[None, :] < kv_len)
+    if window is not None:
+        mask = mask & (kpos[None, :] > qpos[:, None] - window)
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    o = jnp.einsum("bgrqs,bsgd->bqgrd", p, vf)
+    return o.reshape(B, Sq, H, dh).astype(q.dtype)
+
+
+def flash_decode_ref(q, k, v, kv_len: int,
+                     window: Optional[int] = None):
+    """q: [B,H,dh] (one token at position kv_len-1 inclusive of itself);
+    k,v: [B,Sk,KV,dh] with entries valid for positions < kv_len."""
+    B, H, dh = q.shape
+    _, Sk, KV, _ = k.shape
+    rep = H // KV
+    qf = q.astype(jnp.float32).reshape(B, KV, rep, dh)
+    s = jnp.einsum("bgrd,bsgd->bgrs", qf, k.astype(jnp.float32))
+    s = s / jnp.sqrt(float(dh))
+    kpos = jnp.arange(Sk)
+    mask = kpos < kv_len
+    if window is not None:
+        mask = mask & (kpos > (kv_len - 1) - window)
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrs,bsgd->bgrd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, dh).astype(q.dtype)
+
+
+def ssd_chunk_ref(x, dt, A, B_, C_, h0, chunk: int):
+    """Sequential-recurrence oracle for the SSD kernel.
+    x: [B,S,H,P], dt: [B,S,H] (post-softplus), A: [H] (negative),
+    B_,C_: [B,S,H,N] (groups pre-broadcast), h0: [B,H,P,N] fp32.
+    Returns (y [B,S,H,P] fp32, h_final [B,H,P,N] fp32)."""
+    Bsz, S, H, P = x.shape
+
+    def step(h, inputs):
+        xt, dtt, bt, ct = inputs            # [B,H,P],[B,H],[B,H,N],[B,H,N]
+        decay = jnp.exp(dtt * A)            # [B,H]
+        h = h * decay[..., None, None] + jnp.einsum(
+            "bh,bhn,bhp->bhpn", dtt, bt, xt)
+        y = jnp.einsum("bhn,bhpn->bhp", ct, h)
+        return h, y
+
+    xs = (jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(B_.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(C_.astype(jnp.float32), 1, 0))
+    h, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1), h
+
+
+def mla_decode_ref(q_lat, q_rope, ckv, krope, kv_len: int,
+                   qk_head_dim: int, window=None):
+    """Oracle for the MLA absorbed-decode kernel.
+    q_lat: [B,H,R]; q_rope: [B,H,Dr]; ckv: [B,S,R]; krope: [B,S,Dr]."""
+    s = (jnp.einsum("bhr,bsr->bhs", q_lat.astype(jnp.float32),
+                    ckv.astype(jnp.float32))
+         + jnp.einsum("bhk,bsk->bhs", q_rope.astype(jnp.float32),
+                      krope.astype(jnp.float32)))
+    s = s / jnp.sqrt(float(qk_head_dim))
+    kpos = jnp.arange(ckv.shape[1])
+    mask = kpos < kv_len
+    if window is not None:
+        mask = mask & (kpos > (kv_len - 1) - window)
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhs,bsr->bhr", p,
+                      ckv.astype(jnp.float32)).astype(q_lat.dtype)

@@ -1,0 +1,106 @@
+"""Pallas TPU kernel for the Mamba-2 SSD chunk scan.
+
+Grid = (B, H, num_chunks); the chunk dimension is sequential and carries the
+recurrent state [P, N] in VMEM scratch, so the kernel computes, per chunk:
+
+  * intra-chunk (quadratic-in-Q) contribution via two MXU matmuls,
+  * the cross-chunk contribution from the carried state,
+  * the state update for the next chunk.
+
+Supports an initial state (h0) — required by the paper's prompt-cache
+resume for SSM architectures — by seeding the scratch at chunk 0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, h0_ref, y_ref, hout_ref,
+            h_scr, *, Q: int, nc: int):
+    c_i = pl.program_id(2)
+
+    @pl.when(c_i == 0)
+    def _init():
+        h_scr[...] = h0_ref[0, 0].astype(jnp.float32)     # [P, N]
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)             # [Q, P]
+    dt = dt_ref[0, :, 0].astype(jnp.float32)              # [Q]
+    A = a_ref[0, 0]                                       # scalar (negative)
+    Bm = b_ref[0, :, 0, :].astype(jnp.float32)            # [Q, N]
+    Cm = c_ref[0, :, 0, :].astype(jnp.float32)            # [Q, N]
+
+    dA = dt * A                                           # [Q]
+    cum = jnp.cumsum(dA)                                  # [Q]
+    # intra-chunk: scores[i,j] = exp(cum_i - cum_j) * (C_i . B_j) * dt_j, i>=j
+    seg = cum[:, None] - cum[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    decay = jnp.where(ii >= jj, jnp.exp(seg), 0.0)
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [Q, Q]
+    scores = cb * decay * dt[None, :]
+    y = jax.lax.dot_general(scores, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # [Q, P]
+    # inter-chunk: y_i += exp(cum_i) * C_i . h_in
+    h_in = h_scr[...]                                     # [P, N]
+    y = y + jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        Cm, h_in, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+    # state update: h' = exp(cum_last) * h + sum_j exp(cum_last-cum_j) dt_j B_j x_j
+    w = jnp.exp(cum[-1] - cum) * dt                       # [Q]
+    st = jax.lax.dot_general(x * w[:, None], Bm, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [P, N]
+    h_scr[...] = h_in * jnp.exp(cum[-1]) + st
+
+    @pl.when(c_i == nc - 1)
+    def _finish():
+        hout_ref[0, 0] = h_scr[...]
+
+
+def ssd_scan(x, dt, A, B_, C_, h0, *, chunk: int = 64,
+             interpret: bool = False):
+    """x: [B,S,H,P]; dt: [B,S,H] (post-softplus); A: [H];
+    B_,C_: [B,S,H,N] (groups pre-broadcast); h0: [B,H,P,N] fp32.
+    Returns (y [B,S,H,P] fp32, h_final [B,H,P,N] fp32)."""
+    Bsz, S, H, P = x.shape
+    N = B_.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    nc = Sp // Q
+    kernel = functools.partial(_kernel, Q=Q, nc=nc)
+    A2 = jnp.broadcast_to(A.astype(jnp.float32), (Bsz, H))
+    y, h = pl.pallas_call(
+        kernel,
+        grid=(Bsz, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, Q, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1, 1), lambda b, h, c: (b, h)),
+            pl.BlockSpec((1, Q, 1, N), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, Q, 1, N), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz, Sp, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((Bsz, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A2, B_, C_, h0)
+    return y[:, :S], h

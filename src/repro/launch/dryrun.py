@@ -1,0 +1,189 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combo.
+
+For each combination this script:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. lowers the appropriate step (train_step / prefill_step / serve_step)
+     with full in_shardings and compiles it,
+  3. prints memory_analysis() (proves it fits) and cost_analysis(),
+  4. parses collective bytes out of the optimized HLO,
+  5. optionally lowers depth-probe variants (1 and 2 layers per segment,
+     scans unrolled) to depth-extrapolate FLOPs/bytes/collectives — see
+     roofline/analysis.py for why (while bodies are cost-counted once),
+  6. appends a JSON record to --out (default experiments/dryrun.jsonl).
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+  python -m repro.launch.dryrun --all --multi-pod
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import SHAPES
+from repro.configs import ARCHS, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import apply_shape_policy, build_step
+from repro.roofline.analysis import collective_bytes, cost_summary
+from repro.roofline.hw import V5E
+
+
+def depth_variants(cfg):
+    """(name, cfg, counts) for depth probing: all segment depths 1, then
+    one segment at 2. Layer counts returned for the linear solve."""
+    if cfg.family == "encdec":
+        base = cfg.replace(
+            n_layers=1,
+            encdec=dataclasses.replace(cfg.encdec, n_enc_layers=1))
+        v_enc = base.replace(
+            encdec=dataclasses.replace(base.encdec, n_enc_layers=2))
+        v_dec = base.replace(n_layers=2)
+        true_counts = [cfg.encdec.n_enc_layers, cfg.n_layers]
+        return base, [v_enc, v_dec], true_counts
+    if cfg.family == "moe" and cfg.moe.first_k_dense:
+        fk = cfg.moe.first_k_dense
+        base = cfg.replace(n_layers=2, moe=dataclasses.replace(
+            cfg.moe, first_k_dense=1))
+        v_dense = base.replace(n_layers=3, moe=dataclasses.replace(
+            base.moe, first_k_dense=2))
+        v_moe = base.replace(n_layers=3)
+        return base, [v_dense, v_moe], [fk, cfg.n_layers - fk]
+    base = cfg.replace(n_layers=1)
+    return base, [cfg.replace(n_layers=2)], [cfg.n_layers]
+
+
+def lower_costs(cfg, shape, mesh, unroll, **bs_kw):
+    jitted, args, _ = build_step(cfg, shape, mesh, unroll=unroll,
+                                 donate=False, **bs_kw)
+    lowered = jitted.lower(*args)
+    compiled = lowered.compile()
+    cs = cost_summary(compiled)
+    coll, kinds = collective_bytes(compiled.as_text(), per_kind=True)
+    cs["coll_bytes"] = float(coll)
+    cs["coll_kinds"] = kinds
+    return compiled, cs
+
+
+def layout_for(cfg, shape=None, n_devices: int = 256) -> str:
+    """§Perf: sub-0.3B models (whisper-base) can't use a 16-wide model
+    axis — run them pure-DP with replicated params (27x memory, 340x
+    collective reduction measured). Only when the global batch actually
+    covers the device count (dp_only on 512 devices with batch 256
+    replicates and regresses — measured 3.8 -> 96 GiB)."""
+    if cfg.param_count() < 3e8 and shape is not None and \
+            shape.global_batch % n_devices == 0:
+        return "dp_only"
+    return "tp"
+
+
+def run_combo(arch: str, shape_name: str, multi_pod: bool,
+              probe_depth: bool = True, verbose: bool = True):
+    shape = SHAPES[shape_name]
+    cfg0 = get_config(arch)
+    layout = layout_for(cfg0, shape, 512 if multi_pod else 256)
+    bs_kw = {"zero3": False} if layout == "dp_only" else {}
+    mesh = make_production_mesh(multi_pod=multi_pod, layout=layout)
+    n_chips = mesh.size
+    rec = {"arch": arch, "shape": shape_name, "layout": layout,
+           "mesh": "x".join(str(s) for s in mesh.devices.shape),
+           "chips": n_chips, "kind": shape.kind}
+    t0 = time.time()
+    compiled, cs = lower_costs(cfg0, shape, mesh, unroll=False, **bs_kw)
+    rec["compile_s"] = round(time.time() - t0, 1)
+    rec.update({f"raw_{k}": v for k, v in cs.items()})
+    mem = compiled.memory_analysis()
+    for f in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes"):
+        rec[f] = getattr(mem, f, None)
+    rec["fits_hbm"] = (
+        (rec.get("argument_size_in_bytes") or 0)
+        + (rec.get("temp_size_in_bytes") or 0)) <= V5E.hbm_bytes
+    if verbose:
+        print(f"[{arch} x {shape_name} x {rec['mesh']}] "
+              f"compile={rec['compile_s']}s "
+              f"args={_gb(rec['argument_size_in_bytes'])} "
+              f"temp={_gb(rec['temp_size_in_bytes'])} "
+              f"fits={rec['fits_hbm']}")
+        print(f"  cost: flops={cs['flops']:.3e} bytes={cs['bytes']:.3e} "
+              f"coll={cs['coll_bytes']:.3e} {cs['coll_kinds']}")
+
+    if probe_depth:
+        cfg_p = apply_shape_policy(cfg0, shape)
+        base, variants, true_counts = depth_variants(cfg_p)
+        t0 = time.time()
+        _, c_base = lower_costs(base, shape, mesh, unroll=True, **bs_kw)
+        probes = []
+        for v in variants:
+            _, c_v = lower_costs(v, shape, mesh, unroll=True, **bs_kw)
+            probes.append(c_v)
+        # cost(depths) = a + sum_i b_i * L_i  with base all-ones
+        extr = {}
+        for key in ("flops", "bytes", "coll_bytes"):
+            bs = [p[key] - c_base[key] for p in probes]
+            a = c_base[key] - sum(bs) * 0 - sum(bs)  # base has L_i = 1 each
+            a = c_base[key] - sum(bs)
+            extr[key] = max(a + sum(b * L for b, L in
+                                    zip(bs, true_counts)), 0.0)
+        rec.update({f"ext_{k}": v for k, v in extr.items()})
+        rec["probe_s"] = round(time.time() - t0, 1)
+        if verbose:
+            print(f"  depth-extrapolated: flops={extr['flops']:.3e} "
+                  f"bytes={extr['bytes']:.3e} "
+                  f"coll={extr['coll_bytes']:.3e} "
+                  f"(probes {rec['probe_s']}s)")
+    return rec
+
+
+def _gb(n):
+    return "-" if n is None else f"{n / 2**30:.2f}GiB"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-probe", action="store_true")
+    ap.add_argument("--assigned-only", action="store_true", default=True)
+    ap.add_argument("--out", default="experiments/dryrun.jsonl")
+    args = ap.parse_args()
+
+    from repro.configs.registry import ASSIGNED
+    combos = []
+    if args.all:
+        for a in ASSIGNED:
+            for s in SHAPES:
+                combos.append((a, s))
+    else:
+        combos.append((args.arch, args.shape))
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    n_ok = 0
+    for arch, shape in combos:
+        try:
+            rec = run_combo(arch, shape, args.multi_pod,
+                            probe_depth=not args.no_probe)
+            rec["ok"] = True
+            n_ok += 1
+        except Exception as e:
+            traceback.print_exc()
+            rec = {"arch": arch, "shape": shape,
+                   "multi_pod": args.multi_pod, "ok": False,
+                   "error": f"{type(e).__name__}: {e}"}
+        with open(args.out, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+    print(f"dry-run: {n_ok}/{len(combos)} combos compiled "
+          f"({'multi' if args.multi_pod else 'single'}-pod)")
+    return 0 if n_ok == len(combos) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

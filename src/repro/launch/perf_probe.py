@@ -1,0 +1,76 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Perf-iteration probe: roofline terms (depth-extrapolated) for one
+(arch x shape x layout). This is the §Perf measurement tool.
+
+  PYTHONPATH=src python -m repro.launch.perf_probe --arch whisper-base \
+      --shape train_4k [--layout dp_only] [--multi-pod]
+"""
+import argparse
+import json
+import time
+
+from repro.config import SHAPES
+from repro.configs import get_config
+from repro.launch.dryrun import depth_variants, lower_costs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import apply_shape_policy
+from repro.roofline.analysis import roofline_terms
+from repro.roofline.hw import V5E
+
+
+def probe(arch: str, shape_name: str, layout: str = "tp",
+          multi_pod: bool = False, probe_depth: bool = True,
+          **bs_kw) -> dict:
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod, layout=layout)
+    cfg = get_config(arch)
+    t0 = time.time()
+    compiled, raw = lower_costs(cfg, shape, mesh, unroll=False, **bs_kw)
+    mem = compiled.memory_analysis()
+    out = {
+        "arch": arch, "shape": shape_name, "layout": layout,
+        "chips": mesh.size,
+        "args_gib": round(mem.argument_size_in_bytes / 2**30, 2),
+        "temp_gib": round(mem.temp_size_in_bytes / 2**30, 2),
+    }
+    if probe_depth:
+        base, variants, true_counts = depth_variants(
+            apply_shape_policy(cfg, shape))
+        _, c_base = lower_costs(base, shape, mesh, unroll=True, **bs_kw)
+        bs = []
+        for v in variants:
+            _, c_v = lower_costs(v, shape, mesh, unroll=True, **bs_kw)
+            bs.append(c_v)
+        ext = {}
+        for key in ("flops", "bytes", "coll_bytes"):
+            deltas = [p[key] - c_base[key] for p in bs]
+            a = c_base[key] - sum(deltas)
+            ext[key] = max(a + sum(d * L for d, L in
+                                   zip(deltas, true_counts)), 0.0)
+    else:
+        ext = {k: raw[k] for k in ("flops", "bytes", "coll_bytes")}
+    terms = roofline_terms(ext["flops"], ext["bytes"], ext["coll_bytes"],
+                           mesh.size, V5E)
+    out.update({k: f"{v:.4e}" if isinstance(v, float) else v
+                for k, v in terms.items()})
+    out["flops"] = f"{ext['flops']:.3e}"
+    out["bytes"] = f"{ext['bytes']:.3e}"
+    out["coll_bytes"] = f"{ext['coll_bytes']:.3e}"
+    out["probe_s"] = round(time.time() - t0, 1)
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--layout", default="tp")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-probe", action="store_true")
+    ap.add_argument("--no-zero3", action="store_true")
+    a = ap.parse_args()
+    kw = {"zero3": False} if a.no_zero3 else {}
+    print(json.dumps(probe(a.arch, a.shape, a.layout, a.multi_pod,
+                           not a.no_probe, **kw), indent=1))

@@ -1,0 +1,223 @@
+"""GSPMD sharding rules: params, optimizer state, batches, caches.
+
+Conventions (DESIGN.md §5):
+  * batch dim          -> data axes ('pod','data'), when divisible
+  * attention heads    -> 'model' (q heads; kv heads padded when uneven)
+  * FFN inner dim      -> 'model'
+  * vocab (embed/head) -> 'model'
+  * MoE expert dim     -> 'model' (+ 'data' when zero3, gathered per layer)
+  * zero3 (training)   -> additionally shard one large dim of every dense
+                          weight over the data axes (ZeRO-3 / FSDP style;
+                          GSPMD inserts the per-use all-gathers)
+
+Rules are name-based over the param tree paths; stacked segment params
+(leading layer dim) get a ``None`` prefix automatically.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _path_names(path) -> Tuple[str, ...]:
+    return tuple(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def _stacked(names) -> bool:
+    return names[0] in ("segments", "enc", "dec")
+
+
+def mesh_dp(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def _div(n: int, mesh, axes) -> bool:
+    if not axes:
+        return True
+    if any(a not in mesh.axis_names for a in axes):
+        return False               # dp-only layouts have no 'model' axis
+    total = int(np.prod([mesh.shape[a] for a in axes]))
+    return n % total == 0
+
+
+def fit_spec(spec: P, shape, mesh) -> P:
+    """Drop (or shrink) axes that do not divide their dimension — explicit
+    jit in_shardings require exact divisibility, unlike internal GSPMD."""
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        # drop axes absent from this mesh (dp-only layouts have no 'model')
+        axes = tuple(a for a in axes if a in mesh.axis_names)
+        # longest prefix of axes whose product divides the dim
+        kept = []
+        for a in axes:
+            if _div(shape[i], mesh, tuple(kept) + (a,)):
+                kept.append(a)
+            else:
+                break
+        out.append(tuple(kept) if len(kept) > 1 else
+                   (kept[0] if kept else None))
+    return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+
+def param_pspec(names: Tuple[str, ...], shape, mesh,
+                zero3: bool = False) -> P:
+    name = names[-1]
+    dp = mesh_dp(mesh)
+    z = dp if zero3 else None  # extra ZeRO sharding axes
+
+    def zax(dim_size):
+        return z if (z and _div(dim_size, mesh, z)) else None
+
+    if len(shape) <= 1 or name in ("scale", "bias", "q_norm", "k_norm",
+                                   "kv_norm", "norm", "A_log", "D",
+                                   "dt_bias", "conv_b", "norm_attn",
+                                   "norm_ssm", "meta"):
+        return P()
+    spec = None
+    if name in ("wq", "wk", "wv"):
+        spec = (zax(shape[0]), "model", None)
+    elif name in ("bq", "bk", "bv"):
+        spec = ("model", None)
+    elif name == "wo":
+        spec = ("model", None, zax(shape[2]))
+    elif name in ("w_up", "w_gate", "ws_up", "ws_gate"):
+        if len(shape) == 3:      # MoE expert stack [E, D, F]
+            # shard the expert dim as widely as it divides (deepseek's 256
+            # experts go 256-way; per-layer regathers happen inside the
+            # scan) — required to fit 671B at 16 GB/chip
+            e_axes = ("model", "data") if _div(
+                shape[0], mesh, ("model", "data")) else "model"
+            f_axes = "pod" if ("pod" in mesh.axis_names and
+                               _div(shape[2], mesh, ("pod",))) else None
+            spec = (e_axes, None, f_axes)
+        else:
+            spec = (zax(shape[0]), "model")
+    elif name in ("w_down", "ws_down"):
+        if len(shape) == 3:      # [E, F, D]
+            e_axes = ("model", "data") if _div(
+                shape[0], mesh, ("model", "data")) else "model"
+            f_axes = "pod" if ("pod" in mesh.axis_names and
+                               _div(shape[1], mesh, ("pod",))) else None
+            spec = (e_axes, f_axes, None)
+        else:
+            spec = ("model", zax(shape[1]))
+    elif name == "router":
+        spec = (None, None)
+    elif name == "wq_a":
+        spec = (zax(shape[0]), "model")
+    elif name in ("wq_b", "wk_b", "wv_b"):
+        spec = (None, "model", None)
+    elif name == "wkv_a":
+        spec = (zax(shape[0]), None)
+    elif name == "in_proj":
+        spec = (zax(shape[0]), "model")
+    elif name == "out_proj":
+        spec = ("model", zax(shape[1]))
+    elif name == "conv_w":
+        spec = (None, "model")
+    elif name == "embed":
+        spec = ("model", zax(shape[1]))
+    elif name == "head":
+        spec = (zax(shape[0]), "model")
+    elif name == "proj":           # mtp projection [2D, D]
+        spec = (None, "model")
+    if spec is None:
+        spec = (None,) * len(shape)
+    # sanity: avoid sharding tiny dims unevenly beyond padding limits
+    return P(*spec)
+
+
+def params_shardings(model, mesh, zero3: bool = False):
+    """NamedSharding pytree matching model.init's output structure."""
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        shape = leaf.shape
+        if _stacked(names):
+            inner = fit_spec(param_pspec(names, shape[1:], mesh, zero3),
+                             shape[1:], mesh)
+            return NamedSharding(mesh, P(None, *inner))
+        return NamedSharding(
+            mesh, fit_spec(param_pspec(names, shape, mesh, zero3),
+                           shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(rule, shapes)
+
+
+def opt_state_shardings(params_shardings_tree, mesh):
+    """AdamW state: count replicated; mu/nu shaped like params."""
+    from repro.training.optimizer import AdamWState
+    return AdamWState(
+        count=NamedSharding(mesh, P()),
+        mu=params_shardings_tree,
+        nu=params_shardings_tree,
+    )
+
+
+# ---------------------------------------------------------------------------
+# batch / cache rules
+# ---------------------------------------------------------------------------
+
+def batch_shardings(batch_shapes, mesh):
+    dp = mesh_dp(mesh)
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        shape = leaf.shape
+        if names[-1] == "positions":        # [3, B, S]
+            return NamedSharding(
+                mesh, fit_spec(P(None, dp, None), shape, mesh))
+        rest = (None,) * (len(shape) - 1)
+        return NamedSharding(mesh, fit_spec(P(dp, *rest), shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(rule, batch_shapes)
+
+
+def cache_shardings(cache_shapes, mesh, cfg):
+    """Cache leaves are stacked [L, B, ...]; batch -> dp, kv-heads/ssm-heads
+    -> 'model' (padded when uneven)."""
+    dp = mesh_dp(mesh)
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        shape = leaf.shape
+        if name in ("k", "v", "cross_k", "cross_v"):
+            # [L, B, S, KV, dh]: prefer kv heads on 'model'; fall back to
+            # the sequence dim when head count doesn't divide
+            if _div(shape[3], mesh, ("model",)):
+                spec = P(None, dp, None, "model", None)
+            else:
+                spec = P(None, dp, "model", None, None)
+        elif name in ("ckv", "krope"):
+            # MLA latent: no head dim; shard sequence over model
+            spec = P(None, dp, "model", None)
+        elif name == "ssd":
+            spec = P(None, dp, "model", None, None)   # [L,B,H,P,N]
+        elif name == "conv":
+            spec = P(None, dp, None, "model")         # [L,B,K,C]
+        else:
+            spec = P(None, dp, *((None,) * (len(shape) - 2)))
+        return NamedSharding(mesh, fit_spec(spec, shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shapes)
+
+
+def scalar_sharding(mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,56 @@
+"""Training launcher: any registered arch (reduced or full), optional mesh.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --reduced \
+      --steps 100
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config
+from repro.models import Model
+from repro.training import adamw, make_train_step
+from repro.training import checkpoint as ckpt
+from repro.training.data import lm_batches
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b", choices=sorted(ARCHS))
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = Model(cfg, remat=True)
+    params = model.init(jax.random.PRNGKey(0))
+    print(f"training {cfg.name}: "
+          f"{sum(x.size for x in jax.tree.leaves(params)) / 1e6:.1f}M params")
+    opt = adamw(lr=args.lr, moment_dtype=jnp.bfloat16)
+    state = opt.init(params)
+    step_fn = jax.jit(make_train_step(model, opt), donate_argnums=(0, 1))
+    data = lm_batches(cfg, args.batch, args.seq)
+    t0 = time.time()
+    for step in range(1, args.steps + 1):
+        params, state, m = step_fn(params, state, next(data))
+        if step % args.log_every == 0 or step == 1:
+            print(f"step {step:5d} loss={float(m['loss']):.4f} "
+                  f"({(time.time() - t0) / step * 1e3:.0f} ms/step)")
+    if args.ckpt:
+        ckpt.save(args.ckpt, {"params": params, "opt": state}, args.steps)
+        print("saved", args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,240 @@
+"""GQA attention with prefix-resume prefill, sliding windows and ring caches.
+
+This is the substrate the paper's distributed prompt cache plugs into: the
+``cache`` argument of :func:`attn_prefill` may be pre-populated with a prefix
+downloaded from the cache server (``start_pos`` > 0), in which case only the
+suffix queries are computed — the paper's "partial matching" resume path.
+
+All attention is computed in a flash-style q-block loop (``lax.scan``) so the
+score matrix never materializes beyond ``[B, H, q_block, S_kv]``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (apply_mrope, apply_rope, dense_init,
+                                 rmsnorm, safe_softmax)
+
+Q_BLOCK = 512
+
+
+def constrain_bh(x, mesh, head_axis: int = 2):
+    """Pin [B, S, H, dh]-style tensors to (data-sharded batch, model-sharded
+    heads). Without this, XLA's propagation can replicate the batch dim
+    through the q-block scan (observed: 100+ GiB/device attention buffers
+    on the 256-chip dry-run)."""
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    ndp = 1
+    for a in dp:
+        ndp *= mesh.shape[a]
+    spec = [None] * x.ndim
+    if x.shape[0] % ndp == 0:
+        spec[0] = dp
+    if "model" in mesh.axis_names and x.ndim > head_axis and \
+            x.shape[head_axis] % mesh.shape["model"] == 0:
+        spec[head_axis] = "model"
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg, dtype):
+    d, h, k, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h, dh), dtype),
+        "wk": dense_init(ks[1], (d, k, dh), dtype),
+        "wv": dense_init(ks[2], (d, k, dh), dtype),
+        "wo": dense_init(ks[3], (h, dh, d), dtype, scale=1.0 / (h * dh) ** 0.5),
+    }
+    if cfg.attn_bias:
+        p["bq"] = jnp.zeros((h, dh), dtype)
+        p["bk"] = jnp.zeros((k, dh), dtype)
+        p["bv"] = jnp.zeros((k, dh), dtype)
+        p["bo"] = jnp.zeros((d,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((dh,), dtype)
+        p["k_norm"] = jnp.zeros((dh,), dtype)
+    return p
+
+
+def project_qkv(p, cfg, x, positions):
+    """positions: [B, S] int32 (standard rope) or [3, B, S] (m-rope)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.attn_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if cfg.qk_norm:
+        q, k = rmsnorm(q, p["q_norm"]), rmsnorm(k, p["k_norm"])
+    if cfg.rope == "standard":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.rope == "mrope":
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    return q, k, v
+
+
+def out_proj(p, cfg, o):
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    if cfg.attn_bias:
+        y = y + p["bo"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# core attention (flash-style q-block loop)
+# ---------------------------------------------------------------------------
+
+def attend(q, k, v, qpos, kpos, *, window: Optional[int] = None,
+           causal: bool = True, q_block: int = Q_BLOCK):
+    """q: [B,Sq,H,dh]; k,v: [B,Sk,K,dh]; qpos: [Sq]; kpos: [Sk] (-1=invalid).
+
+    Returns [B,Sq,H,dh]. Masking: kpos>=0, kpos<=qpos (causal),
+    kpos > qpos-window (sliding window).
+    """
+    B, Sq, H, dh = q.shape
+    _, Sk, K, _ = k.shape
+    rep = H // K
+    scale = 1.0 / (dh ** 0.5)
+    qb = min(q_block, Sq)
+    nb = -(-Sq // qb)
+    pad = nb * qb - Sq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        qpos = jnp.pad(qpos, (0, pad), constant_values=-(10 ** 9))
+    qs = q.reshape(B, nb, qb, K, rep, dh).transpose(1, 0, 2, 3, 4, 5)
+    qpos_b = qpos.reshape(nb, qb)
+
+    def block(_, xs):
+        qblk, qp = xs                                  # [B,qb,K,rep,dh],[qb]
+        s = jnp.einsum("bqkrd,bskd->bkrqs", qblk, k) * scale
+        m = (kpos[None, :] >= 0)
+        if causal:
+            m = m & (kpos[None, :] <= qp[:, None])
+        if window is not None:
+            m = m & (kpos[None, :] > qp[:, None] - window)
+        probs = safe_softmax(s, m[None, None, None])
+        o = jnp.einsum("bkrqs,bskd->bqkrd", probs.astype(v.dtype), v)
+        return None, o
+
+    # remat: without this, the softmax residuals (fp32 probs + broadcast
+    # masks) of EVERY q-block are saved simultaneously for the scan's
+    # backward — O(B*H*Sq*Sk) instead of O(B*H*q_block*Sk).
+    block = jax.checkpoint(block)
+    _, os = jax.lax.scan(block, None, (qs, qpos_b))
+    dhv = v.shape[-1]  # may differ from q/k head dim (MLA)
+    o = os.transpose(1, 0, 2, 3, 4, 5).reshape(B, nb * qb, H, dhv)
+    return o[:, :Sq]
+
+
+# ---------------------------------------------------------------------------
+# cache plumbing
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg, batch: int, max_len: int, dtype):
+    size = min(max_len, cfg.window) if cfg.window else max_len
+    k, dh = cfg.n_kv_heads, cfg.dh
+    return {
+        "k": jnp.zeros((batch, size, k, dh), dtype),
+        "v": jnp.zeros((batch, size, k, dh), dtype),
+    }
+
+
+def ring_positions(size: int, next_pos):
+    """Positions held by ring slot s right before writing token ``next_pos``:
+    the largest p < next_pos with p % size == s (or -1 if none)."""
+    s = jnp.arange(size)
+    last = next_pos - 1
+    p = last - ((last - s) % size)
+    return jnp.where((p >= 0) & (p <= last), p, -1)
+
+
+def cache_write_prefill(cache, k_new, v_new, start_pos: int, window):
+    """Write S new kv entries starting at ``start_pos``; returns
+    (cache', kpos_for_attention, k_attend, v_attend)."""
+    B, S = k_new.shape[0], k_new.shape[1]
+    size = cache["k"].shape[1]
+    if window and size == window:
+        # ring: attend over old ring + new tokens, then rebuild the ring.
+        old_pos = ring_positions(size, start_pos)
+        k_att = jnp.concatenate([cache["k"], k_new], axis=1)
+        v_att = jnp.concatenate([cache["v"], v_new], axis=1)
+        kpos = jnp.concatenate([old_pos, start_pos + jnp.arange(S)])
+        # rebuild: slot s <- latest position ≡ s (mod size) in [0, start+S)
+        new_slot_pos = ring_positions(size, start_pos + S)
+        take_new = new_slot_pos >= start_pos
+        idx = jnp.where(take_new, size + (new_slot_pos - start_pos), jnp.arange(size))
+        cache = {"k": jnp.take(k_att, idx, axis=1),
+                 "v": jnp.take(v_att, idx, axis=1)}
+        return cache, kpos, k_att, v_att
+    # linear cache
+    kc = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, start_pos, 0, 0))
+    vc = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, start_pos, 0, 0))
+    kpos = jnp.arange(size)
+    kpos = jnp.where(kpos < start_pos + S, kpos, -1)
+    return {"k": kc, "v": vc}, kpos, kc, vc
+
+
+def cache_write_decode(cache, k1, v1, pos):
+    """Write one kv entry at position ``pos`` (ring-aware)."""
+    size = cache["k"].shape[1]
+    slot = pos % size
+    kc = jax.lax.dynamic_update_slice(cache["k"], k1, (0, slot, 0, 0))
+    vc = jax.lax.dynamic_update_slice(cache["v"], v1, (0, slot, 0, 0))
+    kpos = ring_positions(size, pos + 1)
+    return {"k": kc, "v": vc}, kpos
+
+
+# ---------------------------------------------------------------------------
+# layer-level entry points
+# ---------------------------------------------------------------------------
+
+def attn_forward(p, cfg, x, positions, *, window=None, mesh=None):
+    """Training / no-cache forward (full causal self-attention)."""
+    q, k, v = project_qkv(p, cfg, x, positions)
+    q, k, v = (constrain_bh(t, mesh) for t in (q, k, v))
+    S = x.shape[1]
+    pos1d = positions[0, 0] if cfg.rope == "mrope" else positions[0]
+    o = attend(q, k, v, pos1d, pos1d, window=window or cfg.window)
+    return out_proj(p, cfg, constrain_bh(o, mesh))
+
+
+def attn_prefill(p, cfg, x, positions, cache, start_pos, *, window=None,
+                 mesh=None):
+    """Prefill ``S`` tokens at ``start_pos`` into ``cache`` (possibly holding a
+    downloaded prefix of ``start_pos`` tokens) and attend over the union."""
+    q, k_new, v_new = project_qkv(p, cfg, x, positions)
+    q, k_new, v_new = (constrain_bh(t, mesh) for t in (q, k_new, v_new))
+    S = x.shape[1]
+    w = window or cfg.window
+    cache, kpos, k_att, v_att = cache_write_prefill(
+        cache, k_new, v_new, start_pos, w)
+    qpos = start_pos + jnp.arange(S)
+    o = attend(q, k_att, v_att, qpos, kpos, window=w)
+    return out_proj(p, cfg, constrain_bh(o, mesh)), cache
+
+
+def attn_decode(p, cfg, x1, pos, cache, *, window=None, mesh=None):
+    """One-token decode: x1 [B,1,D], pos scalar int; attends to the cache."""
+    if cfg.rope == "mrope":
+        positions = jnp.broadcast_to(pos, (3, x1.shape[0], 1))
+    else:
+        positions = jnp.broadcast_to(pos, (x1.shape[0], 1))
+    q, k1, v1 = project_qkv(p, cfg, x1, positions)
+    q = constrain_bh(q, mesh)
+    w = window or cfg.window
+    cache, kpos = cache_write_decode(cache, k1, v1, pos)
+    qpos = jnp.asarray(pos)[None]
+    o = attend(q, cache["k"], cache["v"], qpos, kpos, window=w)
+    return out_proj(p, cfg, o), cache

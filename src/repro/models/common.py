@@ -1,0 +1,136 @@
+"""Shared building blocks: norms, activations, RoPE / M-RoPE, inits."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    """Truncated-normal init with 1/sqrt(fan_in) default scale."""
+    fan_in = shape[0] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms / activations
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layernorm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def init_norm(key, cfg, d, dtype):
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    return {"scale": jnp.zeros((d,), dtype)}  # rmsnorm: stored as (1+scale)
+
+
+def apply_norm(p, x, cfg):
+    if "bias" in p:
+        return layernorm(x, p["scale"], p["bias"])
+    return rmsnorm(x, p["scale"])
+
+
+def activation(x, kind: str):
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    if kind == "relu2":
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(f"unknown activation {kind}")
+
+
+# ---------------------------------------------------------------------------
+# RoPE (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, dh]; positions broadcastable to [..., S] (int)."""
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)              # [half]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]                    # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * cos - x2f * sin,
+                           x2f * cos + x1f * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float, sections: Tuple[int, ...]):
+    """Multimodal RoPE (qwen2-vl): positions3 [3, ..., S]; sections sum to
+    head_dim//2 and assign frequency bands to (temporal, height, width)."""
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(x.shape[-1], theta)              # [half]
+    # per-band position selection
+    band = jnp.concatenate([
+        jnp.full((s,), i, dtype=jnp.int32) for i, s in enumerate(sections)
+    ])                                                  # [half]
+    # positions3: [3, B, S] -> select per frequency band -> [B, S, half]
+    pos = jnp.take(positions3, band, axis=0)            # [half, B, S]
+    pos = jnp.moveaxis(pos, 0, -1)                      # [B, S, half]
+    ang = pos.astype(jnp.float32) * freqs
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * cos - x2f * sin,
+                           x2f * cos + x1f * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int, offset=0):
+    # offset may be a traced scalar (dynamic decode position)
+    pos = (jnp.arange(n, dtype=jnp.float32) + offset)[:, None]
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32)
+                  * (-math.log(10000.0) / d))
+    pe = jnp.zeros((n, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# misc
+# ---------------------------------------------------------------------------
+
+def safe_softmax(scores, mask):
+    """Softmax over the last axis in fp32, tolerating fully-masked rows."""
+    scores = jnp.where(mask, scores.astype(jnp.float32), -jnp.inf)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    e = jnp.exp(scores - m)
+    return e / (jnp.sum(e, axis=-1, keepdims=True) + 1e-30)

@@ -1,0 +1,140 @@
+"""Whisper-style encoder-decoder blocks.
+
+The audio frontend (mel + conv) is a STUB per the assignment carve-out:
+callers provide precomputed frame embeddings ``[B, n_frames, d_model]``.
+Positions are sinusoidal for both encoder and decoder (deviation from
+Whisper's learned decoder positions, noted in DESIGN.md, so that the
+assigned 32k decode shapes are representable without a 32k learned table).
+
+Cross-attention K/V are computed once at prefill and stored in the cache —
+they are part of the "prompt cache" blob for this architecture (the
+audio-conditioned state is the dominant reusable component).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (attend, attn_decode, attn_forward,
+                                    attn_prefill, constrain_bh,
+                                    init_attention, init_kv_cache, out_proj,
+                                    project_qkv)
+from repro.models.common import apply_norm, init_norm, sinusoidal_positions
+from repro.models.mlp import init_mlp, mlp_forward
+
+
+def init_cross_attention(key, cfg, dtype):
+    return init_attention(key, cfg, dtype)
+
+
+def init_enc_layer(key, cfg, dtype):
+    ks = jax.random.split(key, 4)
+    return {
+        "ln1": init_norm(ks[0], cfg, cfg.d_model, dtype),
+        "attn": init_attention(ks[1], cfg, dtype),
+        "ln2": init_norm(ks[2], cfg, cfg.d_model, dtype),
+        "mlp": init_mlp(ks[3], cfg, dtype),
+    }
+
+
+def enc_layer(p, cfg, x, mesh=None):
+    # bidirectional self-attention: no rope (whisper), no causal mask
+    h = apply_norm(p["ln1"], x, cfg)
+    pos = jnp.zeros((x.shape[0], x.shape[1]), jnp.int32)  # rope='none'
+    q, k, v = project_qkv(p["attn"], cfg, h, pos)
+    q, k, v = (constrain_bh(t, mesh) for t in (q, k, v))
+    S = x.shape[1]
+    idx = jnp.arange(S)
+    o = attend(q, k, v, idx, idx, causal=False)
+    x = x + out_proj(p["attn"], cfg, constrain_bh(o, mesh))
+    h = apply_norm(p["ln2"], x, cfg)
+    return x + mlp_forward(p["mlp"], cfg, h)
+
+
+def init_dec_layer(key, cfg, dtype):
+    ks = jax.random.split(key, 6)
+    return {
+        "ln1": init_norm(ks[0], cfg, cfg.d_model, dtype),
+        "self_attn": init_attention(ks[1], cfg, dtype),
+        "ln2": init_norm(ks[2], cfg, cfg.d_model, dtype),
+        "cross_attn": init_cross_attention(ks[3], cfg, dtype),
+        "ln3": init_norm(ks[4], cfg, cfg.d_model, dtype),
+        "mlp": init_mlp(ks[5], cfg, dtype),
+    }
+
+
+def _cross_kv(p, cfg, enc_out):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"])
+    if cfg.attn_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    return k, v
+
+
+def _cross_attend(p, cfg, x, ck, cv, mesh=None):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if cfg.attn_bias:
+        q = q + p["bq"]
+    q = constrain_bh(q, mesh)
+    Sq, Sk = x.shape[1], ck.shape[1]
+    o = attend(q, ck, cv, jnp.arange(Sq), jnp.arange(Sk), causal=False)
+    return out_proj(p, cfg, constrain_bh(o, mesh))
+
+
+def dec_layer_forward(p, cfg, x, positions, enc_out=None, cross_kv=None,
+                      mesh=None):
+    h = apply_norm(p["ln1"], x, cfg)
+    x = x + attn_forward(p["self_attn"], cfg, h, positions, mesh=mesh)
+    h = apply_norm(p["ln2"], x, cfg)
+    if cross_kv is None:
+        cross_kv = _cross_kv(p["cross_attn"], cfg, enc_out)
+    x = x + _cross_attend(p["cross_attn"], cfg, h, *cross_kv, mesh=mesh)
+    h = apply_norm(p["ln3"], x, cfg)
+    return x + mlp_forward(p["mlp"], cfg, h)
+
+
+def dec_layer_prefill(p, cfg, x, positions, cache, start_pos, enc_out=None,
+                      mesh=None):
+    """cache: {self: kvcache, cross_k, cross_v}. On first prefill
+    (start_pos==0 with enc_out given) cross K/V are computed and stored."""
+    h = apply_norm(p["ln1"], x, cfg)
+    a, self_cache = attn_prefill(p["self_attn"], cfg, h, positions,
+                                 cache["self"], start_pos, mesh=mesh)
+    x = x + a
+    if enc_out is not None:
+        ck, cv = _cross_kv(p["cross_attn"], cfg, enc_out)
+    else:
+        ck, cv = cache["cross_k"], cache["cross_v"]
+    h = apply_norm(p["ln2"], x, cfg)
+    x = x + _cross_attend(p["cross_attn"], cfg, h, ck, cv, mesh=mesh)
+    h = apply_norm(p["ln3"], x, cfg)
+    x = x + mlp_forward(p["mlp"], cfg, h)
+    return x, {"self": self_cache, "cross_k": ck, "cross_v": cv}
+
+
+def dec_layer_decode(p, cfg, x1, pos, cache, mesh=None):
+    h = apply_norm(p["ln1"], x1, cfg)
+    a, self_cache = attn_decode(p["self_attn"], cfg, h, pos, cache["self"],
+                                mesh=mesh)
+    x1 = x1 + a
+    h = apply_norm(p["ln2"], x1, cfg)
+    x1 = x1 + _cross_attend(p["cross_attn"], cfg, h,
+                            cache["cross_k"], cache["cross_v"], mesh=mesh)
+    h = apply_norm(p["ln3"], x1, cfg)
+    x1 = x1 + mlp_forward(p["mlp"], cfg, h)
+    return x1, dict(cache, self=self_cache)
+
+
+def init_dec_cache(cfg, batch, max_len, dtype):
+    return {
+        "self": init_kv_cache(cfg, batch, max_len, dtype),
+        "cross_k": jnp.zeros((batch, cfg.encdec.n_frames,
+                              cfg.n_kv_heads, cfg.dh), dtype),
+        "cross_v": jnp.zeros((batch, cfg.encdec.n_frames,
+                              cfg.n_kv_heads, cfg.dh), dtype),
+    }
+
+
+def add_sinusoidal(x, offset=0):
+    return x + sinusoidal_positions(x.shape[1], x.shape[-1],
+                                    offset).astype(x.dtype)

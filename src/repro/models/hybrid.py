@@ -1,0 +1,58 @@
+"""Hymba-style hybrid block: parallel attention + SSM heads, fused outputs.
+
+Per arXiv:2411.13676, each layer runs sliding-window attention and a Mamba
+branch *in parallel* on the same (pre-norm) input; branch outputs are
+normalized independently and mean-fused with learned per-channel scales.
+Meta tokens (learned prefix) are handled at the model level.
+
+Layer cache = {attn: ring KV cache, ssm: (conv, ssd) state}.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (attn_decode, attn_forward, attn_prefill,
+                                    init_attention, init_kv_cache)
+from repro.models.common import rmsnorm
+from repro.models.ssm import init_ssm, init_ssm_cache, ssm_decode, ssm_prefill
+
+
+def init_hybrid_attn(key, cfg, dtype):
+    ks = jax.random.split(key, 4)
+    return {
+        "attn": init_attention(ks[0], cfg, dtype),
+        "ssm": init_ssm(ks[1], cfg, dtype),
+        "norm_attn": jnp.zeros((cfg.d_model,), dtype),
+        "norm_ssm": jnp.zeros((cfg.d_model,), dtype),
+    }
+
+
+def _fuse(p, a, s):
+    return 0.5 * (rmsnorm(a, p["norm_attn"]) + rmsnorm(s, p["norm_ssm"]))
+
+
+def hybrid_forward(p, cfg, x, positions, mesh=None):
+    a = attn_forward(p["attn"], cfg, x, positions, mesh=mesh)
+    s, _ = ssm_prefill(p["ssm"], cfg, x)
+    return _fuse(p, a, s)
+
+
+def hybrid_prefill(p, cfg, x, positions, cache, start_pos, mesh=None):
+    a, ac = attn_prefill(p["attn"], cfg, x, positions, cache["attn"],
+                         start_pos, mesh=mesh)
+    s, sc = ssm_prefill(p["ssm"], cfg, x, cache["ssm"])
+    return _fuse(p, a, s), {"attn": ac, "ssm": sc}
+
+
+def hybrid_decode(p, cfg, x1, pos, cache, mesh=None):
+    a, ac = attn_decode(p["attn"], cfg, x1, pos, cache["attn"], mesh=mesh)
+    s, sc = ssm_decode(p["ssm"], cfg, x1, cache["ssm"])
+    return _fuse(p, a, s), {"attn": ac, "ssm": sc}
+
+
+def init_hybrid_cache(cfg, batch, max_len, dtype):
+    return {
+        "attn": init_kv_cache(cfg, batch, max_len, dtype),
+        "ssm": init_ssm_cache(cfg, batch, dtype),
+    }

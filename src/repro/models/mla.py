@@ -1,0 +1,143 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+The KV cache stores only the compressed latent ``c_kv`` (kv_lora_rank) plus
+the shared rotary key ``k_rope`` — 576 values/token for V3 vs 32768 for an
+equivalent MHA. For the paper's distributed prompt cache this is the
+best-case architecture: the transferable state blob is ~50x smaller, moving
+the break-even point strongly toward cache sharing (see EXPERIMENTS.md).
+
+Prefill uses the naive (materialized K/V) form; decode uses the absorbed
+form (queries projected into latent space; attention performed against the
+latent cache directly).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_rope, dense_init, rmsnorm, safe_softmax
+from repro.models.attention import attend, constrain_bh
+
+
+def init_mla(key, cfg, dtype):
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "wq_a": dense_init(ks[0], (d, m.q_lora_rank), dtype),
+        "q_norm": jnp.zeros((m.q_lora_rank,), dtype),
+        "wq_b": dense_init(ks[1], (m.q_lora_rank, H,
+                                   m.qk_nope_dim + m.qk_rope_dim), dtype),
+        "wkv_a": dense_init(ks[2], (d, m.kv_lora_rank + m.qk_rope_dim), dtype),
+        "kv_norm": jnp.zeros((m.kv_lora_rank,), dtype),
+        "wk_b": dense_init(ks[3], (m.kv_lora_rank, H, m.qk_nope_dim), dtype),
+        "wv_b": dense_init(ks[4], (m.kv_lora_rank, H, m.v_dim), dtype),
+        "wo": dense_init(ks[5], (H, m.v_dim, d), dtype),
+    }
+
+
+def init_mla_cache(cfg, batch: int, max_len: int, dtype):
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, max_len, m.qk_rope_dim), dtype),
+    }
+
+
+def _queries(p, cfg, x, positions):
+    m = cfg.mla
+    qa = rmsnorm(jnp.einsum("bsd,dr->bsr", x, p["wq_a"]), p["q_norm"])
+    q = jnp.einsum("bsr,rhk->bshk", qa, p["wq_b"])
+    q_nope, q_rope = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latents(p, cfg, x, positions):
+    m = cfg.mla
+    kv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    ckv = rmsnorm(kv[..., :m.kv_lora_rank], p["kv_norm"])
+    krope = kv[..., m.kv_lora_rank:]
+    krope = apply_rope(krope[:, :, None, :], positions,
+                       cfg.rope_theta)[:, :, 0, :]
+    return ckv, krope
+
+
+def mla_forward(p, cfg, x, positions, *, window=None, mesh=None):
+    """Training / no-cache path (naive materialized K/V)."""
+    m = cfg.mla
+    q_nope, q_rope = _queries(p, cfg, x, positions)
+    q_nope = constrain_bh(q_nope, mesh)
+    ckv, krope = _latents(p, cfg, x, positions)
+    k_nope = jnp.einsum("bsr,rhk->bshk", ckv, p["wk_b"])
+    v = jnp.einsum("bsr,rhk->bshk", ckv, p["wv_b"])
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(krope[:, :, None, :],
+                                  k_nope.shape[:3] + (m.qk_rope_dim,))],
+        axis=-1)
+    q, k, v = (constrain_bh(t, mesh) for t in (q, k, v))
+    pos1d = positions[0]
+    o = attend(q, k, v, pos1d, pos1d, window=window or cfg.window)
+    return jnp.einsum("bshk,hkd->bsd", constrain_bh(o, mesh), p["wo"])
+
+
+def mla_prefill(p, cfg, x, positions, cache, start_pos, *, window=None,
+                mesh=None):
+    m = cfg.mla
+    S = x.shape[1]
+    q_nope, q_rope = _queries(p, cfg, x, positions)
+    ckv_new, krope_new = _latents(p, cfg, x, positions)
+    ckv = jax.lax.dynamic_update_slice(cache["ckv"], ckv_new, (0, start_pos, 0))
+    krope = jax.lax.dynamic_update_slice(cache["krope"], krope_new,
+                                         (0, start_pos, 0))
+    size = ckv.shape[1]
+    kpos = jnp.arange(size)
+    kpos = jnp.where(kpos < start_pos + S, kpos, -1)
+    k_nope = jnp.einsum("bsr,rhk->bshk", ckv, p["wk_b"])
+    v = jnp.einsum("bsr,rhk->bshk", ckv, p["wv_b"])
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(krope[:, :, None, :],
+                                  k_nope.shape[:3] + (m.qk_rope_dim,))],
+        axis=-1)
+    q, k, v = (constrain_bh(t, mesh) for t in (q, k, v))
+    qpos = start_pos + jnp.arange(S)
+    o = attend(q, k, v, qpos, kpos, window=window or cfg.window)
+    out = jnp.einsum("bshk,hkd->bsd", constrain_bh(o, mesh), p["wo"])
+    return out, {"ckv": ckv, "krope": krope}
+
+
+def mla_decode(p, cfg, x1, pos, cache, *, window=None, mesh=None):
+    """Absorbed decode: attention in latent space against the compact cache."""
+    m = cfg.mla
+    B = x1.shape[0]
+    positions = jnp.broadcast_to(pos, (B, 1))
+    q_nope, q_rope = _queries(p, cfg, x1, positions)      # [B,1,H,*]
+    ckv_new, krope_new = _latents(p, cfg, x1, positions)
+    size = cache["ckv"].shape[1]
+    slot = pos % size  # MLA caches are linear here (window only via mask)
+    ckv = jax.lax.dynamic_update_slice(cache["ckv"], ckv_new, (0, slot, 0))
+    krope = jax.lax.dynamic_update_slice(cache["krope"], krope_new,
+                                         (0, slot, 0))
+    w = window or cfg.window
+    if w and size == w:
+        from repro.models.attention import ring_positions
+        kpos = ring_positions(size, pos + 1)
+    else:
+        kpos = jnp.arange(size)
+        kpos = jnp.where(kpos <= pos, kpos, -1)
+    # absorb: q_lat[h, r] = q_nope[h, k] @ wk_b[r, h, k]
+    q_lat = constrain_bh(jnp.einsum("bshk,rhk->bshr", q_nope, p["wk_b"]),
+                         mesh)
+    scale = 1.0 / ((m.qk_nope_dim + m.qk_rope_dim) ** 0.5)
+    s = (jnp.einsum("bshr,btr->bhst", q_lat, ckv)
+         + jnp.einsum("bshk,btk->bhst", q_rope, krope)) * scale
+    mask = (kpos >= 0)
+    if w:
+        mask = mask & (kpos > pos - w)
+    probs = safe_softmax(s, mask[None, None, None, :])
+    o_lat = jnp.einsum("bhst,btr->bshr", probs.astype(ckv.dtype), ckv)
+    o = jnp.einsum("bshr,rhk->bshk", o_lat, p["wv_b"])
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, {"ckv": ckv, "krope": krope}

@@ -1,0 +1,27 @@
+"""Dense MLP blocks (gated SwiGLU-style and plain two-layer)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import activation, dense_init
+
+
+def init_mlp(key, cfg, dtype, d_ff=None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], (d, f), dtype),
+         "w_down": dense_init(ks[1], (f, d), dtype)}
+    if cfg.gated_mlp:
+        p["w_gate"] = dense_init(ks[2], (d, f), dtype)
+    return p
+
+
+def mlp_forward(p, cfg, x):
+    h = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    if cfg.gated_mlp:
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        h = activation(g, cfg.act) * h
+    else:
+        h = activation(h, cfg.act)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"])

@@ -1,0 +1,387 @@
+"""Model facade: one class, six families, three execution modes.
+
+Modes
+  * ``forward``/``loss``   — teacher-forcing training path (scan + remat)
+  * ``prefill``            — prompt decoding into a cache, **resumable from a
+                             downloaded prompt-cache prefix** (``start_pos>0``)
+  * ``decode_step``        — one-token autoregressive serving step
+
+The cache pytree returned by ``init_cache``/``prefill`` is exactly the
+"internal state" the paper ships between edge devices (core/state_io.py
+serializes it).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import encdec as ed
+from repro.models import transformer as tf
+from repro.models.common import (apply_norm, embed_init, init_norm)
+
+
+def padded_vocab(vocab: int) -> int:
+    """Pad vocab storage to a multiple of 256 so the vocab dim always
+    shards evenly over the mesh (replicated [B,S,V] fp32 logits were the
+    largest single memory hazard in the dry-run). The padded tail is
+    masked to -inf in the head."""
+    return -(-vocab // 256) * 256
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, dtype=jnp.float32, mesh=None,
+                 remat: bool = False, unroll: bool = False,
+                 act_pspec=None):
+        self.cfg = cfg
+        self.dtype = dtype
+        self.mesh = mesh
+        self.remat = remat
+        self.unroll = unroll          # unroll layer scans (depth probes)
+        self.act_pspec = act_pspec    # optional activation constraint
+        self.segments = tf.segments_for(cfg) if cfg.family != "encdec" else []
+        # positions of prompt token i are offset by the meta-token prefix
+        self.pos_offset = cfg.n_meta_tokens
+
+    # ------------------------------------------------------------------
+    # init
+    # ------------------------------------------------------------------
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        ks = jax.random.split(key, 8)
+        vp = padded_vocab(cfg.vocab)
+        p: Dict[str, Any] = {
+            "embed": embed_init(ks[0], (vp, cfg.d_model), self.dtype),
+            "final_norm": init_norm(ks[1], cfg, cfg.d_model, self.dtype),
+        }
+        if not cfg.tie_embeddings:
+            p["head"] = embed_init(ks[2], (cfg.d_model, vp), self.dtype)
+        if cfg.n_meta_tokens:
+            p["meta"] = embed_init(ks[3], (cfg.n_meta_tokens, cfg.d_model),
+                                   self.dtype)
+        if cfg.family == "encdec":
+            e = cfg.encdec
+            enc_keys = jax.random.split(ks[4], e.n_enc_layers)
+            dec_keys = jax.random.split(ks[5], cfg.n_layers)
+            p["enc"] = jax.vmap(
+                lambda k: ed.init_enc_layer(k, cfg, self.dtype))(enc_keys)
+            p["enc_ln"] = init_norm(ks[6], cfg, cfg.d_model, self.dtype)
+            p["dec"] = jax.vmap(
+                lambda k: ed.init_dec_layer(k, cfg, self.dtype))(dec_keys)
+            return p
+        seg_keys = jax.random.split(ks[4], len(self.segments))
+        p["segments"] = [
+            tf.init_segment(sk, cfg, seg, self.dtype)
+            for sk, seg in zip(seg_keys, self.segments)
+        ]
+        if cfg.mtp:
+            mtp_seg = self.segments[-1]
+            p["mtp"] = {
+                "layer": tf.init_layer(ks[5], cfg, mtp_seg, self.dtype),
+                "proj": embed_init(ks[6], (2 * cfg.d_model, cfg.d_model),
+                                   self.dtype),
+                "ln_h": init_norm(ks[7], cfg, cfg.d_model, self.dtype),
+                "ln_e": init_norm(ks[7], cfg, cfg.d_model, self.dtype),
+            }
+        return p
+
+    # ------------------------------------------------------------------
+    # shared pieces
+    # ------------------------------------------------------------------
+    def _embed_inputs(self, p, batch, start_pos=0):
+        """Returns (x [B,S,D], positions)."""
+        cfg = self.cfg
+        if cfg.family == "vlm" and "embeds" in batch:
+            x = batch["embeds"].astype(self.dtype)
+            positions = batch["positions"]
+            return x, positions
+        tokens = batch["tokens"]
+        x = jnp.take(p["embed"], tokens, axis=0)
+        B, S = tokens.shape
+        pos1 = start_pos + jnp.arange(S)
+        positions = jnp.broadcast_to(pos1, (B, S))
+        if cfg.rope == "mrope":
+            positions = jnp.broadcast_to(pos1, (3, B, S))
+        return x, positions
+
+    def _constrain(self, x):
+        """Optional activation sharding constraint (e.g. sequence-sharded
+        residual stream for ZeRO-3 training of the largest configs)."""
+        if self.act_pspec is None or self.mesh is None or x.shape[1] == 1:
+            return x
+        from jax.sharding import NamedSharding
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.act_pspec))
+
+    def _head(self, p, x):
+        cfg = self.cfg
+        x = apply_norm(p["final_norm"], x, cfg)
+        if cfg.tie_embeddings:
+            logits = jnp.einsum("bsd,vd->bsv", x, p["embed"])
+        else:
+            logits = jnp.einsum("bsd,dv->bsv", x, p["head"])
+        logits = logits.astype(jnp.float32)
+        if logits.shape[-1] != cfg.vocab:   # mask padded vocab tail
+            tail = jnp.arange(logits.shape[-1]) >= cfg.vocab
+            logits = jnp.where(tail, -1e30, logits)
+        # keep logits vocab-sharded: a replicated [B,S,V] fp32 tensor is
+        # the single largest memory hazard at 128k+ vocabs
+        if self.mesh is not None and "model" in self.mesh.axis_names and \
+                logits.shape[-1] % self.mesh.shape["model"] == 0:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            dp = tuple(a for a in self.mesh.axis_names if a != "model")
+            ndp = 1
+            for a in dp:
+                ndp *= self.mesh.shape[a]
+            b_ax = dp if logits.shape[0] % ndp == 0 else None
+            logits = jax.lax.with_sharding_constraint(
+                logits, NamedSharding(self.mesh, P(b_ax, None, "model")))
+        return logits
+
+    def _prepend_meta(self, p, x, positions):
+        cfg = self.cfg
+        R = cfg.n_meta_tokens
+        B = x.shape[0]
+        meta = jnp.broadcast_to(p["meta"][None], (B, R, cfg.d_model))
+        x = jnp.concatenate([meta.astype(x.dtype), x], axis=1)
+        # positions: meta occupy 0..R-1; text shifted by R (already via offset)
+        pos_meta = jnp.broadcast_to(jnp.arange(R), positions.shape[:-1] + (R,))
+        positions = jnp.concatenate([pos_meta, positions + R], axis=-1)
+        return x, positions
+
+    # ------------------------------------------------------------------
+    # training / full forward
+    # ------------------------------------------------------------------
+    def _backbone(self, p, batch):
+        """Full-sequence hidden states. Returns (h [B,S,D], aux)."""
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            enc = ed.add_sinusoidal(batch["frames"].astype(self.dtype))
+
+            def ebody(x, lp):
+                lp = jax.lax.optimization_barrier(lp)
+                return ed.enc_layer(lp, cfg, x, mesh=self.mesh), None
+            if self.remat:
+                ebody = jax.checkpoint(ebody)
+            enc, _ = jax.lax.scan(ebody, enc, p["enc"], unroll=self.unroll)
+            enc = apply_norm(p["enc_ln"], enc, cfg)
+            tok = batch["tokens"]
+            x = jnp.take(p["embed"], tok, axis=0)
+            x = ed.add_sinusoidal(x)
+            B, S = tok.shape
+            positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+            def dbody(x, lp):
+                lp = jax.lax.optimization_barrier(lp)
+                return ed.dec_layer_forward(lp, cfg, x, positions, enc,
+                                            mesh=self.mesh), None
+            if self.remat:
+                dbody = jax.checkpoint(dbody)
+            x, _ = jax.lax.scan(dbody, x, p["dec"], unroll=self.unroll)
+            return x, 0.0
+
+        x, positions = self._embed_inputs(p, batch)
+        R = cfg.n_meta_tokens
+        if R:
+            x, positions = self._prepend_meta(p, x, positions)
+        x = self._constrain(x)
+        aux = 0.0
+        for sp, seg in zip(p["segments"], self.segments):
+            x, a = tf.stack_forward(sp, cfg, seg, x, positions,
+                                    mesh=self.mesh, remat=self.remat,
+                                    unroll=self.unroll, cfn=self._constrain)
+            aux = aux + a
+        if R:
+            x = x[:, R:]
+        return x, aux
+
+    def forward(self, p, batch):
+        h, _ = self._backbone(p, batch)
+        return self._head(p, h)
+
+    def _ce(self, p, h, targets, mask, chunk: int = 512):
+        """Cross-entropy; sequence-chunked with remat when S*V is large —
+        at 256k vocab the fp32 logits pipeline (softmax fwd+bwd) otherwise
+        keeps ~5 [B,S,V/shard] fp32 buffers live (§Perf: nemotron train
+        temp 21.2 GiB, mostly this)."""
+        S = h.shape[1]
+        V = p["embed"].shape[0]
+        if S * V <= (1 << 25) or S % chunk or S <= chunk:
+            return _masked_ce(self._head(p, h), targets, mask)
+        nc = S // chunk
+
+        def body(acc, xs):
+            hc, tc, mc = xs
+            logits = self._head(p, hc)
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+            ll = jnp.take_along_axis(logp, tc[..., None], axis=-1)[..., 0]
+            mc = mc.astype(jnp.float32)
+            return (acc[0] + jnp.sum(ll * mc), acc[1] + jnp.sum(mc)), None
+
+        def split(a):
+            return jnp.moveaxis(
+                a.reshape(a.shape[0], nc, chunk, *a.shape[2:]), 1, 0)
+
+        (ll, m), _ = jax.lax.scan(
+            jax.checkpoint(body), (jnp.zeros((), jnp.float32),
+                                   jnp.zeros((), jnp.float32)),
+            (split(h), split(targets), split(mask)))
+        return -ll / (m + 1e-9)
+
+    def loss(self, p, batch):
+        cfg = self.cfg
+        h, aux = self._backbone(p, batch)
+        targets = batch["targets"]
+        mask = batch.get("mask")
+        if mask is None:
+            mask = jnp.ones(targets.shape, jnp.float32)
+        ce = self._ce(p, h, targets, mask)
+        metrics = {"ce": ce, "aux": jnp.asarray(aux, jnp.float32)}
+        total = ce + aux
+        if cfg.mtp and "tokens" in batch:
+            # MTP: predict token t+2 from (h_t, emb(token_{t+1}))
+            emb_next = jnp.take(p["embed"], batch["tokens"][:, 1:], axis=0)
+            hh = apply_norm(p["mtp"]["ln_h"], h[:, :-1], cfg)
+            ee = apply_norm(p["mtp"]["ln_e"], emb_next, cfg)
+            hm = jnp.einsum("bsd,dk->bsk",
+                            jnp.concatenate([hh, ee], axis=-1),
+                            p["mtp"]["proj"])
+            B, S1 = hm.shape[:2]
+            positions = jnp.broadcast_to(jnp.arange(S1), (B, S1))
+            hm, _ = tf.layer_forward(p["mtp"]["layer"], cfg,
+                                     self.segments[-1], hm, positions,
+                                     mesh=self.mesh)
+            # predicts t+2; pad to the chunk multiple for the chunked CE
+            mtp_tgt = targets[:, 1:]
+            mtp_mask = mask[:, 1:]
+            pad = (-hm.shape[1]) % 512
+            if pad and hm.shape[1] * p["embed"].shape[0] > (1 << 25):
+                hm = jnp.pad(hm, ((0, 0), (0, pad), (0, 0)))
+                mtp_tgt = jnp.pad(mtp_tgt, ((0, 0), (0, pad)))
+                mtp_mask = jnp.pad(mtp_mask, ((0, 0), (0, pad)))
+            mtp = self._ce(p, hm, mtp_tgt, mtp_mask)
+            metrics["mtp"] = mtp
+            total = total + 0.3 * mtp
+        metrics["loss"] = total
+        return total, metrics
+
+    # ------------------------------------------------------------------
+    # serving: cache / prefill / decode
+    # ------------------------------------------------------------------
+    def cache_len(self, n_tokens: int) -> int:
+        return n_tokens + self.cfg.n_meta_tokens
+
+    def init_cache(self, batch: int, max_len: int, dtype=None):
+        cfg = self.cfg
+        dtype = dtype or self.dtype
+        if cfg.family == "encdec":
+            single = ed.init_dec_cache(cfg, batch, max_len, dtype)
+            return {"dec": jax.tree.map(
+                lambda a: jnp.zeros((cfg.n_layers,) + a.shape, a.dtype),
+                single)}
+        return {"segments": [
+            tf.init_segment_cache(cfg, seg, batch, max_len, dtype)
+            for seg in self.segments
+        ]}
+
+    def prefill(self, p, inputs, cache, start_pos=0, last_index=None, *,
+                resume: bool = False):
+        """Prefill; ``start_pos``>0 with ``resume=True`` continues from a
+        cache prefix (the paper's partial-match path). ``last_index`` picks
+        which position's logits to return (for bucket-padded prompts).
+        Returns (last-token logits [B,V], cache')."""
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return self._prefill_encdec(p, inputs, cache, start_pos, resume,
+                                        last_index)
+        x, positions = self._embed_inputs(p, inputs, start_pos)
+        R = cfg.n_meta_tokens
+        if R and not resume:
+            x, positions = self._prepend_meta(p, x, positions)
+        elif R and resume:
+            positions = positions + R
+        eff_start = start_pos + (R if resume else 0)
+        new_segs = []
+        aux = 0.0
+        for sp, seg, sc in zip(p["segments"], self.segments,
+                               cache["segments"]):
+            x = self._constrain(x)
+            x, nc, a = tf.stack_prefill(sp, cfg, seg, x, positions, sc,
+                                        eff_start, mesh=self.mesh,
+                                        unroll=self.unroll,
+                                        cfn=self._constrain)
+            new_segs.append(nc)
+            aux = aux + a
+        logits = self._head(p, _pick_last(x, last_index))[:, 0]
+        return logits, {"segments": new_segs}
+
+    def _prefill_encdec(self, p, inputs, cache, start_pos, resume,
+                        last_index=None):
+        cfg = self.cfg
+        if not resume:
+            enc = ed.add_sinusoidal(inputs["frames"].astype(self.dtype))
+
+            def ebody(x, lp):
+                return ed.enc_layer(lp, cfg, x, mesh=self.mesh), None
+            enc, _ = jax.lax.scan(ebody, enc, p["enc"], unroll=self.unroll)
+            enc = apply_norm(p["enc_ln"], enc, cfg)
+        else:
+            enc = None
+        tok = inputs["tokens"]
+        x = jnp.take(p["embed"], tok, axis=0)
+        x = ed.add_sinusoidal(x, offset=start_pos)
+        B, S = tok.shape
+        positions = jnp.broadcast_to(start_pos + jnp.arange(S), (B, S))
+
+        def dbody(x, xs):
+            lp, lc = xs
+            lp = jax.lax.optimization_barrier(lp)
+            y, nc = ed.dec_layer_prefill(lp, cfg, x, positions, lc,
+                                         start_pos, enc_out=enc,
+                                         mesh=self.mesh)
+            return y, nc
+        x, new_cache = jax.lax.scan(dbody, x, (p["dec"], cache["dec"]),
+                                    unroll=self.unroll)
+        logits = self._head(p, _pick_last(x, last_index))[:, 0]
+        return logits, {"dec": new_cache}
+
+    def decode_step(self, p, cache, tokens, pos):
+        """tokens: [B,1] int32; pos: scalar int (token position, pre-offset).
+        Returns (logits [B,V], cache')."""
+        cfg = self.cfg
+        x1 = jnp.take(p["embed"], tokens, axis=0)
+        eff_pos = pos + self.pos_offset
+        if cfg.family == "encdec":
+            x1 = ed.add_sinusoidal(x1, offset=eff_pos)
+
+            def dbody(x1, xs):
+                lp, lc = xs
+                lp = jax.lax.optimization_barrier(lp)
+                y, nc = ed.dec_layer_decode(lp, cfg, x1, eff_pos, lc,
+                                            mesh=self.mesh)
+                return y, nc
+            x1, new_cache = jax.lax.scan(dbody, x1, (p["dec"], cache["dec"]),
+                                         unroll=self.unroll)
+            return self._head(p, x1)[:, 0], {"dec": new_cache}
+        new_segs = []
+        for sp, seg, sc in zip(p["segments"], self.segments,
+                               cache["segments"]):
+            x1, nc = tf.stack_decode(sp, cfg, seg, x1, eff_pos, sc,
+                                     mesh=self.mesh, unroll=self.unroll)
+            new_segs.append(nc)
+        return self._head(p, x1)[:, 0], {"segments": new_segs}
+
+
+def _pick_last(x, last_index):
+    if last_index is None:
+        return x[:, -1:]
+    return jax.lax.dynamic_slice_in_dim(x, last_index, 1, axis=1)
+
+
+def _masked_ce(logits, targets, mask):
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    mask = mask.astype(jnp.float32)
+    return -jnp.sum(ll * mask) / (jnp.sum(mask) + 1e-9)

@@ -1,0 +1,204 @@
+"""Mamba-2 (SSD — state-space duality) layer: chunked prefill + recurrent decode.
+
+The SSD prefill accepts an **initial state**, which is exactly what the
+paper's prompt-cache resume needs for SSM architectures: the cached "prompt
+cache" for an SSM is the (conv window, SSD state) pair at a segment boundary,
+and ``ssm_prefill`` continues from it.
+
+State layout (per layer):
+  conv:  [B, d_conv-1, conv_dim]   rolling conv window
+  ssd:   [B, H, P, N]              SSD recurrent state (fp32)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def init_ssm(key, cfg, dtype):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = cfg.ssm_d_inner
+    H = cfg.ssm_n_heads
+    G, N = s.n_groups, s.d_state
+    conv_dim = di + 2 * G * N
+    d_in_proj = 2 * di + 2 * G * N + H
+    ks = jax.random.split(key, 4)
+    dt = jnp.exp(jax.random.uniform(ks[2], (H,), jnp.float32,
+                                    jnp.log(0.001), jnp.log(0.1)))
+    return {
+        "in_proj": dense_init(ks[0], (d, d_in_proj), dtype),
+        "conv_w": dense_init(ks[1], (s.d_conv, conv_dim), dtype, scale=0.4),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(dt)),
+        "norm": jnp.zeros((di,), dtype),
+        "out_proj": dense_init(ks[3], (di, d), dtype),
+    }
+
+
+def init_ssm_cache(cfg, batch: int, dtype):
+    s = cfg.ssm
+    di = cfg.ssm_d_inner
+    conv_dim = di + 2 * s.n_groups * s.d_state
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+        "ssd": jnp.zeros((batch, cfg.ssm_n_heads, s.head_dim, s.d_state),
+                         jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# pieces
+# ---------------------------------------------------------------------------
+
+def _split_proj(cfg, zxbcdt):
+    s = cfg.ssm
+    di, H = cfg.ssm_d_inner, cfg.ssm_n_heads
+    gn = 2 * s.n_groups * s.d_state
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:di + di + gn]
+    dt = zxbcdt[..., di + di + gn:]
+    assert dt.shape[-1] == H
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b, prev: Optional[jnp.ndarray]):
+    """xBC: [B,S,C]; w: [K,C] depthwise; prev: [B,K-1,C] or None.
+    Returns (y [B,S,C], new_prev [B,K-1,C])."""
+    K = w.shape[0]
+    Bsz, S, C = xBC.shape
+    if prev is None:
+        prev = jnp.zeros((Bsz, K - 1, C), xBC.dtype)
+    full = jnp.concatenate([prev, xBC], axis=1)          # [B, S+K-1, C]
+    # depthwise conv as K shifted adds (K is tiny, typically 4)
+    y = sum(full[:, i:i + S, :] * w[i] for i in range(K))
+    y = jax.nn.silu(y + b)
+    new_prev = full[:, -(K - 1):, :] if K > 1 else prev
+    return y, new_prev
+
+
+def _ssd_scan(x, dt, A, B_, C_, h0, chunk: int):
+    """Chunked SSD. x:[B,S,H,P] dt:[B,S,H] A:[H] B_,C_:[B,S,G,N]
+    h0:[B,H,P,N] fp32. Returns (y [B,S,H,P], h_final)."""
+    Bsz, S, H, Pd = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    rep = H // G
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    nc = Sp // Q
+
+    xf = x.astype(jnp.float32).reshape(Bsz, nc, Q, H, Pd)
+    dtf = dt.astype(jnp.float32).reshape(Bsz, nc, Q, H)
+    Bf = B_.astype(jnp.float32).reshape(Bsz, nc, Q, G, N)
+    Cf = C_.astype(jnp.float32).reshape(Bsz, nc, Q, G, N)
+    # broadcast groups to heads
+    Bh = jnp.repeat(Bf, rep, axis=3)                      # [B,nc,Q,H,N]
+    Ch = jnp.repeat(Cf, rep, axis=3)
+
+    dA = dtf * A                                          # [B,nc,Q,H]
+    cum = jnp.cumsum(dA, axis=2)                          # within-chunk
+    # intra-chunk: scores[i,j] = exp(cum_i - cum_j) (i>=j) * (C_i . B_j) * dt_j
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # [B,nc,Q(i),Q(j),H]
+    ii = jnp.arange(Q)
+    causal = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    decay = jnp.where(causal, jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bcihn,bcjhn->bcijh", Ch, Bh)
+    scores = cb * decay * dtf[:, :, None, :, :]           # [B,nc,i,j,H]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores, xf)
+    # chunk summaries: S_c = sum_j exp(cum_last - cum_j) dt_j B_j x_j
+    dec_last = jnp.exp(cum[:, :, -1:, :] - cum)           # [B,nc,Q,H]
+    st = jnp.einsum("bcjh,bcjhn,bcjhp->bchpn",
+                    dec_last * dtf, Bh, xf)               # [B,nc,H,P,N]
+    chunk_decay = jnp.exp(cum[:, :, -1, :])               # [B,nc,H]
+
+    def step(h, xs):
+        st_c, dec_c = xs                                  # [B,H,P,N],[B,H]
+        h_out = h                                         # state entering chunk
+        h = h * dec_c[..., None, None] + st_c
+        return h, h_out
+
+    h0 = h0.astype(jnp.float32)
+    h_final, h_in = jax.lax.scan(
+        step, h0, (jnp.moveaxis(st, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_in = jnp.moveaxis(h_in, 0, 1)                       # [B,nc,H,P,N]
+    # inter-chunk contribution: y_i += (C_i . h_in) * exp(cum_i)
+    y_inter = jnp.einsum("bcihn,bchpn->bcihp", Ch, h_in) \
+        * jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter).reshape(Bsz, Sp, H, Pd)[:, :S]
+    return y, h_final
+
+
+# ---------------------------------------------------------------------------
+# layer-level entry points
+# ---------------------------------------------------------------------------
+
+def ssm_prefill(p, cfg, x, cache=None):
+    """x: [B,S,D]. cache: ssm cache dict or None (fresh). Returns (y, cache')."""
+    s = cfg.ssm
+    di, H, Pd = cfg.ssm_d_inner, cfg.ssm_n_heads, cfg.ssm.head_dim
+    G, N = s.n_groups, s.d_state
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    prev = cache["conv"] if cache is not None else None
+    xBC, conv_state = _causal_conv(xBC, p["conv_w"], p["conv_b"], prev)
+    xs = xBC[..., :di]
+    B_ = xBC[..., di:di + G * N].reshape(*xBC.shape[:2], G, N)
+    C_ = xBC[..., di + G * N:].reshape(*xBC.shape[:2], G, N)
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    h0 = cache["ssd"] if cache is not None else \
+        jnp.zeros((x.shape[0], H, Pd, N), jnp.float32)
+    xh = xs.reshape(*xs.shape[:2], H, Pd)
+    y, h = _ssd_scan(xh, dtf, A, B_, C_, h0, s.chunk)
+    y = y + p["D"][:, None] * xh.astype(jnp.float32)
+    y = y.reshape(*x.shape[:2], di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"])
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, {"conv": conv_state, "ssd": h}
+
+
+def ssm_decode(p, cfg, x1, cache):
+    """One-token recurrent step. x1: [B,1,D]."""
+    s = cfg.ssm
+    di, H, Pd = cfg.ssm_d_inner, cfg.ssm_n_heads, cfg.ssm.head_dim
+    G, N = s.n_groups, s.d_state
+    zxbcdt = jnp.einsum("bsd,de->bse", x1, p["in_proj"])
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    # conv step
+    full = jnp.concatenate([cache["conv"], xBC], axis=1)  # [B,K,C]
+    yc = jnp.einsum("bkc,kc->bc", full, p["conv_w"])[:, None]
+    xBC = jax.nn.silu(yc + p["conv_b"])
+    conv_state = full[:, 1:]
+    xs = xBC[..., :di]
+    B_ = xBC[..., di:di + G * N].reshape(-1, G, N)        # [B,G,N] (S=1)
+    C_ = xBC[..., di + G * N:].reshape(-1, G, N)
+    rep = H // G
+    Bh = jnp.repeat(B_, rep, axis=1).astype(jnp.float32)  # [B,H,N]
+    Ch = jnp.repeat(C_, rep, axis=1).astype(jnp.float32)
+    dtf = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    A = -jnp.exp(p["A_log"])
+    xh = xs[:, 0].reshape(-1, H, Pd).astype(jnp.float32)  # [B,H,P]
+    h = cache["ssd"]
+    h = h * jnp.exp(dtf * A)[..., None, None] \
+        + jnp.einsum("bh,bhn,bhp->bhpn", dtf, Bh, xh)
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, h) + p["D"][:, None] * xh
+    y = y.reshape(-1, 1, di).astype(x1.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"])
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, {"conv": conv_state, "ssd": h}

@@ -1,0 +1,217 @@
+"""Layer-stack orchestration: block registry + scan-over-layers execution.
+
+Layers are stacked (params ``vmap``-initialized with a leading ``[L, ...]``
+axis) and executed under ``lax.scan`` so that HLO size — and therefore
+single-host compile time for the 512-device dry-run — stays O(1) in depth.
+Heterogeneous stacks (deepseek-v3: 3 dense + 58 MoE layers) are expressed as
+*segments*, each its own scan.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import hybrid as hyb
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import init_norm, apply_norm
+from repro.models.mlp import init_mlp, mlp_forward
+
+
+class Segment(NamedTuple):
+    kind: str          # dense | moe | mla_dense | mla_moe | ssm | hybrid
+    n_layers: int
+    d_ff: int          # for dense mlp kinds
+
+
+def segments_for(cfg) -> List[Segment]:
+    if cfg.family == "ssm":
+        return [Segment("ssm", cfg.n_layers, 0)]
+    if cfg.family == "hybrid":
+        return [Segment("hybrid", cfg.n_layers, cfg.d_ff)]
+    if cfg.family == "moe":
+        fk = cfg.moe.first_k_dense
+        att = "mla_" if cfg.uses_mla else ""
+        segs = []
+        if fk:
+            segs.append(Segment(att + "dense", fk, cfg.moe.dense_ff or cfg.d_ff))
+        segs.append(Segment(att + "moe", cfg.n_layers - fk, 0))
+        return segs
+    # dense / vlm
+    return [Segment("dense", cfg.n_layers, cfg.d_ff)]
+
+
+# ---------------------------------------------------------------------------
+# per-layer init / apply
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg, seg: Segment, dtype):
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    if seg.kind == "ssm":
+        return {"ln1": init_norm(ks[0], cfg, d, dtype),
+                "ssm": ssm_mod.init_ssm(ks[1], cfg, dtype)}
+    if seg.kind == "hybrid":
+        return {"ln1": init_norm(ks[0], cfg, d, dtype),
+                "hyb": hyb.init_hybrid_attn(ks[1], cfg, dtype),
+                "ln2": init_norm(ks[2], cfg, d, dtype),
+                "mlp": init_mlp(ks[3], cfg, dtype, seg.d_ff)}
+    p = {"ln1": init_norm(ks[0], cfg, d, dtype),
+         "ln2": init_norm(ks[2], cfg, d, dtype)}
+    if seg.kind.startswith("mla_"):
+        p["mla"] = mla_mod.init_mla(ks[1], cfg, dtype)
+    else:
+        p["attn"] = attn.init_attention(ks[1], cfg, dtype)
+    if seg.kind.endswith("moe"):
+        p["moe"] = moe_mod.init_moe(ks[3], cfg, dtype)
+    else:
+        p["mlp"] = init_mlp(ks[3], cfg, dtype, seg.d_ff)
+    return p
+
+
+def init_segment(key, cfg, seg: Segment, dtype):
+    keys = jax.random.split(key, seg.n_layers)
+    return jax.vmap(lambda k: init_layer(k, cfg, seg, dtype))(keys)
+
+
+def init_segment_cache(cfg, seg: Segment, batch: int, max_len: int, dtype):
+    if seg.kind == "ssm":
+        single = ssm_mod.init_ssm_cache(cfg, batch, dtype)
+    elif seg.kind == "hybrid":
+        single = hyb.init_hybrid_cache(cfg, batch, max_len, dtype)
+    elif seg.kind.startswith("mla_"):
+        size = min(max_len, cfg.window) if cfg.window else max_len
+        single = mla_mod.init_mla_cache(cfg, batch, size, dtype)
+    else:
+        single = attn.init_kv_cache(cfg, batch, max_len, dtype)
+    return jax.tree.map(
+        lambda a: jnp.zeros((seg.n_layers,) + a.shape, a.dtype), single)
+
+
+# ---------------------------------------------------------------------------
+# layer application (single layer; mode-specific)
+# ---------------------------------------------------------------------------
+
+def _mixer_fwd(lp, cfg, seg, x, positions, window, mesh=None):
+    if seg.kind == "ssm":
+        y, _ = ssm_mod.ssm_prefill(lp["ssm"], cfg, x)
+        return y
+    if seg.kind == "hybrid":
+        return hyb.hybrid_forward(lp["hyb"], cfg, x, positions, mesh=mesh)
+    if seg.kind.startswith("mla_"):
+        return mla_mod.mla_forward(lp["mla"], cfg, x, positions,
+                                   window=window, mesh=mesh)
+    return attn.attn_forward(lp["attn"], cfg, x, positions, window=window,
+                             mesh=mesh)
+
+
+def _ffn(lp, cfg, seg, x, mesh):
+    if seg.kind == "ssm":
+        return None, 0.0
+    if seg.kind.endswith("moe"):
+        y, aux = moe_mod.moe_forward(lp["moe"], cfg, x, mesh)
+        return y, aux
+    return mlp_forward(lp["mlp"], cfg, x), 0.0
+
+
+def layer_forward(lp, cfg, seg, x, positions, mesh=None, window=None):
+    h = apply_norm(lp["ln1"], x, cfg)
+    x = x + _mixer_fwd(lp, cfg, seg, h, positions, window, mesh)
+    if seg.kind == "ssm":
+        return x, 0.0
+    h = apply_norm(lp["ln2"], x, cfg)
+    y, aux = _ffn(lp, cfg, seg, h, mesh)
+    return x + y, aux
+
+
+def layer_prefill(lp, cfg, seg, x, positions, lc, start_pos, mesh=None,
+                  window=None):
+    h = apply_norm(lp["ln1"], x, cfg)
+    if seg.kind == "ssm":
+        y, nc = ssm_mod.ssm_prefill(lp["ssm"], cfg, h, lc)
+        return x + y, nc, 0.0
+    if seg.kind == "hybrid":
+        y, nc = hyb.hybrid_prefill(lp["hyb"], cfg, h, positions, lc,
+                                   start_pos, mesh=mesh)
+    elif seg.kind.startswith("mla_"):
+        y, nc = mla_mod.mla_prefill(lp["mla"], cfg, h, positions, lc,
+                                    start_pos, window=window, mesh=mesh)
+    else:
+        y, nc = attn.attn_prefill(lp["attn"], cfg, h, positions, lc,
+                                  start_pos, window=window, mesh=mesh)
+    x = x + y
+    h = apply_norm(lp["ln2"], x, cfg)
+    y, aux = _ffn(lp, cfg, seg, h, mesh)
+    return x + y, nc, aux
+
+
+def layer_decode(lp, cfg, seg, x1, pos, lc, mesh=None, window=None):
+    h = apply_norm(lp["ln1"], x1, cfg)
+    if seg.kind == "ssm":
+        y, nc = ssm_mod.ssm_decode(lp["ssm"], cfg, h, lc)
+        return x1 + y, nc
+    if seg.kind == "hybrid":
+        y, nc = hyb.hybrid_decode(lp["hyb"], cfg, h, pos, lc, mesh=mesh)
+    elif seg.kind.startswith("mla_"):
+        y, nc = mla_mod.mla_decode(lp["mla"], cfg, h, pos, lc, window=window,
+                                   mesh=mesh)
+    else:
+        y, nc = attn.attn_decode(lp["attn"], cfg, h, pos, lc, window=window,
+                                 mesh=mesh)
+    x1 = x1 + y
+    h = apply_norm(lp["ln2"], x1, cfg)
+    y, _ = _ffn(lp, cfg, seg, h, mesh)
+    return x1 + y, nc
+
+
+# ---------------------------------------------------------------------------
+# stacked (scan) execution
+# ---------------------------------------------------------------------------
+
+def stack_forward(sp, cfg, seg, x, positions, mesh=None, window=None,
+                  remat=False, unroll=False, cfn=None):
+    def body(carry, lp):
+        x, aux = carry
+        if cfn is not None:
+            x = cfn(x)
+        # barrier: stops XLA hoisting per-layer weight converts/regathers
+        # out of the loop (observed: full [L,E,D,F] f32 stacks, 50+ GiB)
+        lp = jax.lax.optimization_barrier(lp)
+        y, a = layer_forward(lp, cfg, seg, x, positions, mesh, window)
+        return (y, aux + a), None
+    if remat:
+        body = jax.checkpoint(body)
+    (x, aux), _ = jax.lax.scan(body, (x, 0.0), sp, unroll=unroll)
+    return x, aux
+
+
+def stack_prefill(sp, cfg, seg, x, positions, cache, start_pos, mesh=None,
+                  window=None, unroll=False, cfn=None):
+    def body(carry, xs):
+        x, aux = carry
+        if cfn is not None:
+            x = cfn(x)
+        lp, lc = xs
+        lp = jax.lax.optimization_barrier(lp)
+        y, nc, a = layer_prefill(lp, cfg, seg, x, positions, lc, start_pos,
+                                 mesh, window)
+        return (y, aux + a), nc
+    (x, aux), new_cache = jax.lax.scan(body, (x, 0.0), (sp, cache),
+                                       unroll=unroll)
+    return x, new_cache, aux
+
+
+def stack_decode(sp, cfg, seg, x1, pos, cache, mesh=None, window=None,
+                 unroll=False):
+    def body(x1, xs):
+        lp, lc = xs
+        lp = jax.lax.optimization_barrier(lp)
+        y, nc = layer_decode(lp, cfg, seg, x1, pos, lc, mesh, window)
+        return y, nc
+    x1, new_cache = jax.lax.scan(body, x1, (sp, cache), unroll=unroll)
+    return x1, new_cache

@@ -1,0 +1,3 @@
+from repro.roofline.hw import V5E  # noqa: F401
+from repro.roofline.analysis import (  # noqa: F401
+    collective_bytes, cost_summary, roofline_terms)

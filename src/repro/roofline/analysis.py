@@ -1,0 +1,114 @@
+"""Roofline terms from compiled dry-run artifacts.
+
+  compute    = HLO_FLOPs   / (chips * peak_FLOP/s)
+  memory     = HLO_bytes   / (chips * HBM_bw)
+  collective = coll_bytes  / (chips * link_bw)
+
+``cost_analysis`` supplies FLOPs/bytes. Collective bytes are parsed from
+the optimized HLO: every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute contributes the byte size of its operands
+(resolved via a symbol table of all HLO value definitions).
+
+CAVEAT (verified empirically): XLA counts a ``while`` body ONCE, so any
+scan-over-layers contribution must be depth-extrapolated — the dry-run
+lowers unrolled L=1 / L=2 variants and solves cost(L) = a + b*L.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%?[\w\.\-]+)\s*=\s*(.+?)\s+"
+                     r"([\w\-]+)\(", re.M)
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _type_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string (handles tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str, per_kind: bool = False):
+    """Sum operand bytes over every collective op in the (optimized) HLO."""
+    sizes: Dict[str, int] = {}
+    kinds: Dict[str, int] = {}
+    ops = []
+    for m in _DEF_RE.finditer(hlo_text):
+        name, type_str, opname = m.group(1), m.group(2), m.group(3)
+        sizes[name.lstrip("%")] = _type_bytes(type_str)
+        base = opname.rstrip("-start").rstrip("-done")
+        for c in _COLLECTIVES:
+            if opname == c or opname == c + "-start":
+                # operand list: text after '(' up to matching ')'
+                line = hlo_text[m.start():hlo_text.find("\n", m.start())]
+                args = line[line.find("(") + 1:]
+                ops.append((c, args, name.lstrip("%")))
+                break
+    total = 0
+    for kind, args, _ in ops:
+        b = 0
+        for a in re.finditer(r"%?([\w\.\-]+)", args.split("),")[0]):
+            nm = a.group(1)
+            if nm in sizes:
+                b += sizes[nm]
+        total += b
+        kinds[kind] = kinds.get(kind, 0) + b
+    return (total, kinds) if per_kind else total
+
+
+def cost_summary(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):       # older jax returns [dict]
+        ca = ca[0]
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+    }
+
+
+def roofline_terms(flops: float, bytes_: float, coll_bytes: float,
+                   n_chips: int, chip) -> Dict[str, float]:
+    """All three terms in seconds. HLO flops/bytes from cost_analysis are
+    *per-program* (per-device in SPMD), so they are divided by one chip's
+    rate; collective bytes likewise are per-device program traffic."""
+    compute = flops / chip.peak_flops_bf16
+    memory = bytes_ / chip.hbm_bw
+    collective = coll_bytes / chip.ici_link_bw
+    dominant = max(("compute", compute), ("memory", memory),
+                   ("collective", collective), key=lambda kv: kv[1])[0]
+    return {
+        "compute_s": compute,
+        "memory_s": memory,
+        "collective_s": collective,
+        "dominant": dominant,
+    }
+
+
+def extrapolate_depth(c1: Dict[str, float], c2: Dict[str, float],
+                      n_layers: int) -> Dict[str, float]:
+    """Solve cost(L) = a + b*L from L=1 and L=2 lowers; evaluate at depth."""
+    out = {}
+    for k in ("flops", "bytes", "coll_bytes"):
+        b = c2[k] - c1[k]
+        a = c1[k] - b
+        out[k] = max(a + b * n_layers, 0.0)
+    return out

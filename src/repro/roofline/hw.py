@@ -1,0 +1,20 @@
+"""Target hardware constants (TPU v5e), per the assignment brief."""
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Chip:
+    name: str
+    peak_flops_bf16: float
+    hbm_bw: float
+    ici_link_bw: float
+    hbm_bytes: float
+
+
+V5E = Chip(
+    name="tpu-v5e",
+    peak_flops_bf16=197e12,     # 197 TFLOP/s bf16
+    hbm_bw=819e9,               # 819 GB/s
+    ici_link_bw=50e9,           # ~50 GB/s per link
+    hbm_bytes=16 * 2**30,       # 16 GiB
+)

@@ -1,0 +1,142 @@
+"""Single-replica inference engine: prefill / prefill-resume / decode.
+
+The engine is the substrate the paper's EdgeClient drives. It exposes:
+
+  * ``start(inputs)``                     — fresh prefill (Case 1, miss)
+  * ``resume(suffix, cache, n_prefix)``   — continue from a downloaded
+                                            prompt-cache prefix (Cases 2-4)
+  * ``adopt(cache, n_tokens, logits)``    — full hit (Case 5): no compute
+  * ``generate(state, n, sampler)``       — autoregressive decode loop
+
+All model calls are jitted once per (shape bucket). Prefill inputs are
+padded to power-of-two buckets to bound recompilation.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.sampler import greedy
+
+
+def _bucket(n: int, minimum: int = 16) -> int:
+    b = minimum
+    while b < n:
+        b *= 2
+    return b
+
+
+@dataclass
+class EngineState:
+    cache: Any
+    pos: int                       # next token position (excl. meta offset)
+    last_logits: np.ndarray        # [B, V]
+    tokens: list = field(default_factory=list)   # generated tokens
+    timings: Dict[str, float] = field(default_factory=dict)
+
+
+class InferenceEngine:
+    def __init__(self, model, params, max_len: int, cache_dtype=None):
+        self.model = model
+        self.params = params
+        self.max_len = max_len            # in prompt-token space
+        self.cache_dtype = cache_dtype or model.dtype
+        self._prefill_fn = {}
+        self._decode = jax.jit(
+            lambda p, c, t, pos: model.decode_step(p, c, t, pos))
+
+    # ------------------------------------------------------------------
+    def new_cache(self):
+        return self.model.init_cache(
+            1, self.model.cache_len(self.max_len), self.cache_dtype)
+
+    def _prefill_jit(self, resume: bool):
+        if resume not in self._prefill_fn:
+            self._prefill_fn[resume] = jax.jit(
+                partial(self.model.prefill, resume=resume))
+        return self._prefill_fn[resume]
+
+    def _pad_inputs(self, inputs: Dict[str, np.ndarray]):
+        """Pad token dim to a bucket; returns (padded, true_len)."""
+        key = "embeds" if "embeds" in inputs else "tokens"
+        n = inputs[key].shape[1]
+        b = min(_bucket(n), self.max_len)
+        if b == n:
+            return inputs, n
+        pad = b - n
+        out = dict(inputs)
+        if key == "tokens":
+            out["tokens"] = np.pad(inputs["tokens"], ((0, 0), (0, pad)),
+                                   mode="edge")
+        else:
+            out["embeds"] = np.pad(inputs["embeds"],
+                                   ((0, 0), (0, pad), (0, 0)))
+            out["positions"] = np.pad(inputs["positions"],
+                                      ((0, 0), (0, 0), (0, pad)), mode="edge")
+        return out, n
+
+    # ------------------------------------------------------------------
+    def start(self, inputs) -> EngineState:
+        """Fresh prefill of the full prompt (cache miss)."""
+        return self._run_prefill(inputs, self.new_cache(), 0, resume=False)
+
+    def resume(self, inputs, cache, n_prefix: int) -> EngineState:
+        """Continue prefill from a restored prefix of ``n_prefix`` tokens."""
+        return self._run_prefill(inputs, cache, n_prefix, resume=True)
+
+    def adopt(self, cache, n_tokens: int, logits: np.ndarray) -> EngineState:
+        """Full hit: adopt a downloaded state with no model execution."""
+        return EngineState(cache=cache, pos=n_tokens, last_logits=logits)
+
+    def _run_prefill(self, inputs, cache, start_pos, *, resume):
+        t0 = time.perf_counter()
+        padded, true_n = self._pad_inputs(inputs)
+        # padding beyond the true prompt writes junk KV at positions
+        # >= start_pos + true_n; they are never attended (causal) as long as
+        # the next prefill/decode starts at start_pos + true_n. Ring caches
+        # are the exception — for windowed models we avoid padding.
+        if self.model.cfg.window:
+            padded, true_n = inputs, inputs[
+                "embeds" if "embeds" in inputs else "tokens"].shape[1]
+        fn = self._prefill_jit(resume)
+        logits, cache = fn(self.params, padded, cache, start_pos, true_n - 1)
+        logits = np.asarray(jax.block_until_ready(logits))
+        wall = time.perf_counter() - t0
+        st = EngineState(cache=cache, pos=start_pos + true_n,
+                         last_logits=logits)
+        st.timings["prefill_wall"] = wall
+        st.timings["prefill_tokens"] = true_n
+        return st
+
+    # ------------------------------------------------------------------
+    def decode_one(self, st: EngineState, token: np.ndarray) -> np.ndarray:
+        """Feed ``token`` [B,1], return logits [B,V]; advances state."""
+        logits, st.cache = self._decode(self.params, st.cache,
+                                        jnp.asarray(token, jnp.int32),
+                                        st.pos)
+        st.pos += 1
+        st.last_logits = np.asarray(jax.block_until_ready(logits))
+        return st.last_logits
+
+    def generate(self, st: EngineState, max_tokens: int,
+                 sampler: Callable = greedy, eos_id: Optional[int] = None,
+                 rng=None) -> np.ndarray:
+        t0 = time.perf_counter()
+        out = []
+        logits = st.last_logits
+        for _ in range(max_tokens):
+            tok = sampler(logits, rng)           # [B]
+            out.append(tok)
+            if eos_id is not None and np.all(tok == eos_id):
+                break
+            logits = self.decode_one(st, tok[:, None])
+        st.timings["decode_wall"] = time.perf_counter() - t0
+        st.timings["decode_tokens"] = len(out)
+        st.tokens.extend(int(t[0]) for t in out)
+        return np.stack(out, axis=1)

@@ -1,0 +1,24 @@
+"""Token samplers. The paper uses greedy sampling throughout."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def greedy(logits: np.ndarray, rng=None) -> np.ndarray:
+    return np.argmax(logits, axis=-1).astype(np.int32)
+
+
+def temperature(logits: np.ndarray, rng: np.random.Generator,
+                temp: float = 0.7, top_k: int = 0) -> np.ndarray:
+    x = np.asarray(logits, np.float64) / max(temp, 1e-6)
+    if top_k:
+        kth = np.partition(x, -top_k, axis=-1)[..., -top_k:-top_k + 1]
+        x = np.where(x < kth, -np.inf, x)
+    x = x - x.max(axis=-1, keepdims=True)
+    p = np.exp(x)
+    p /= p.sum(axis=-1, keepdims=True)
+    out = np.empty(x.shape[:-1], np.int32)
+    flat_p = p.reshape(-1, p.shape[-1])
+    for i, row in enumerate(flat_p):
+        out.reshape(-1)[i] = rng.choice(row.shape[-1], p=row)
+    return out

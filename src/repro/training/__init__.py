@@ -1,0 +1,2 @@
+from repro.training.optimizer import adamw  # noqa: F401
+from repro.training.train_step import make_train_step  # noqa: F401

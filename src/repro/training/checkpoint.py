@@ -1,0 +1,56 @@
+"""Checkpointing: msgpack + zstd of a flattened pytree (offline, no orbax)."""
+from __future__ import annotations
+
+import os
+from typing import Any, Tuple
+
+import msgpack
+import numpy as np
+import zstandard as zstd
+
+import jax
+import jax.numpy as jnp
+
+
+def _paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keys = ["/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                     for p in path) for path, _ in flat]
+    return keys, [leaf for _, leaf in flat], treedef
+
+
+def save(path: str, tree: Any, step: int = 0) -> None:
+    keys, leaves, _ = _paths(tree)
+    payload = {
+        "step": step,
+        "leaves": [{
+            "path": k,
+            "shape": list(np.shape(l)),
+            "dtype": str(np.asarray(l).dtype),
+            "data": np.ascontiguousarray(np.asarray(l)).tobytes(),
+        } for k, l in zip(keys, leaves)],
+    }
+    raw = zstd.ZstdCompressor(level=3).compress(
+        msgpack.packb(payload, use_bin_type=True))
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(raw)
+    os.replace(tmp, path)
+
+
+def load(path: str, template: Any) -> Tuple[Any, int]:
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(
+            zstd.ZstdDecompressor().decompress(f.read()), raw=False)
+    stored = {d["path"]: d for d in payload["leaves"]}
+    keys, leaves, treedef = _paths(template)
+    new = []
+    for k, l in zip(keys, leaves):
+        d = stored.get(k)
+        if d is None:
+            raise ValueError(f"checkpoint missing leaf {k}")
+        arr = np.frombuffer(d["data"], dtype=d["dtype"]).reshape(d["shape"])
+        if tuple(arr.shape) != tuple(np.shape(l)):
+            raise ValueError(f"shape mismatch for {k}")
+        new.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, new), payload["step"]

@@ -1,0 +1,75 @@
+"""AdamW with optional low-precision moments (no optax dependency).
+
+``moment_dtype=jnp.bfloat16`` halves optimizer memory — required for the
+deepseek-v3-671b dry-run to fit 512 x 16 GB (see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    count: jnp.ndarray
+    mu: any
+    nu: any
+
+
+class Optimizer(NamedTuple):
+    init: any
+    update: any
+
+
+def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0,
+          grad_clip: Optional[float] = 1.0, moment_dtype=None,
+          warmup_steps: int = 100) -> Optimizer:
+
+    def schedule(step):
+        warm = jnp.minimum(step / max(warmup_steps, 1), 1.0)
+        return lr * warm
+
+    def init(params):
+        def zeros_like(p):
+            dt = moment_dtype or p.dtype
+            return jnp.zeros(p.shape, dt)
+        return AdamWState(
+            count=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(zeros_like, params),
+            nu=jax.tree.map(zeros_like, params),
+        )
+
+    def update(grads, state, params):
+        count = state.count + 1
+        if grad_clip is not None:
+            gnorm = jnp.sqrt(sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(grads)) + 1e-12)
+            scale = jnp.minimum(1.0, grad_clip / gnorm)
+            grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            mf = m.astype(jnp.float32) * b1 + gf * (1 - b1)
+            vf = v.astype(jnp.float32) * b2 + gf * gf * (1 - b2)
+            mhat = mf / (1 - b1 ** count)
+            vhat = vf / (1 - b2 ** count)
+            step_ = schedule(count) * (mhat / (jnp.sqrt(vhat) + eps)
+                                       + weight_decay * p.astype(jnp.float32))
+            return ((p.astype(jnp.float32) - step_).astype(p.dtype),
+                    mf.astype(m.dtype), vf.astype(v.dtype))
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_m = jax.tree.leaves(state.mu)
+        flat_v = jax.tree.leaves(state.nu)
+        flat_p = jax.tree.leaves(params)
+        outs = [upd(g, m, v, p)
+                for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = jax.tree.unflatten(treedef, [o[0] for o in outs])
+        new_m = jax.tree.unflatten(treedef, [o[1] for o in outs])
+        new_v = jax.tree.unflatten(treedef, [o[2] for o in outs])
+        return new_p, AdamWState(count, new_m, new_v)
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,25 @@
+"""Training step factory: loss + grads + optimizer update, jit/pjit-able."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def make_train_step(model, optimizer):
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss, has_aux=True)(params, batch)
+        new_params, new_state = optimizer.update(grads, opt_state, params)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)) + 1e-12)
+        return new_params, new_state, metrics
+    return train_step
+
+
+def make_eval_step(model):
+    def eval_step(params, batch):
+        _, metrics = model.loss(params, batch)
+        return metrics
+    return eval_step

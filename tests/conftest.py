@@ -1,0 +1,50 @@
+import os
+import sys
+
+# Tests must see exactly ONE device (the dry-run sets 512 in its own
+# process); keep any accidental flags out.
+os.environ.pop("XLA_FLAGS", None)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models import Model
+
+
+def make_batch(cfg, B=2, S=16, seed=0):
+    rng = np.random.default_rng(seed)
+    tokens = jnp.asarray(rng.integers(3, cfg.vocab, (B, S)), jnp.int32)
+    batch = {"tokens": tokens, "targets": tokens}
+    if cfg.family == "vlm":
+        batch["embeds"] = jnp.asarray(
+            rng.normal(size=(B, S, cfg.d_model)) * 0.02, jnp.float32)
+        batch["positions"] = jnp.broadcast_to(jnp.arange(S), (3, B, S))
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(B, cfg.encdec.n_frames, cfg.d_model)) * 0.02,
+            jnp.float32)
+    return batch
+
+
+def prefill_inputs(cfg, batch, sl=slice(None)):
+    if cfg.family == "vlm":
+        return {"embeds": batch["embeds"][:, sl],
+                "positions": batch["positions"][:, :, sl]}
+    inp = {"tokens": batch["tokens"][:, sl]}
+    if cfg.family == "encdec":
+        inp["frames"] = batch["frames"]
+    return inp
+
+
+@pytest.fixture(scope="session")
+def tiny_setup():
+    """A small dense model + params shared across serving tests."""
+    cfg = get_config("gemma3-270m").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params

@@ -1,0 +1,57 @@
+"""Property tests for the Bloom-filter catalog (paper §3.1, §3.3)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bloom import BloomFilter
+
+keys = st.binary(min_size=1, max_size=64)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(keys, min_size=1, max_size=200))
+def test_no_false_negatives(items):
+    bf = BloomFilter(capacity=10_000, fp_rate=0.01)
+    for it in items:
+        bf.add(it)
+    assert all(it in bf for it in items)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(keys, min_size=1, max_size=100, unique=True),
+       st.lists(keys, min_size=1, max_size=100, unique=True))
+def test_merge_is_union(a, b):
+    fa = BloomFilter(capacity=10_000)
+    fb = BloomFilter(capacity=10_000)
+    for it in a:
+        fa.add(it)
+    for it in b:
+        fb.add(it)
+    fa.merge(fb)
+    assert all(it in fa for it in a + b)
+
+
+def test_fp_rate_near_target():
+    bf = BloomFilter(capacity=5000, fp_rate=0.01)
+    rng = np.random.default_rng(0)
+    inserted = [rng.bytes(16) for _ in range(5000)]
+    for it in inserted:
+        bf.add(it)
+    probes = [rng.bytes(17) for _ in range(20_000)]
+    fp = sum(p in bf for p in probes) / len(probes)
+    assert fp < 0.03, fp                      # 1% target, generous bound
+    assert 0.001 < bf.expected_fp_rate() < 0.03
+
+
+def test_paper_configuration_size():
+    """Paper §4: 1M entries at 1% -> ~1.20 MB."""
+    bf = BloomFilter(capacity=1_000_000, fp_rate=0.01)
+    assert abs(bf.size_bytes / 1.2e6 - 1.0) < 0.05
+    assert bf.k == 7
+
+
+def test_wire_roundtrip():
+    bf = BloomFilter(capacity=1000)
+    bf.add(b"hello")
+    clone = BloomFilter(capacity=1000)
+    clone.load_bytes(bf.to_bytes())
+    assert b"hello" in clone and b"world" not in clone

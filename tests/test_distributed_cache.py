@@ -1,0 +1,114 @@
+"""End-to-end distributed prompt caching: the paper's system behaviour."""
+import jax
+import numpy as np
+import pytest
+
+from repro.config import CacheConfig
+from repro.core import (CacheServer, Catalog, EdgeClient, SimClock,
+                        SimNetwork)
+from repro.core.transport import InProcTransport
+from repro.core.perfmodel import PI_5, PI_ZERO_2W
+from repro.data import MMLUGenerator, WordHashTokenizer
+from repro.models import Model
+from repro.serving.engine import InferenceEngine
+
+
+@pytest.fixture(scope="module")
+def world(tiny_setup):
+    cfg, model, params = tiny_setup
+    server = CacheServer(CacheConfig())
+    clock = SimClock()
+    net = SimNetwork()
+    tok = WordHashTokenizer(cfg.vocab)
+    gen = MMLUGenerator(tok, n_shot=2)
+
+    def client(name, **kw):
+        eng = InferenceEngine(model, params, max_len=512)
+        tr = InProcTransport(server, net, clock)
+        return EdgeClient(name, eng, tr, CacheConfig(),
+                          perf=PI_ZERO_2W, **kw)
+    return cfg, server, gen, client
+
+
+def test_cases_1_through_5(world):
+    cfg, server, gen, mk = world
+    c1, c2 = mk("c1"), mk("c2")
+    p = gen.prompt("astronomy", 0)
+
+    r1 = c1.infer(p.segments, max_new_tokens=4)
+    assert r1.case == 1 and r1.blob_bytes_up > 0
+
+    # same domain, new question -> partial hit (instruction + examples)
+    c2.sync_catalog()
+    r2 = c2.infer(gen.prompt("astronomy", 1).segments, max_new_tokens=4)
+    assert r2.case == 4
+    assert 0 < r2.matched_tokens < r2.prompt_tokens
+
+    # identical prompt -> full hit, ZERO model execution, identical output
+    r3 = c2.infer(p.segments, max_new_tokens=4)
+    assert r3.case == 5 and r3.matched_tokens == r3.prompt_tokens
+    assert r3.output_tokens == r1.output_tokens
+    assert r3.sim.p_decode == 0.0
+    assert r3.sim.ttft < r1.sim.ttft          # the paper's headline effect
+
+
+def test_partial_hit_output_equals_miss_output(world):
+    cfg, server, gen, mk = world
+    seeder, fresh, resumed = mk("s"), mk("f"), mk("r")
+    p0 = gen.prompt("virology", 0)
+    p1 = gen.prompt("virology", 1)
+    seeder.infer(p0.segments, max_new_tokens=2)
+    resumed.sync_catalog()
+    r_resumed = resumed.infer(p1.segments, max_new_tokens=4)
+    r_fresh = fresh.infer(p1.segments, max_new_tokens=4,
+                          upload_on_miss=False)
+    assert r_resumed.case in (3, 4)
+    assert r_resumed.output_tokens == r_fresh.output_tokens
+
+
+def test_catalog_suppresses_misses(world):
+    """§5.2.3: with the catalog, a cold prompt never touches the server."""
+    cfg, server, gen, mk = world
+    c = mk("cold")
+    before = server.handle("stats", {})["stats"]["gets"]
+    c.infer(gen.prompt("management", 40).segments, max_new_tokens=2)
+    after = server.handle("stats", {})["stats"]["gets"]
+    assert after == before        # no GET issued on a catalog miss
+
+
+def test_no_catalog_ablation_pays_roundtrips(world):
+    cfg, server, gen, mk = world
+    c = mk("nocat", use_catalog=False)
+    before = server.handle("stats", {})["stats"]["gets"]
+    r = c.infer(gen.prompt("marketing", 77).segments, max_new_tokens=2)
+    after = server.handle("stats", {})["stats"]["gets"]
+    assert after - before >= 1    # probed the server despite the miss
+    assert r.sim.redis > 0
+
+
+def test_false_positive_falls_back_to_local(world):
+    """§3.3: a poisoned catalog entry costs latency, never correctness."""
+    cfg, server, gen, mk = world
+    honest, poisoned = mk("h"), mk("p")
+    p = gen.prompt("prehistory", 3)
+    keys = p.segments.keys(poisoned.meta)
+    for k in keys:
+        poisoned.catalog.register(k.digest)     # catalog lies: not on server
+    r = poisoned.infer(p.segments, max_new_tokens=3, upload_on_miss=False)
+    rh = honest.infer(p.segments, max_new_tokens=3, upload_on_miss=False)
+    assert r.case == 1 and r.false_positive
+    assert r.output_tokens == rh.output_tokens
+    assert r.sim.redis > 0                      # paid the wasted GET
+
+
+def test_catalog_async_sync_versioning(world):
+    cfg, server, gen, mk = world
+    c = mk("sync")
+    v0 = c.catalog.version
+    c.infer(gen.prompt("nutrition", 9).segments, max_new_tokens=2)
+    c.catalog.last_sync_t = -1e18
+    c.sync_catalog()
+    assert c.catalog.version >= v0
+    # a second immediate sync is rate-limited
+    synced = c.catalog.maybe_sync(c.transport, c.clock.now())
+    assert not synced

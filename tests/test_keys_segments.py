@@ -1,0 +1,65 @@
+"""Prompt keys (integrity) and partial-matching ranges (paper §3.1-3.2)."""
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.keys import PromptKey, model_meta
+from repro.core.segments import PromptSegments
+
+
+def test_key_depends_on_model_meta():
+    cfg = get_config("gemma3-270m")
+    m1 = model_meta(cfg, "float32")
+    m2 = model_meta(cfg, "bfloat16")              # quantization changes key
+    m3 = model_meta(cfg.replace(n_layers=7), "float32")
+    ids = list(range(50))
+    k1 = PromptKey.for_prefix(m1, ids, 50)
+    assert k1.digest != PromptKey.for_prefix(m2, ids, 50).digest
+    assert k1.digest != PromptKey.for_prefix(m3, ids, 50).digest
+    assert k1.digest == PromptKey.for_prefix(m1, ids + [99], 50).digest
+
+
+def test_key_depends_on_prefix_length_and_content():
+    meta = b"m"
+    ids = list(range(100))
+    ks = {PromptKey.for_prefix(meta, ids, n).digest for n in (10, 20, 100)}
+    assert len(ks) == 3
+    ids2 = ids.copy()
+    ids2[5] = 999
+    assert PromptKey.for_prefix(meta, ids, 10).digest != \
+        PromptKey.for_prefix(meta, ids2, 10).digest
+
+
+def test_mmlu_style_ranges_match_paper_figure3():
+    """instruction / +ex1 / +all-examples / full prompt, longest first."""
+    ids = list(range(100))
+    seg = PromptSegments.mmlu_style(ids, instruction_len=10,
+                                    example_lens=[15, 15, 15])
+    assert seg.boundaries == (10, 25, 55, 100)
+    assert seg.ranges(4) == [100, 55, 25, 10]
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(5, 200), st.lists(st.integers(1, 50), max_size=8),
+       st.integers(2, 6))
+def test_ranges_invariants(n_tokens, bounds, max_ranges):
+    ids = list(range(n_tokens))
+    seg = PromptSegments.make(ids, bounds + [n_tokens])
+    rs = seg.ranges(max_ranges)
+    assert rs == sorted(rs, reverse=True)          # longest first
+    assert rs[0] == n_tokens                       # full prompt included
+    assert len(rs) <= max_ranges
+    assert all(0 < r <= n_tokens for r in rs)
+    keys = seg.keys(b"meta", max_ranges)
+    assert len({k.digest for k in keys}) == len(rs)
+
+
+def test_stride_ranges_superset_of_boundaries():
+    ids = list(range(100))
+    seg = PromptSegments.mmlu_style(ids, 10, [15, 15, 15])
+    rs = seg.ranges(stride=16)
+    assert set(seg.boundaries) <= set(rs)
+    assert all(r % 16 == 0 or r in seg.boundaries for r in rs)
+    assert rs == sorted(rs, reverse=True)
+    # stride keys are distinct
+    ks = seg.keys(b"m", stride=16)
+    assert len({k.digest for k in ks}) == len(rs)

@@ -1,0 +1,80 @@
+"""M-RoPE (qwen2-vl) properties + VLM serving path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models import Model
+from repro.models.common import apply_mrope, apply_rope
+
+
+def test_mrope_equals_rope_for_text():
+    """When all three position components are equal (pure text), M-RoPE
+    must reduce to standard RoPE."""
+    rng = np.random.default_rng(0)
+    B, S, H, dh = 2, 8, 4, 32
+    x = jnp.asarray(rng.normal(size=(B, S, H, dh)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    pos3 = jnp.broadcast_to(jnp.arange(S), (3, B, S))
+    a = apply_rope(x, pos, 10000.0)
+    b = apply_mrope(x, pos3, 10000.0, (4, 6, 6))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 1000), st.integers(0, 50), st.integers(0, 50))
+def test_mrope_sections_use_their_component(t, h, w):
+    """Perturbing the height component must change only its band."""
+    x = jnp.ones((1, 1, 1, 32), jnp.float32)
+    sections = (4, 6, 6)
+    base = np.asarray(apply_mrope(
+        x, jnp.asarray([t, h, w]).reshape(3, 1, 1), 1e4, sections))
+    moved = np.asarray(apply_mrope(
+        x, jnp.asarray([t, h + 7, w]).reshape(3, 1, 1), 1e4, sections))
+    half = 16
+    # temporal band (first 4 freq of each half) unchanged
+    np.testing.assert_allclose(moved[..., :4], base[..., :4], atol=1e-6)
+    np.testing.assert_allclose(moved[..., half:half + 4],
+                               base[..., half:half + 4], atol=1e-6)
+    # height band differs (unless h rotation is a no-op multiple)
+    assert not np.allclose(moved[..., 4:10], base[..., 4:10], atol=1e-9)
+
+
+def test_vlm_prefill_decode_roundtrip():
+    """VLM: prefill from stub patch/token embeddings, then decode text
+    tokens; resume matches full prefill."""
+    cfg = get_config("qwen2-vl-2b").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    B, S = 1, 16
+    embeds = jnp.asarray(rng.normal(size=(B, S, cfg.d_model)) * 0.02,
+                         jnp.float32)
+    # image patches at positions 4..7 share a temporal index (dynamic res)
+    pos_t = np.arange(S)
+    pos_h = np.arange(S).copy()
+    pos_w = np.arange(S).copy()
+    pos_h[4:8] = [4, 4, 5, 5]
+    pos_w[4:8] = [4, 5, 4, 5]
+    positions = jnp.asarray(np.stack([pos_t, pos_h, pos_w])[:, None, :])
+    positions = jnp.broadcast_to(positions, (3, B, S))
+
+    cache = model.init_cache(B, 24)
+    lg, cache = model.prefill(params, {"embeds": embeds,
+                                       "positions": positions}, cache)
+    cache2 = model.init_cache(B, 24)
+    _, cache2 = model.prefill(
+        params, {"embeds": embeds[:, :10],
+                 "positions": positions[:, :, :10]}, cache2)
+    lg2, cache2 = model.prefill(
+        params, {"embeds": embeds[:, 10:],
+                 "positions": positions[:, :, 10:]}, cache2,
+        start_pos=10, resume=True)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(lg2), atol=2e-5,
+                               rtol=1e-4)
+    tok = jnp.asarray([[7]], jnp.int32)
+    d1, _ = model.decode_step(params, cache, tok, S)
+    d2, _ = model.decode_step(params, cache2, tok, S)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), atol=2e-5,
+                               rtol=1e-4)

@@ -1,0 +1,55 @@
+"""Roofline tooling: HLO collective parsing + depth extrapolation."""
+from repro.roofline.analysis import (_type_bytes, collective_bytes,
+                                     extrapolate_depth, roofline_terms)
+from repro.roofline.hw import V5E
+
+HLO = """
+HloModule test
+ENTRY main {
+  %p0 = bf16[16,1024]{1,0} parameter(0)
+  %ag = bf16[16,16384]{1,0} all-gather(%p0), dimensions={1}
+  %ar = f32[256]{0} all-reduce(%c), to_apply=%add
+  %rs = bf16[2,8]{1,0} reduce-scatter(%big), dimensions={0}
+  %cp = u8[64]{0} collective-permute(%bytes), source_target_pairs={{0,1}}
+  %dots = f32[4,4]{0,1} dot(%a, %b)
+}
+%big = bf16[32,8]{1,0} parameter(1)
+%c = f32[256]{0} constant(0)
+%bytes = u8[64]{0} parameter(2)
+%a = f32[4,8]{1,0} parameter(3)
+%b = f32[8,4]{1,0} parameter(4)
+"""
+
+
+def test_type_bytes():
+    assert _type_bytes("bf16[16,1024]") == 16 * 1024 * 2
+    assert _type_bytes("f32[]") == 4
+    assert _type_bytes("(bf16[2,2], f32[3])") == 8 + 12
+    assert _type_bytes("pred[8]") == 8
+
+
+def test_collective_parsing_sums_operands():
+    total, kinds = collective_bytes(HLO, per_kind=True)
+    assert kinds["all-gather"] == 16 * 1024 * 2
+    assert kinds["all-reduce"] == 256 * 4
+    assert kinds["reduce-scatter"] == 32 * 8 * 2
+    assert kinds["collective-permute"] == 64
+    assert "dot" not in kinds
+    assert total == sum(kinds.values())
+
+
+def test_roofline_terms_and_dominance():
+    r = roofline_terms(flops=1.97e14, bytes_=819e9 * 2, coll_bytes=0,
+                       n_chips=256, chip=V5E)
+    assert abs(r["compute_s"] - 1.0) < 1e-6
+    assert abs(r["memory_s"] - 2.0) < 1e-6
+    assert r["dominant"] == "memory"
+
+
+def test_extrapolate_depth_linear():
+    c1 = {"flops": 100.0, "bytes": 60.0, "coll_bytes": 10.0}   # a + b
+    c2 = {"flops": 180.0, "bytes": 100.0, "coll_bytes": 15.0}  # a + 2b
+    out = extrapolate_depth(c1, c2, n_layers=10)
+    assert out["flops"] == 20 + 80 * 10
+    assert out["bytes"] == 20 + 40 * 10
+    assert out["coll_bytes"] == 5 + 5 * 10

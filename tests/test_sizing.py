@@ -1,0 +1,52 @@
+"""Analytic state sizing must track real serialized blob sizes — the
+break-even analysis depends on it."""
+import jax
+import numpy as np
+import pytest
+
+from conftest import make_batch, prefill_inputs
+from repro.configs import get_config
+from repro.core import state_io
+from repro.core.sizing import state_bytes
+from repro.models import Model
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "mamba2-780m",
+                                  "deepseek-v3-671b"])
+def test_analytic_vs_actual_blob(arch):
+    cfg = get_config(arch).reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, B=1, S=32)
+    c = model.init_cache(1, 32)
+    _, c = model.prefill(params, prefill_inputs(cfg, batch), c)
+    blob = state_io.extract_state(c, 32, b"m", compress=False)
+    # analytic sizing uses dtype_bytes=4 here (fp32 test model)
+    pred = state_bytes(cfg, 32, dtype_bytes=4, with_logits=False)
+    # msgpack overhead + fp32 ssd states make this approximate
+    assert 0.5 * pred < len(blob) < 2.2 * pred, (len(blob), pred)
+
+
+def test_mla_blob_much_smaller_than_gqa():
+    """The MLA latent cache is the paper's best case: 576 values/token
+    vs 2048 for nemotron's GQA-8 (3.6x) and vs 32768 for deepseek's own
+    128-head MHA equivalent (57x)."""
+    ds = get_config("deepseek-v3-671b")
+    nm = get_config("nemotron-4-15b")
+    mla = state_bytes(ds, 1000, with_logits=False) / ds.n_layers
+    gqa = state_bytes(nm, 1000, with_logits=False) / nm.n_layers
+    assert mla * 3 < gqa
+    mha_equiv = 2 * ds.n_heads * ds.dh * 2 * 1000   # K+V, bf16
+    assert mla * 50 < mha_equiv
+
+
+def test_ssm_state_constant_in_tokens():
+    m = get_config("mamba2-780m")
+    assert state_bytes(m, 100, with_logits=False) == \
+        state_bytes(m, 100000, with_logits=False)
+
+
+def test_window_caps_state():
+    h = get_config("hymba-1.5b")
+    assert state_bytes(h, 100000, with_logits=False) == \
+        state_bytes(h, h.window + h.n_meta_tokens, with_logits=False)

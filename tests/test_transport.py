@@ -1,0 +1,54 @@
+"""Transports: simulated-latency accounting and the real TCP server."""
+import numpy as np
+
+from repro.config import CacheConfig
+from repro.core import CacheServer, SimClock, SimNetwork
+from repro.core.transport import InProcTransport, TCPTransport, serve_tcp
+
+
+def test_inproc_latency_model():
+    server = CacheServer(CacheConfig())
+    clock = SimClock()
+    net = SimNetwork(bandwidth_bps=8e6, rtt_s=0.01)   # 1 MB/s
+    tr = InProcTransport(server, net, clock)
+    blob = b"x" * 1_000_000
+    _, dt, nbytes = tr.request("put", {"key": b"k", "blob": blob})
+    assert nbytes > 1_000_000
+    assert abs(dt - (0.01 + nbytes * 8 / 8e6)) < 1e-9
+    assert clock.now() == dt
+    # async ops do not advance the clock
+    _, dt2, _ = tr.request("sync", {"since": 0}, advance_clock=False)
+    assert clock.now() == dt
+
+
+def test_tcp_roundtrip():
+    server = CacheServer(CacheConfig())
+    port, shutdown = serve_tcp(server)
+    try:
+        tr = TCPTransport("127.0.0.1", port)
+        resp, dt, _ = tr.request("put", {"key": b"abc", "blob": b"payload"})
+        assert resp["ok"] and dt > 0
+        resp, _, _ = tr.request("get", {"key": b"abc"})
+        assert resp["blob"] == b"payload"
+        resp, _, _ = tr.request("sync", {"since": 0})
+        assert resp["keys"] == [b"abc"] and resp["version"] == 1
+        resp, _, _ = tr.request("get", {"key": b"missing"})
+        assert not resp["ok"]
+        resp, _, _ = tr.request("stats", {})
+        assert resp["n_entries"] == 1
+        tr.close()
+    finally:
+        shutdown()
+
+
+def test_server_sync_incremental():
+    server = CacheServer(CacheConfig())
+    server.put(b"k1", b"b1")
+    keys, v1 = server.sync(0)
+    assert keys == [b"k1"]
+    server.put(b"k2", b"b2")
+    keys, v2 = server.sync(v1)
+    assert keys == [b"k2"] and v2 == 2
+    # re-putting an existing key does not grow the log
+    server.put(b"k2", b"b2-new")
+    assert server.sync(v2)[0] == []

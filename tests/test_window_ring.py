@@ -1,0 +1,85 @@
+"""Sliding-window ring-buffer cache invariants (the long_500k substrate).
+
+A windowed model decoding with a ring cache of size w must produce the
+same logits as the same model with an oversized linear cache (the mask
+already limits attention to the window)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_batch, prefill_inputs
+from repro.configs import get_config
+from repro.models import Model
+from repro.models.attention import ring_positions
+
+
+def test_ring_positions_math():
+    # size 4, about to write position 6 -> slots hold 4,5,2,3... wait:
+    # slot s holds largest p<6 with p%4==s: s0->4, s1->5, s2->2, s3->3
+    got = np.asarray(ring_positions(4, 6))
+    np.testing.assert_array_equal(got, [4, 5, 2, 3])
+    # cold cache: nothing written yet
+    np.testing.assert_array_equal(np.asarray(ring_positions(4, 0)),
+                                  [-1, -1, -1, -1])
+    # exactly full
+    np.testing.assert_array_equal(np.asarray(ring_positions(4, 4)),
+                                  [0, 1, 2, 3])
+
+
+@pytest.mark.parametrize("window", [4, 8])
+def test_ring_decode_equals_linear(window):
+    cfg = get_config("llama3.2-1b").reduced().replace(window=window)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, B=1, S=12)
+
+    # linear: cache big enough that no wrap occurs (size > total len)
+    big = model.init_cache(1, 32)            # size 32 > window -> ring off?
+    # init_kv_cache caps at window: verify ring is actually in play
+    small = model.init_cache(1, 32)
+    assert small["segments"][0]["k"].shape[2] == window
+
+    # reference: full attention with explicit window mask, via forward
+    ref_logits = model.forward(params, batch)
+
+    # ring path: prefill 8, then decode tokens 8..11 step by step
+    cache = model.init_cache(1, 32)
+    lg, cache = model.prefill(params, prefill_inputs(cfg, batch,
+                                                     slice(0, 8)), cache)
+    np.testing.assert_allclose(np.asarray(lg),
+                               np.asarray(ref_logits[:, 7]),
+                               atol=2e-5, rtol=1e-4)
+    for i in range(8, 12):
+        tok = batch["tokens"][:, i:i + 1]
+        lg, cache = model.decode_step(params, cache, tok, i)
+        np.testing.assert_allclose(np.asarray(lg),
+                                   np.asarray(ref_logits[:, i]),
+                                   atol=2e-5, rtol=1e-4)
+
+
+def test_windowed_prefill_resume_wraps_correctly():
+    """Resume across a ring boundary: prefill 10, resume 8 more with
+    window 8 -> equals one 18-token windowed prefill."""
+    cfg = get_config("qwen3-4b").reduced().replace(window=8)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    batch = make_batch(cfg, B=1, S=18)
+
+    c_full = model.init_cache(1, 24)
+    ref, c_full = model.prefill(params, prefill_inputs(cfg, batch), c_full)
+
+    c = model.init_cache(1, 24)
+    _, c = model.prefill(params, prefill_inputs(cfg, batch, slice(0, 10)),
+                         c)
+    got, c = model.prefill(params, prefill_inputs(cfg, batch,
+                                                  slice(10, 18)),
+                           c, start_pos=10, resume=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=2e-5, rtol=1e-4)
+    # ring contents identical too
+    np.testing.assert_allclose(
+        np.asarray(c["segments"][0]["k"]),
+        np.asarray(c_full["segments"][0]["k"]), atol=2e-5, rtol=1e-4)
