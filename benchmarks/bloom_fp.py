@@ -19,7 +19,6 @@ def main():
 
     # expected Case-1 TTFT penalty = fp * (wasted GET round trip)
     w = make_world("low")
-    from repro.core.sizing import state_bytes
     wasted = w.net.transfer_time(256)              # miss response is tiny
     paper_penalty = 0.86 * 0.01                    # paper's own estimate
     lines = [csv_line(

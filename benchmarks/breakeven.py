@@ -9,7 +9,6 @@ device speed, and place every assigned architecture on the map (MLA's
 compact latent cache vs dense GQA vs SSM constant state)."""
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import csv_line
 from repro.configs import get_config

@@ -7,8 +7,7 @@ import numpy as np
 
 from benchmarks.common import csv_line, make_world
 from repro.config import CacheConfig
-from repro.core import EdgeClient, state_io
-from repro.core.keys import model_meta
+from repro.core import EdgeClient
 from repro.core.transport import InProcTransport
 from repro.serving.engine import InferenceEngine
 from repro.data import MMLU_DOMAINS

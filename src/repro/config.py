@@ -245,8 +245,11 @@ class CacheConfig:
     """Distributed prompt cache configuration (paper §3-§4)."""
     bloom_capacity: int = 1_000_000   # paper: 1M entries
     bloom_fp_rate: float = 0.01       # paper: 1% target FP ratio
-    compress: bool = True             # zstd state blobs (beyond-paper)
+    compress: bool = True             # compressed state blobs (beyond-paper)
     compress_level: int = 1
+    # blob codec: 'auto' picks zstd when the optional [edge] extra is
+    # installed and falls back to stdlib zlib otherwise
+    compress_codec: str = "auto"
     quantize: bool = False            # int8 KV blobs (beyond-paper)
     max_ranges: int = 4               # prompt ranges registered per upload
     range_stride: int = 0             # >0: also register every k tokens

@@ -2,7 +2,8 @@
 
 Public API:
     BloomFilter, Catalog, PromptKey, PromptSegments,
-    CacheServer, EdgeClient, SimNetwork, SimClock, DevicePerfModel
+    CacheServer, EdgeClient, SimNetwork, SimClock, DevicePerfModel,
+    SessionPool, FetchBroker
 """
 from repro.core.bloom import BloomFilter  # noqa: F401
 from repro.core.catalog import Catalog  # noqa: F401
@@ -12,3 +13,4 @@ from repro.core.netsim import SimClock, SimNetwork  # noqa: F401
 from repro.core.server import CacheServer  # noqa: F401
 from repro.core.client import EdgeClient  # noqa: F401
 from repro.core.perfmodel import DevicePerfModel  # noqa: F401
+from repro.core.session_pool import FetchBroker, SessionPool  # noqa: F401

@@ -3,7 +3,6 @@
 master asynchronously (off the request's critical path)."""
 from __future__ import annotations
 
-from typing import Optional
 
 from repro.config import CacheConfig
 from repro.core.bloom import BloomFilter

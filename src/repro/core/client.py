@@ -38,7 +38,8 @@ class EdgeClient:
                  cache_cfg: CacheConfig = CacheConfig(),
                  perf: Optional[DevicePerfModel] = None,
                  catalog: Optional[Catalog] = None,
-                 use_catalog: bool = True, perf_cfg=None):
+                 use_catalog: bool = True, perf_cfg=None,
+                 broker=None, overlap: bool = False):
         self.name = name
         self.engine = engine
         self.transport = transport
@@ -49,6 +50,11 @@ class EdgeClient:
         self.perf_cfg = perf_cfg or engine.model.cfg
         self.catalog = catalog or Catalog(cache_cfg)
         self.use_catalog = use_catalog
+        # cross-session fetch dedup + shared blob adoption (SessionPool)
+        self.broker = broker
+        # model the blob transfer as layer-streamed so the partial-hit
+        # suffix prefill overlaps the download (sim accounting only)
+        self.overlap = overlap
         self.meta = model_meta(engine.model.cfg,
                                np.dtype(engine.cache_dtype).name
                                if not hasattr(engine.cache_dtype, "name")
@@ -90,29 +96,34 @@ class EdgeClient:
                           if k.n_tokens >= self.cache_cfg.min_match_tokens]
 
         matched, false_pos, down_bytes = 0, False, 0
-        state = None
+        state, shared, hit_dl_sim, extra_overlap = None, False, 0.0, 0.0
         emulated = self.perf_cfg is not self.engine.model.cfg
         for cand in candidates:         # longest first
-            resp, dt, nb = self.transport.request("get",
-                                                  {"key": cand.digest})
+            resp, dt, nb, was_shared, template = self._fetch(cand)
+            dl = 0.0
             if self.clock is not None:
-                if emulated:
+                if was_shared:
+                    dl = 0.0         # piggybacks on the deduped transfer
+                elif emulated:
                     from repro.core.sizing import state_bytes
                     net = self.transport.net
                     full = (resp.get("ok") and resp.get("blob")) or False
                     nb_full = state_bytes(cfg, cand.n_tokens,
                                           with_logits=bool(full))
-                    sim.redis += net.transfer_time(nb_full if full
-                                                   else 256)
+                    dl = net.transfer_time(nb_full if full else 256)
                 else:
-                    sim.redis += dt
+                    dl = dt
+                sim.redis += dl
             else:
                 wall.redis += dt
             if resp.get("ok") and resp.get("blob"):
                 blob = resp["blob"]
-                down_bytes = len(blob)
+                shared = was_shared
+                hit_dl_sim = dl
+                down_bytes = 0 if was_shared else len(blob)
                 payload = state_io.parse_state(blob, self.meta)
-                template = self.engine.new_cache()
+                if template is None:
+                    template = self.engine.new_cache()
                 cache, n_eff, logits = state_io.restore_state(payload,
                                                               template)
                 matched = cand.n_tokens
@@ -125,7 +136,6 @@ class EdgeClient:
         if matched == n and state is not None and state[2] is not None:
             cache, n_eff, logits = state
             st = self.engine.adopt(cache, n, logits)
-            case_suffix = 0
         elif matched > 0 and state is not None:
             cache, n_eff, logits = state
             resume_from = matched if state[2] is not None else matched - 1
@@ -134,15 +144,23 @@ class EdgeClient:
             st = self.engine.resume({"tokens": suffix}, cache, resume_from)
             wall.p_decode += st.timings["prefill_wall"]
             if self.perf:
-                sim.p_decode += self.perf.time_prefill(cfg, n - resume_from)
-            case_suffix = n - resume_from
+                t_suffix = self.perf.time_prefill(cfg, n - resume_from)
+                sim.p_decode += t_suffix
+                if self.overlap and hit_dl_sim > 0:
+                    # layer-streamed transfer: the blob's leaves arrive
+                    # per layer, so layer l of the suffix prefill can run
+                    # once layers <= l are in — the download and the
+                    # suffix compute pipeline, and only the un-hidden
+                    # remainder of the transfer stays on the TTFT path.
+                    hidden = min(hit_dl_sim, t_suffix)
+                    sim.redis -= hidden
+                    extra_overlap = hidden
         else:
             tokens = np.asarray(prompt.token_ids, np.int32)[None]
             st = self.engine.start({"tokens": tokens})
             wall.p_decode += st.timings["prefill_wall"]
             if self.perf:
                 sim.p_decode += self.perf.time_prefill(cfg, n)
-            case_suffix = n
             if upload_on_miss:
                 up = self._upload_ranges(prompt, keys, st)
             else:
@@ -157,13 +175,32 @@ class EdgeClient:
             sim.sample = self.perf.time_sample(n_out)
 
         case = self._case_of(prompt, matched)
-        return InferResult(
+        res = InferResult(
             case=case, matched_tokens=matched, prompt_tokens=n,
             output_tokens=list(np.asarray(out)[0]),
             sim=sim, wall=wall,
             blob_bytes_down=down_bytes,
             blob_bytes_up=(up if (matched == 0 and upload_on_miss) else 0),
-            false_positive=false_pos and matched == 0)
+            false_positive=false_pos and matched == 0,
+            shared_fetch=shared)
+        if extra_overlap:
+            res.extra["overlap_hidden_s"] = extra_overlap
+        return res
+
+    # ------------------------------------------------------------------
+    def _fetch(self, cand: PromptKey):
+        """GET one candidate blob. Returns (resp, dt, nbytes, shared,
+        restore_template|None). With a FetchBroker, concurrent requests
+        for the same key are deduplicated and the restore-target cache
+        template is allocated while the blob is on the wire."""
+        if self.broker is None:
+            resp, dt, nb = self.transport.request("get",
+                                                  {"key": cand.digest})
+            return resp, dt, nb, False, None
+        return self.broker.fetch(
+            cand.digest,
+            lambda: self.transport.request("get", {"key": cand.digest}),
+            prep=self.engine.new_cache)
 
     # ------------------------------------------------------------------
     def _upload_ranges(self, prompt: PromptSegments,
@@ -183,7 +220,8 @@ class EdgeClient:
                 st.cache, n_eff, self.meta, logits=logits,
                 compress=self.cache_cfg.compress,
                 level=self.cache_cfg.compress_level,
-                quantize=self.cache_cfg.quantize)
+                quantize=self.cache_cfg.quantize,
+                codec=self.cache_cfg.compress_codec)
             self.transport.request("put", {"key": k.digest, "blob": blob},
                                    advance_clock=False)
             self.catalog.register(k.digest)

@@ -1,8 +1,9 @@
-"""Latency accounting in the paper's Table-3 vocabulary."""
+"""Latency accounting in the paper's Table-3 vocabulary, plus the
+serving layer's per-request and aggregate (percentile) statistics."""
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict
+from typing import Dict, List, Sequence
 
 
 COMPONENTS = ("token", "bloom", "p_decode", "redis", "r_decode", "sample")
@@ -43,4 +44,82 @@ class InferResult:
     blob_bytes_down: int = 0
     blob_bytes_up: int = 0
     false_positive: bool = False
+    shared_fetch: bool = False     # blob adopted from a deduped in-flight GET
     extra: Dict[str, float] = field(default_factory=dict)
+
+
+# ---------------------------------------------------------------------------
+# serving-layer statistics (multi-request)
+# ---------------------------------------------------------------------------
+
+def percentile(xs: Sequence[float], q: float) -> float:
+    """Linear-interpolated percentile; 0.0 on empty input."""
+    if not len(xs):
+        return 0.0
+    import numpy as np
+    return float(np.percentile(np.asarray(xs, float), q))
+
+
+@dataclass
+class RequestStats:
+    """Wall-clock accounting of one request through the Scheduler."""
+    req_id: int
+    prompt_tokens: int
+    output_tokens: List[int] = field(default_factory=list)
+    submit_t: float = 0.0
+    admit_t: float = 0.0           # when a slot was allocated (prefill start)
+    first_token_t: float = 0.0
+    finish_t: float = 0.0
+    finish_reason: str = ""        # "eos" | "length"
+
+    @property
+    def ttft(self) -> float:
+        return self.first_token_t - self.submit_t
+
+    @property
+    def queue_wait(self) -> float:
+        return self.admit_t - self.submit_t
+
+    @property
+    def latency(self) -> float:
+        return self.finish_t - self.submit_t
+
+    @property
+    def n_out(self) -> int:
+        return len(self.output_tokens)
+
+
+@dataclass
+class ServingReport:
+    """Aggregate over a batch of completed requests."""
+    n_requests: int
+    total_output_tokens: int
+    wall_s: float
+    throughput_tok_s: float        # aggregate generated tokens / wall
+    ttft_p50: float
+    ttft_p90: float
+    ttft_p99: float
+    latency_p50: float
+    latency_p99: float
+    queue_wait_p50: float
+
+    @classmethod
+    def from_requests(cls, reqs: Sequence[RequestStats],
+                      wall_s: float) -> "ServingReport":
+        ttfts = [r.ttft for r in reqs]
+        lats = [r.latency for r in reqs]
+        waits = [r.queue_wait for r in reqs]
+        total = sum(r.n_out for r in reqs)
+        return cls(
+            n_requests=len(reqs),
+            total_output_tokens=total,
+            wall_s=wall_s,
+            throughput_tok_s=total / wall_s if wall_s > 0 else 0.0,
+            ttft_p50=percentile(ttfts, 50), ttft_p90=percentile(ttfts, 90),
+            ttft_p99=percentile(ttfts, 99),
+            latency_p50=percentile(lats, 50),
+            latency_p99=percentile(lats, 99),
+            queue_wait_p50=percentile(waits, 50))
+
+    def as_dict(self) -> Dict[str, float]:
+        return dict(self.__dict__)

@@ -6,7 +6,7 @@ effective over 2.4 GHz Wi-Fi 4).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 class SimClock:

@@ -15,7 +15,7 @@ The class is generic over any boundary list, so other prompt templates
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import List, Sequence
 
 from repro.core.keys import PromptKey

@@ -1,0 +1,168 @@
+"""Concurrent multi-session serving against one cache server.
+
+``SessionPool`` runs N ``EdgeClient`` sessions (threads) that share one
+process/device — the "several apps on one edge node" scenario. Two
+cross-session optimizations live here:
+
+* **In-flight fetch dedup** (``FetchBroker``): when several sessions
+  want the same prompt-cache prefix at once (the common case — they
+  share the instruction/examples prefix), only the *first* issues the
+  GET; the rest join the in-flight transfer and adopt the same blob.
+  One download, N adoptions. A small LRU of recently fetched blobs
+  extends the same sharing across sessions that arrive a moment later.
+
+* **Download/compute overlap**: while the blob is on the wire the
+  session allocates the restore-target cache template (a real device
+  allocation on the wall-clock path), and — in the *sim* accounting —
+  the partial-hit suffix prefill is modeled as layer-streamed against
+  the transfer: the blob's leaves are per-layer, so layer l of the
+  suffix can start once layers <= l have arrived; total time is
+  max(transfer, prefill) + a one-layer residue, which we account as the
+  transfer's un-hidden remainder (see EdgeClient.infer).
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, List, Optional, Sequence, Tuple
+
+from repro.config import CacheConfig
+from repro.core.catalog import Catalog
+from repro.core.client import EdgeClient
+from repro.core.metrics import InferResult
+from repro.core.netsim import SimClock, SimNetwork
+from repro.core.server import CacheServer
+from repro.core.transport import InProcTransport
+
+
+class _Inflight:
+    def __init__(self):
+        self.event = threading.Event()
+        self.result = None            # (resp, dt, nbytes)
+
+
+class FetchBroker:
+    """Deduplicates concurrent blob GETs across sessions.
+
+    ``fetch(key, issue, prep)`` returns ``(resp, dt, nbytes, shared)``:
+      * leader (first caller for ``key``): runs ``issue()`` on a helper
+        thread, runs ``prep()`` (restore-template allocation etc.) while
+        the transfer is in flight, then publishes the result;
+      * followers: wait on the in-flight transfer and share its blob —
+        ``shared=True``, zero additional bytes on the wire;
+      * recently completed fetches are served from a small LRU blob
+        cache, so "same prefix, a moment later" also costs zero GETs.
+    Failed GETs (Bloom false positives) are never cached.
+    """
+
+    def __init__(self, cache_entries: int = 32):
+        self.lock = threading.Lock()
+        self.inflight = {}
+        self.blob_cache: "OrderedDict[bytes, dict]" = OrderedDict()
+        self.cache_entries = cache_entries
+        self.stats = {"issued": 0, "joined": 0, "cache_hits": 0}
+
+    def fetch(self, key: bytes, issue: Callable[[], Tuple[dict, float, int]],
+              prep: Optional[Callable[[], object]] = None):
+        with self.lock:
+            cached = self.blob_cache.get(key)
+            if cached is not None:
+                self.blob_cache.move_to_end(key)
+                self.stats["cache_hits"] += 1
+            entry = self.inflight.get(key)
+            leader = cached is None and entry is None
+            if leader:
+                entry = self.inflight[key] = _Inflight()
+                self.stats["issued"] += 1
+            elif cached is None:
+                self.stats["joined"] += 1
+        if cached is not None:
+            return cached, 0.0, 0, True, (prep() if prep else None)
+        if not leader:
+            # overlap for followers too: prep while the leader's transfer
+            # completes
+            prepped = prep() if prep else None
+            entry.event.wait()
+            resp, _dt, _nb = entry.result
+            return resp, 0.0, 0, True, prepped
+        # leader: transfer on a helper thread, prep concurrently
+        worker = threading.Thread(target=self._issue, args=(entry, issue),
+                                  daemon=True)
+        worker.start()
+        prepped = prep() if prep else None
+        worker.join()
+        resp, dt, nb = entry.result
+        with self.lock:
+            del self.inflight[key]
+            if resp.get("ok") and resp.get("blob"):
+                self.blob_cache[key] = resp
+                while len(self.blob_cache) > self.cache_entries:
+                    self.blob_cache.popitem(last=False)
+        return resp, dt, nb, False, prepped
+
+    @staticmethod
+    def _issue(entry: _Inflight, issue) -> None:
+        try:
+            entry.result = issue()
+        except Exception as e:           # surface transport errors as misses
+            entry.result = ({"ok": False, "error": repr(e)}, 0.0, 0)
+        finally:
+            entry.event.set()
+
+
+class SessionPool:
+    """N concurrent cache-sharing sessions over one engine + one server.
+
+    Every session is a full ``EdgeClient`` (own local catalog, own
+    simulated clock) sharing the engine, the server, and a
+    ``FetchBroker``. ``run(jobs)`` executes the jobs concurrently
+    (session i takes jobs i, i+N, ...) and returns results in job order.
+    """
+
+    def __init__(self, server: CacheServer, engine, n_sessions: int = 2,
+                 cache_cfg: CacheConfig = CacheConfig(), net=None,
+                 perf=None, perf_cfg=None, overlap: bool = True,
+                 broker: Optional[FetchBroker] = None):
+        self.server = server
+        self.engine = engine
+        self.net = net or SimNetwork()
+        self.broker = broker or FetchBroker()
+        self.sessions: List[EdgeClient] = []
+        for i in range(n_sessions):
+            tr = InProcTransport(server, self.net, SimClock())
+            self.sessions.append(EdgeClient(
+                f"session{i}", engine, tr, cache_cfg, perf=perf,
+                catalog=Catalog(cache_cfg), perf_cfg=perf_cfg,
+                broker=self.broker, overlap=overlap))
+
+    def sync_catalogs(self) -> None:
+        for s in self.sessions:
+            s.sync_catalog()
+
+    def run(self, jobs: Sequence, max_new_tokens: int = 8,
+            **infer_kw) -> List[InferResult]:
+        """jobs: PromptSegments (or (session_idx, PromptSegments) pairs
+        for explicit placement). Returns InferResults in job order."""
+        n = len(self.sessions)
+        placed = []
+        for j, job in enumerate(jobs):
+            if isinstance(job, tuple):
+                if not 0 <= job[0] < n:
+                    raise ValueError(
+                        f"job {j} placed on session {job[0]} but the pool "
+                        f"has {n} sessions")
+                placed.append(job)
+            else:
+                placed.append((j % n, job))
+        results: List[Optional[InferResult]] = [None] * len(placed)
+
+        def run_session(si: int):
+            for j, (sj, prompt) in enumerate(placed):
+                if sj == si:
+                    results[j] = self.sessions[si].infer(
+                        prompt, max_new_tokens=max_new_tokens, **infer_kw)
+
+        with ThreadPoolExecutor(max_workers=n) as ex:
+            list(ex.map(run_session, range(n)))
+        return results

@@ -3,7 +3,11 @@
 A *state blob* is the transferable artifact of the paper: the per-layer
 KV/latent/SSM cache truncated to the prompt prefix, plus the last-token
 logits (so a full hit needs no model execution at all), plus integrity
-metadata. Format: msgpack (+ optional zstd).
+metadata. Format: msgpack + optional compression, with a 3-byte codec
+tag in the header (``ZST`` zstandard / ``ZLB`` zlib / ``RAW`` none).
+``zstandard`` is an optional dependency (the ``[edge]`` extra): when it
+is absent we fall back to the stdlib ``zlib`` codec, so the core package
+stays importable on a bare interpreter.
 
 Sequence-sliceable leaves (``k``, ``v``, ``ckv``, ``krope``) are truncated
 to the prefix length; state-like leaves (``conv``, ``ssd``, ``cross_k``,
@@ -14,11 +18,16 @@ resumes at the same absolute offset.
 from __future__ import annotations
 
 import hashlib
+import zlib
 from typing import Any, Dict, Optional, Tuple
 
 import msgpack
 import numpy as np
-import zstandard as zstd
+
+try:                                   # optional [edge] extra
+    import zstandard as zstd
+except ImportError:                    # pragma: no cover - env dependent
+    zstd = None
 
 import jax
 import jax.numpy as jnp
@@ -56,12 +65,47 @@ def _path_str(path) -> str:
                     for p in path)
 
 
+def default_codec() -> str:
+    """Best available compression codec for state blobs."""
+    return "zstd" if zstd is not None else "zlib"
+
+
+def _compress(raw: bytes, codec: str, level: int) -> bytes:
+    if codec == "auto":
+        codec = default_codec()
+    if codec == "zstd":
+        if zstd is None:
+            raise RuntimeError(
+                "zstd codec requested but zstandard is not installed "
+                "(pip install '.[edge]'); use codec='zlib' or 'auto'")
+        return b"ZST" + zstd.ZstdCompressor(level=level).compress(raw)
+    if codec == "zlib":
+        return b"ZLB" + zlib.compress(raw, min(max(level, 1), 9))
+    raise ValueError(f"unknown codec {codec!r}")
+
+
+def _decompress(blob: bytes) -> bytes:
+    tag, body = blob[:3], blob[3:]
+    if tag == b"ZST":
+        if zstd is None:
+            raise RuntimeError(
+                "blob is zstd-compressed but zstandard is not installed "
+                "(pip install '.[edge]')")
+        return zstd.ZstdDecompressor().decompress(body)
+    if tag == b"ZLB":
+        return zlib.decompress(body)
+    if tag == b"RAW":
+        return body
+    raise ValueError("bad state blob tag")
+
+
 def extract_state(cache, n_eff: int, meta: bytes,
                   logits: Optional[np.ndarray] = None,
                   compress: bool = True, level: int = 1,
-                  quantize: bool = False) -> bytes:
+                  quantize: bool = False, codec: str = "auto") -> bytes:
     """Serialize ``cache`` truncated to ``n_eff`` positions.
-    ``quantize``: int8 per-channel KV quantization (beyond-paper)."""
+    ``quantize``: int8 per-channel KV quantization (beyond-paper).
+    ``codec``: 'auto' (zstd if available, else zlib) | 'zstd' | 'zlib'."""
     leaves = jax.tree_util.tree_flatten_with_path(cache)[0]
     out = []
     for path, leaf in leaves:
@@ -96,16 +140,12 @@ def extract_state(cache, n_eff: int, meta: bytes,
     }
     raw = msgpack.packb(payload, use_bin_type=True)
     if compress:
-        return b"ZST" + zstd.ZstdCompressor(level=level).compress(raw)
+        return _compress(raw, codec, level)
     return b"RAW" + raw
 
 
 def parse_state(blob: bytes, meta: bytes) -> Dict[str, Any]:
-    tag, body = blob[:3], blob[3:]
-    if tag == b"ZST":
-        body = zstd.ZstdDecompressor().decompress(body)
-    elif tag != b"RAW":
-        raise ValueError("bad state blob tag")
+    body = _decompress(blob)
     payload = msgpack.unpackb(body, raw=False)
     if payload["version"] != FORMAT_VERSION:
         raise ValueError("state blob version mismatch")

@@ -24,11 +24,9 @@ import json
 import time
 import traceback
 
-import jax
-import jax.numpy as jnp
 
 from repro.config import SHAPES
-from repro.configs import ARCHS, get_config
+from repro.configs import get_config
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import apply_shape_policy, build_step
 from repro.roofline.analysis import collective_bytes, cost_summary

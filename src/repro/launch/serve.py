@@ -13,7 +13,6 @@ import argparse
 import time
 
 import jax
-import numpy as np
 
 from repro.config import CacheConfig
 from repro.configs import get_config

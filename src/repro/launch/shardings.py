@@ -15,7 +15,7 @@ Rules are name-based over the param tree paths; stacked segment params
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Tuple
 
 import jax
 import numpy as np

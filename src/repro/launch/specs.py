@@ -6,7 +6,7 @@ jitted step function, its argument SDS tree and the matching in_shardings.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

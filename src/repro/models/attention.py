@@ -204,7 +204,6 @@ def attn_forward(p, cfg, x, positions, *, window=None, mesh=None):
     """Training / no-cache forward (full causal self-attention)."""
     q, k, v = project_qkv(p, cfg, x, positions)
     q, k, v = (constrain_bh(t, mesh) for t in (q, k, v))
-    S = x.shape[1]
     pos1d = positions[0, 0] if cfg.rope == "mrope" else positions[0]
     o = attend(q, k, v, pos1d, pos1d, window=window or cfg.window)
     return out_proj(p, cfg, constrain_bh(o, mesh))

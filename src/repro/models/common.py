@@ -8,6 +8,28 @@ import jax
 import jax.numpy as jnp
 
 # ---------------------------------------------------------------------------
+# scheduling barrier
+# ---------------------------------------------------------------------------
+
+@jax.custom_jvp
+def opt_barrier(x):
+    """``lax.optimization_barrier`` that is transparent to autodiff.
+
+    The barrier stops XLA hoisting per-layer weight converts/regathers out
+    of layer scans (a forward-pass scheduling concern only); the installed
+    jax has no differentiation rule for the primitive, so we declare the
+    identity JVP here and keep the barrier out of the backward graph.
+    """
+    return jax.lax.optimization_barrier(x)
+
+
+@opt_barrier.defjvp
+def _opt_barrier_jvp(primals, tangents):
+    (x,), (t,) = primals, tangents
+    return opt_barrier(x), t
+
+
+# ---------------------------------------------------------------------------
 # initializers
 # ---------------------------------------------------------------------------
 

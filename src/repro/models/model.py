@@ -12,7 +12,7 @@ serializes it).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -20,7 +20,8 @@ import jax.numpy as jnp
 from repro.config import ModelConfig
 from repro.models import encdec as ed
 from repro.models import transformer as tf
-from repro.models.common import (apply_norm, embed_init, init_norm)
+from repro.models.common import (apply_norm, embed_init, init_norm,
+                                 opt_barrier)
 
 
 def padded_vocab(vocab: int) -> int:
@@ -161,7 +162,7 @@ class Model:
             enc = ed.add_sinusoidal(batch["frames"].astype(self.dtype))
 
             def ebody(x, lp):
-                lp = jax.lax.optimization_barrier(lp)
+                lp = opt_barrier(lp)
                 return ed.enc_layer(lp, cfg, x, mesh=self.mesh), None
             if self.remat:
                 ebody = jax.checkpoint(ebody)
@@ -174,7 +175,7 @@ class Model:
             positions = jnp.broadcast_to(jnp.arange(S), (B, S))
 
             def dbody(x, lp):
-                lp = jax.lax.optimization_barrier(lp)
+                lp = opt_barrier(lp)
                 return ed.dec_layer_forward(lp, cfg, x, positions, enc,
                                             mesh=self.mesh), None
             if self.remat:
@@ -337,7 +338,7 @@ class Model:
 
         def dbody(x, xs):
             lp, lc = xs
-            lp = jax.lax.optimization_barrier(lp)
+            lp = opt_barrier(lp)
             y, nc = ed.dec_layer_prefill(lp, cfg, x, positions, lc,
                                          start_pos, enc_out=enc,
                                          mesh=self.mesh)
@@ -358,7 +359,7 @@ class Model:
 
             def dbody(x1, xs):
                 lp, lc = xs
-                lp = jax.lax.optimization_barrier(lp)
+                lp = opt_barrier(lp)
                 y, nc = ed.dec_layer_decode(lp, cfg, x1, eff_pos, lc,
                                             mesh=self.mesh)
                 return y, nc

@@ -20,7 +20,15 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.models.common import activation, dense_init
+from repro.models.common import activation, dense_init, opt_barrier
+
+# shard_map moved to the jax namespace (and check_rep became check_vma)
+# after the pinned jax floor; support both spellings.
+if hasattr(jax, "shard_map"):
+    _shard_map = partial(jax.shard_map, check_vma=False)
+else:                                  # pragma: no cover - version dependent
+    from jax.experimental.shard_map import shard_map as _experimental_sm
+    _shard_map = partial(_experimental_sm, check_rep=False)
 
 # tokens processed per inner MoE chunk on each shard (bounds transients)
 _TOKEN_CHUNK = 8192
@@ -158,17 +166,16 @@ def moe_ep(p, cfg, x, mesh, *, ep_axis: str = "model",
     espec = P(ep_axis, None, None)
 
     @partial(
-        jax.shard_map, mesh=mesh,
+        _shard_map, mesh=mesh,
         in_specs=(xspec, P(None, None), espec, espec,
                   espec if w_gate is not None else P(),
                   P(None, ep_axis) if mo.n_shared and cfg.gated_mlp else P(),
                   P(None, ep_axis) if mo.n_shared else P(),
                   P(ep_axis, None) if mo.n_shared else P()),
         out_specs=(xspec, P()),
-        check_vma=False,
     )
     def f(xl, router, w_up, w_down, w_gate, ws_gate, ws_up, ws_down):
-        w_up, w_down, w_gate = jax.lax.optimization_barrier(
+        w_up, w_down, w_gate = opt_barrier(
             (w_up, w_down, w_gate))
         b, S, D = xl.shape
         xf = xl.reshape(-1, D)
@@ -253,16 +260,15 @@ def moe_ep_resident(p, cfg, x, mesh):
     dspec = P(ep_axes, f_axis, None)
 
     @partial(
-        jax.shard_map, mesh=mesh,
+        _shard_map, mesh=mesh,
         in_specs=(P(None, None, None), P(None, None), espec, dspec,
                   espec if cfg.gated_mlp else P()),
         out_specs=(P(None, None, None), P()),
-        check_vma=False,
     )
     def f(xl, router, w_up, w_down, w_gate):
         # pin the per-layer weight slices: stops XLA converting/hoisting
         # the full [L,E,D,F] stack to f32 outside the layer scan
-        w_up, w_down, w_gate = jax.lax.optimization_barrier(
+        w_up, w_down, w_gate = opt_barrier(
             (w_up, w_down, w_gate))
         b, S, D = xl.shape
         xf = xl.reshape(-1, D)

@@ -8,8 +8,7 @@ Heterogeneous stacks (deepseek-v3: 3 dense + 58 MoE layers) are expressed as
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Callable, List, NamedTuple, Optional, Tuple
+from typing import List, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -19,7 +18,7 @@ from repro.models import hybrid as hyb
 from repro.models import mla as mla_mod
 from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
-from repro.models.common import init_norm, apply_norm
+from repro.models.common import init_norm, apply_norm, opt_barrier
 from repro.models.mlp import init_mlp, mlp_forward
 
 
@@ -181,7 +180,7 @@ def stack_forward(sp, cfg, seg, x, positions, mesh=None, window=None,
             x = cfn(x)
         # barrier: stops XLA hoisting per-layer weight converts/regathers
         # out of the loop (observed: full [L,E,D,F] f32 stacks, 50+ GiB)
-        lp = jax.lax.optimization_barrier(lp)
+        lp = opt_barrier(lp)
         y, a = layer_forward(lp, cfg, seg, x, positions, mesh, window)
         return (y, aux + a), None
     if remat:
@@ -197,7 +196,7 @@ def stack_prefill(sp, cfg, seg, x, positions, cache, start_pos, mesh=None,
         if cfn is not None:
             x = cfn(x)
         lp, lc = xs
-        lp = jax.lax.optimization_barrier(lp)
+        lp = opt_barrier(lp)
         y, nc, a = layer_prefill(lp, cfg, seg, x, positions, lc, start_pos,
                                  mesh, window)
         return (y, aux + a), nc
@@ -210,7 +209,7 @@ def stack_decode(sp, cfg, seg, x1, pos, cache, mesh=None, window=None,
                  unroll=False):
     def body(x1, xs):
         lp, lc = xs
-        lp = jax.lax.optimization_barrier(lp)
+        lp = opt_barrier(lp)
         y, nc = layer_decode(lp, cfg, seg, x1, pos, lc, mesh, window)
         return y, nc
     x1, new_cache = jax.lax.scan(body, x1, (sp, cache), unroll=unroll)

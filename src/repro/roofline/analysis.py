@@ -16,7 +16,7 @@ lowers unrolled L=1 / L=2 variants and solves cost(L) = a + b*L.
 from __future__ import annotations
 
 import re
-from typing import Dict, Optional
+from typing import Dict
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
@@ -55,7 +55,6 @@ def collective_bytes(hlo_text: str, per_kind: bool = False):
     for m in _DEF_RE.finditer(hlo_text):
         name, type_str, opname = m.group(1), m.group(2), m.group(3)
         sizes[name.lstrip("%")] = _type_bytes(type_str)
-        base = opname.rstrip("-start").rstrip("-done")
         for c in _COLLECTIVES:
             if opname == c or opname == c + "-start":
                 # operand list: text after '(' up to matching ')'

@@ -1,1 +1,4 @@
-from repro.serving.engine import InferenceEngine, EngineState  # noqa: F401
+from repro.serving.engine import (InferenceEngine, EngineState,  # noqa: F401
+                                  BatchedEngine)
+from repro.serving.scheduler import Request, Scheduler  # noqa: F401
+from repro.serving.sampler import greedy, temperature, make_sampler  # noqa: F401

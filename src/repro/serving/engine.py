@@ -1,12 +1,18 @@
-"""Single-replica inference engine: prefill / prefill-resume / decode.
+"""Inference engines: single-request and batched (continuous batching).
 
-The engine is the substrate the paper's EdgeClient drives. It exposes:
+``InferenceEngine`` is the substrate the paper's EdgeClient drives:
 
   * ``start(inputs)``                     — fresh prefill (Case 1, miss)
   * ``resume(suffix, cache, n_prefix)``   — continue from a downloaded
                                             prompt-cache prefix (Cases 2-4)
   * ``adopt(cache, n_tokens, logits)``    — full hit (Case 5): no compute
   * ``generate(state, n, sampler)``       — autoregressive decode loop
+
+``BatchedEngine`` generalizes it to a fixed pool of B cache *slots* with
+independent per-slot positions — the substrate of the continuous-batching
+``Scheduler`` (serving/scheduler.py). Per-slot positions are expressed by
+vmapping the single-row model calls over the cache's batch axis, so every
+slot decodes at its own offset in one fused device step.
 
 All model calls are jitted once per (shape bucket). Prefill inputs are
 padded to power-of-two buckets to bound recompilation.
@@ -16,7 +22,7 @@ from __future__ import annotations
 import time
 from dataclasses import dataclass, field
 from functools import partial
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -140,3 +146,177 @@ class InferenceEngine:
         st.timings["decode_tokens"] = len(out)
         st.tokens.extend(int(t[0]) for t in out)
         return np.stack(out, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# batched engine (continuous batching substrate)
+# ---------------------------------------------------------------------------
+
+class BatchedEngine:
+    """Fixed pool of ``batch_size`` cache slots with per-slot positions.
+
+    The model's ``decode_step``/``prefill`` take one *scalar* position for
+    the whole batch; continuous batching needs every slot at its own
+    offset. We get that by vmapping the single-row call over the cache's
+    batch axis (axis 1 of every ``[L, B, ...]`` leaf): each slot is
+    computed with B=1 semantics — numerically the path of a sequential
+    ``InferenceEngine`` run — but all slots execute as one fused device
+    step, which is where the aggregate-throughput win comes from
+    (benchmarks/serving_throughput.py).
+
+    Slot lifecycle (driven by the Scheduler):
+      ``prefill_slots``  — bucket-padded batched prefill of fresh prompts
+      ``resume_slot``    — single-row prefill from a downloaded prefix
+      ``adopt_slot``     — install a fully-restored state (full hit)
+      ``decode_batch``   — advance every active slot one token
+      ``free_slot``      — recycle on EOS/max-tokens (stale KV needs no
+                           scrub: position masks hide entries beyond the
+                           next request's written range)
+    """
+
+    def __init__(self, model, params, max_len: int, batch_size: int,
+                 cache_dtype=None):
+        if model.cfg.window and model.cfg.window < max_len:
+            # ring caches cannot take bucket padding (the rebuild would
+            # rotate junk in); prefill_slots falls back to per-row exact
+            # prefill for windowed models.
+            self._pad_prefill = False
+        else:
+            self._pad_prefill = True
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self.batch_size = batch_size
+        self.cache_dtype = cache_dtype or model.dtype
+        self.cache = model.init_cache(
+            batch_size, model.cache_len(max_len), self.cache_dtype)
+        self.pos = np.zeros(batch_size, np.int32)     # next token position
+        self._decode_b = jax.jit(jax.vmap(
+            self._decode_one, in_axes=(None, 1, 0, 0), out_axes=(0, 1)))
+        # fresh batched prefill: the per-row zero cache is materialized
+        # inside the jitted body (fused away by XLA) so the engine never
+        # holds a second pool-sized cache allocation
+        self._prefill_fresh_b = jax.jit(jax.vmap(
+            self._prefill_one_fresh, in_axes=(None, 0, 0, 0),
+            out_axes=(0, 1)))
+        self._prefill_1: Dict[bool, Any] = {}
+
+    # -- vmapped single-row bodies -------------------------------------
+    def _decode_one(self, p, c_row, tok, pos):
+        """c_row: cache with batch axis removed ([L, ...] leaves)."""
+        c = jax.tree.map(lambda a: jnp.expand_dims(a, 1), c_row)
+        logits, nc = self.model.decode_step(p, c, tok[None, None], pos)
+        return logits[0], jax.tree.map(lambda a: jnp.squeeze(a, 1), nc)
+
+    def _prefill_one_fresh(self, p, toks, start, last):
+        c = self.model.init_cache(1, self.model.cache_len(self.max_len),
+                                  self.cache_dtype)
+        logits, nc = self.model.prefill(p, {"tokens": toks[None]}, c,
+                                        start, last, resume=False)
+        return logits[0], jax.tree.map(lambda a: jnp.squeeze(a, 1), nc)
+
+    def _prefill_single(self, resume: bool):
+        if resume not in self._prefill_1:
+            self._prefill_1[resume] = jax.jit(
+                partial(self.model.prefill, resume=resume))
+        return self._prefill_1[resume]
+
+    # -- slot plumbing ---------------------------------------------------
+    def _scatter_rows(self, rows, slots: Sequence[int], n_rows: int):
+        """Write rows[:, :n_rows] of a batched cache into ``slots``."""
+        idx = jnp.asarray(np.asarray(slots[:n_rows], np.int32))
+        self.cache = jax.tree.map(
+            lambda big, new: big.at[:, idx].set(new[:, :n_rows]),
+            self.cache, rows)
+
+    def slot_cache(self, slot: int):
+        """A B=1 view of one slot's cache (for state_io extraction)."""
+        return jax.tree.map(lambda a: a[:, slot:slot + 1], self.cache)
+
+    def free_slot(self, slot: int) -> None:
+        self.pos[slot] = 0
+
+    def adopt_slot(self, slot: int, cache1, n_tokens: int) -> None:
+        """Install a restored B=1 cache (full prompt-cache hit)."""
+        idx = jnp.asarray([slot])
+        self.cache = jax.tree.map(
+            lambda big, row: big.at[:, idx].set(
+                row.astype(big.dtype) if row.dtype != big.dtype else row),
+            self.cache, cache1)
+        self.pos[slot] = n_tokens
+
+    # -- prefill ---------------------------------------------------------
+    def prefill_slots(self, slots: Sequence[int],
+                      token_rows: Sequence[np.ndarray]) -> np.ndarray:
+        """Bucket-padded batched prefill of fresh prompts into ``slots``.
+
+        Rows are edge-padded to one shared power-of-two bucket and the
+        batch dim is padded to ``batch_size`` (so compile count is bounded
+        by the number of buckets, not admission patterns). Returns the
+        true last-token logits [len(slots), V].
+        """
+        k = len(slots)
+        assert k and k <= self.batch_size
+        lens = [int(t.shape[-1]) for t in token_rows]
+        if not self._pad_prefill:
+            return np.concatenate(
+                [self.prefill_slot(s, t) for s, t in zip(slots, token_rows)])
+        bucket = min(_bucket(max(lens)), self.max_len)
+        toks = np.zeros((self.batch_size, bucket), np.int32)
+        for i, t in enumerate(token_rows):
+            row = np.asarray(t, np.int32).reshape(-1)
+            toks[i, :len(row)] = row
+            toks[i, len(row):] = row[-1]          # edge pad
+        starts = np.zeros(self.batch_size, np.int32)
+        lasts = np.zeros(self.batch_size, np.int32)
+        lasts[:k] = np.asarray(lens, np.int32) - 1
+        logits, rows = self._prefill_fresh_b(
+            self.params, jnp.asarray(toks),
+            jnp.asarray(starts), jnp.asarray(lasts))
+        logits = np.asarray(jax.block_until_ready(logits))
+        self._scatter_rows(rows, list(slots), k)
+        for s, n in zip(slots, lens):
+            self.pos[s] = n
+        return logits[:k]
+
+    def prefill_slot(self, slot: int, tokens: np.ndarray,
+                     cache1=None, start_pos: int = 0) -> np.ndarray:
+        """Exact-length single-row prefill into ``slot``.
+
+        ``cache1``/``start_pos``: resume from a downloaded prefix state
+        (B=1 cache holding ``start_pos`` tokens). Returns logits [1, V].
+        """
+        resume = start_pos > 0
+        if cache1 is None:
+            cache1 = self.model.init_cache(
+                1, self.model.cache_len(self.max_len), self.cache_dtype)
+        toks = jnp.asarray(np.asarray(tokens, np.int32).reshape(1, -1))
+        n = toks.shape[1]
+        fn = self._prefill_single(resume)
+        logits, nc = fn(self.params, {"tokens": toks}, cache1,
+                        start_pos, n - 1)
+        logits = np.asarray(jax.block_until_ready(logits))
+        idx = jnp.asarray([slot])
+        self.cache = jax.tree.map(
+            lambda big, row: big.at[:, idx].set(
+                row.astype(big.dtype) if row.dtype != big.dtype else row),
+            self.cache, nc)
+        self.pos[slot] = start_pos + n
+        return logits
+
+    # -- decode ------------------------------------------------------------
+    def decode_batch(self, tokens: np.ndarray,
+                     active: Optional[np.ndarray] = None) -> np.ndarray:
+        """One decode step for the whole pool. ``tokens``: [B] int32 (pad
+        rows arbitrary); ``active``: [B] bool mask — inactive rows step at
+        position 0 and their (junk) writes are overwritten/masked on the
+        slot's next use. Returns logits [B, V]; advances active positions.
+        """
+        if active is None:
+            active = np.ones(self.batch_size, bool)
+        pos = np.where(active, self.pos, 0).astype(np.int32)
+        logits, self.cache = self._decode_b(
+            self.params, self.cache,
+            jnp.asarray(np.asarray(tokens, np.int32)), jnp.asarray(pos))
+        self.pos = np.where(active, self.pos + 1, self.pos).astype(np.int32)
+        return np.asarray(jax.block_until_ready(logits))

@@ -1,4 +1,10 @@
-"""Token samplers. The paper uses greedy sampling throughout."""
+"""Token samplers over batched logits [..., V].
+
+The paper uses greedy sampling throughout; ``temperature`` is the
+beyond-paper stochastic sampler. Both are fully vectorized over the
+batch dimension so the continuous-batching scheduler samples every slot
+in one call.
+"""
 from __future__ import annotations
 
 import numpy as np
@@ -10,15 +16,24 @@ def greedy(logits: np.ndarray, rng=None) -> np.ndarray:
 
 def temperature(logits: np.ndarray, rng: np.random.Generator,
                 temp: float = 0.7, top_k: int = 0) -> np.ndarray:
+    """Temperature (+ optional top-k) sampling via the Gumbel-max trick:
+    argmax(logits/T + Gumbel noise) draws exactly from softmax(logits/T),
+    with one vectorized pass instead of a per-row ``rng.choice`` loop."""
     x = np.asarray(logits, np.float64) / max(temp, 1e-6)
     if top_k:
-        kth = np.partition(x, -top_k, axis=-1)[..., -top_k:-top_k + 1]
+        kth = np.partition(x, -top_k, axis=-1)[..., -top_k, None]
         x = np.where(x < kth, -np.inf, x)
-    x = x - x.max(axis=-1, keepdims=True)
-    p = np.exp(x)
-    p /= p.sum(axis=-1, keepdims=True)
-    out = np.empty(x.shape[:-1], np.int32)
-    flat_p = p.reshape(-1, p.shape[-1])
-    for i, row in enumerate(flat_p):
-        out.reshape(-1)[i] = rng.choice(row.shape[-1], p=row)
-    return out
+    u = rng.random(x.shape)
+    g = -np.log(-np.log(np.clip(u, 1e-300, 1.0)))
+    return np.argmax(np.where(np.isfinite(x), x + g, -np.inf),
+                     axis=-1).astype(np.int32)
+
+
+def make_sampler(temp: float = 0.0, top_k: int = 0):
+    """Sampler factory: temp<=0 -> greedy, else temperature sampling."""
+    if temp <= 0:
+        return greedy
+
+    def sample(logits, rng):
+        return temperature(logits, rng, temp=temp, top_k=top_k)
+    return sample

@@ -1,0 +1,199 @@
+"""Continuous batching over a ``BatchedEngine`` slot pool.
+
+vLLM-style iteration-level scheduling, reduced to its core loop:
+
+  * a FIFO request queue feeds a fixed pool of B cache slots;
+  * admission is *prefill-before-decode*: whenever a slot is free and a
+    request is queued, the next iteration runs (bucket-padded, batched)
+    prefill for every admissible request before any decode step — new
+    requests reach their first token as early as possible;
+  * one ``decode_batch`` step then advances every active slot at its own
+    position (per-slot positions via the engine's vmapped decode);
+  * slots are recycled the moment a request finishes (EOS or
+    max-new-tokens), so the next queued request is admitted on the very
+    next iteration — the batch never drains to refill.
+
+The scheduler is single-threaded and deterministic: with a greedy
+sampler, outputs are token-identical to sequential ``InferenceEngine``
+runs (tests/test_scheduler.py asserts this).
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.metrics import RequestStats, ServingReport
+from repro.serving.engine import BatchedEngine
+from repro.serving.sampler import greedy
+
+
+@dataclass
+class Request:
+    """One generation request."""
+    tokens: np.ndarray                 # prompt token ids [n]
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    req_id: int = -1                   # assigned by submit()
+    # resume-from-prompt-cache entry points (optional, SessionPool path):
+    cache1: object = None              # restored B=1 cache prefix
+    n_prefix: int = 0                  # tokens held by cache1
+    prefix_logits: Optional[np.ndarray] = None   # full hit: [1, V]
+    stats: RequestStats = field(default=None)    # filled by the scheduler
+
+
+@dataclass
+class _Slot:
+    req: Optional[Request] = None
+
+    @property
+    def free(self) -> bool:
+        return self.req is None
+
+
+class Scheduler:
+    def __init__(self, engine: BatchedEngine, sampler: Callable = greedy,
+                 rng: Optional[np.random.Generator] = None):
+        self.engine = engine
+        self.sampler = sampler
+        self.rng = rng
+        self.queue: deque[Request] = deque()
+        self.slots = [_Slot() for _ in range(engine.batch_size)]
+        self._ids = itertools.count()
+        self.done: List[Request] = []
+        self._last_logits = np.zeros(
+            (engine.batch_size, 1), np.float32)     # per-slot, resized lazily
+        self.n_steps = 0                             # decode iterations run
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> int:
+        need = int(np.size(req.tokens)) + req.max_new_tokens
+        if need > self.engine.max_len:
+            raise ValueError(
+                f"request needs {need} cache positions (prompt "
+                f"{int(np.size(req.tokens))} + {req.max_new_tokens} new) "
+                f"but the engine was built with max_len="
+                f"{self.engine.max_len}")
+        if req.req_id < 0:
+            req.req_id = next(self._ids)
+        req.stats = RequestStats(req_id=req.req_id,
+                                 prompt_tokens=int(np.size(req.tokens)),
+                                 submit_t=time.perf_counter())
+        self.queue.append(req)
+        return req.req_id
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(not s.free for s in self.slots)
+
+    # ------------------------------------------------------------------
+    def _sample(self, logits: np.ndarray) -> np.ndarray:
+        return self.sampler(logits, self.rng)
+
+    def _emit(self, slot_i: int, token: int) -> None:
+        """Record one generated token; recycle the slot when finished."""
+        slot = self.slots[slot_i]
+        req = slot.req
+        if not req.stats.first_token_t:
+            req.stats.first_token_t = time.perf_counter()
+        req.stats.output_tokens.append(int(token))
+        finished = None
+        if req.eos_id is not None and token == req.eos_id:
+            finished = "eos"
+        elif len(req.stats.output_tokens) >= req.max_new_tokens:
+            finished = "length"
+        if finished:
+            req.stats.finish_t = time.perf_counter()
+            req.stats.finish_reason = finished
+            self.done.append(req)
+            slot.req = None
+            self.engine.free_slot(slot_i)
+
+    def _admit(self) -> None:
+        """Fill free slots from the queue (FIFO), prefill, emit first
+        tokens. Fresh prompts go through one bucket-padded batched
+        prefill; resume/adopt requests take the per-slot paths."""
+        fresh: List[int] = []
+        while self.queue and any(s.free for s in self.slots):
+            slot_i = next(i for i, s in enumerate(self.slots) if s.free)
+            req = self.queue.popleft()
+            self.slots[slot_i].req = req
+            req.stats.admit_t = time.perf_counter()
+            eng = self.engine
+            if req.prefix_logits is not None and req.cache1 is not None:
+                # full prompt-cache hit: zero prefill compute
+                eng.adopt_slot(slot_i, req.cache1,
+                               int(np.size(req.tokens)))
+                self._set_logits(slot_i, req.prefix_logits[0])
+            elif req.cache1 is not None:
+                # no stored logits: recompute at least the last prompt
+                # token (mirrors EdgeClient's matched-1 resume)
+                start = min(req.n_prefix, int(np.size(req.tokens)) - 1)
+                suffix = np.asarray(req.tokens, np.int32)[start:]
+                lg = eng.prefill_slot(slot_i, suffix, req.cache1, start)
+                self._set_logits(slot_i, lg[0])
+            else:
+                fresh.append(slot_i)
+        if fresh:
+            rows = [np.asarray(self.slots[i].req.tokens, np.int32)
+                    for i in fresh]
+            logits = self.engine.prefill_slots(fresh, rows)
+            for j, slot_i in enumerate(fresh):
+                self._set_logits(slot_i, logits[j])
+        # first token of every newly admitted request comes from its
+        # prefill (or adopted) logits
+        for slot_i in self._admitted_waiting_first_token():
+            tok = self._sample(self._last_logits[slot_i][None])[0]
+            self._emit(slot_i, int(tok))
+
+    def _set_logits(self, slot_i: int, row: np.ndarray) -> None:
+        if self._last_logits.shape[1] != row.shape[-1]:
+            self._last_logits = np.zeros(
+                (self.engine.batch_size, row.shape[-1]), np.float32)
+        self._last_logits[slot_i] = row
+
+    def _admitted_waiting_first_token(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots)
+                if not s.free and not s.req.stats.output_tokens]
+
+    def _decode_step(self) -> None:
+        active = np.array([not s.free for s in self.slots])
+        if not active.any():
+            return
+        tokens = np.zeros(self.engine.batch_size, np.int32)
+        for i, s in enumerate(self.slots):
+            if not s.free:
+                tokens[i] = s.req.stats.output_tokens[-1]
+        logits = self.engine.decode_batch(tokens, active)
+        self.n_steps += 1
+        sampled = self._sample(logits)
+        for i, s in enumerate(self.slots):
+            if not s.free:
+                self._set_logits(i, logits[i])
+                self._emit(i, int(sampled[i]))
+
+    # ------------------------------------------------------------------
+    def step(self) -> None:
+        """One scheduling iteration: admit (prefill) then decode."""
+        self._admit()
+        self._decode_step()
+
+    def run(self, requests: Optional[Sequence[Request]] = None
+            ) -> Dict[int, RequestStats]:
+        """Drain ``requests`` plus anything already queued; returns
+        {req_id: RequestStats} for every completed request."""
+        for r in (requests or []):
+            self.submit(r)
+        t0 = time.perf_counter()
+        while self.has_work:
+            self.step()
+        self.wall_s = time.perf_counter() - t0
+        return {r.req_id: r.stats for r in self.done}
+
+    def report(self) -> ServingReport:
+        return ServingReport.from_requests(
+            [r.stats for r in self.done], getattr(self, "wall_s", 0.0))

@@ -1,4 +1,9 @@
-"""Checkpointing: msgpack + zstd of a flattened pytree (offline, no orbax)."""
+"""Checkpointing: msgpack + compression of a flattened pytree (no orbax).
+
+Uses the shared codec-tagged framing from ``core/state_io`` (zstd when
+the optional ``[edge]`` extra is installed, stdlib zlib otherwise), so
+checkpoints stay readable/writable on a bare interpreter.
+"""
 from __future__ import annotations
 
 import os
@@ -6,10 +11,11 @@ from typing import Any, Tuple
 
 import msgpack
 import numpy as np
-import zstandard as zstd
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.state_io import _compress, _decompress
 
 
 def _paths(tree):
@@ -30,8 +36,8 @@ def save(path: str, tree: Any, step: int = 0) -> None:
             "data": np.ascontiguousarray(np.asarray(l)).tobytes(),
         } for k, l in zip(keys, leaves)],
     }
-    raw = zstd.ZstdCompressor(level=3).compress(
-        msgpack.packb(payload, use_bin_type=True))
+    raw = _compress(msgpack.packb(payload, use_bin_type=True),
+                    codec="auto", level=3)
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
         f.write(raw)
@@ -40,8 +46,14 @@ def save(path: str, tree: Any, step: int = 0) -> None:
 
 def load(path: str, template: Any) -> Tuple[Any, int]:
     with open(path, "rb") as f:
-        payload = msgpack.unpackb(
-            zstd.ZstdDecompressor().decompress(f.read()), raw=False)
+        raw = f.read()
+    try:
+        body = _decompress(raw)
+    except ValueError:
+        # legacy checkpoints (pre codec tags) are a bare zstd stream
+        import zstandard as zstd
+        body = zstd.ZstdDecompressor().decompress(raw)
+    payload = msgpack.unpackb(body, raw=False)
     stored = {d["path"]: d for d in payload["leaves"]}
     keys, leaves, treedef = _paths(template)
     new = []

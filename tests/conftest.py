@@ -12,7 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ARCHS, get_config
+from repro.configs import get_config
 from repro.models import Model
 
 

@@ -1,0 +1,78 @@
+"""Minimal deterministic stand-in for ``hypothesis`` (optional dep).
+
+Strategies sample from a seeded RNG and ``@given`` runs the test body on
+a fixed number of drawn examples — no shrinking, no example database,
+just enough to keep the property tests meaningful when hypothesis is
+not installed. Import as:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from hypo_compat import given, settings, st
+"""
+from __future__ import annotations
+
+import numpy as np
+
+_MAX_EXAMPLES = 25
+
+
+class Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value=0, max_value=1 << 30):
+        return Strategy(lambda r: int(r.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def binary(min_size=0, max_size=64):
+        return Strategy(
+            lambda r: r.bytes(int(r.integers(min_size, max_size + 1))))
+
+    @staticmethod
+    def lists(elem, min_size=0, max_size=16, unique=False):
+        def draw(r):
+            n = int(r.integers(min_size, max_size + 1))
+            out = [elem.draw(r) for _ in range(n)]
+            if unique:
+                seen, uniq = set(), []
+                for x in out:
+                    if x not in seen:
+                        seen.add(x)
+                        uniq.append(x)
+                tries = 0
+                while len(uniq) < min_size and tries < 100:
+                    x = elem.draw(r)
+                    if x not in seen:
+                        seen.add(x)
+                        uniq.append(x)
+                    tries += 1
+                out = uniq
+            return out
+        return Strategy(draw)
+
+
+st = _Strategies()
+
+
+def settings(max_examples=_MAX_EXAMPLES, **_kw):
+    def deco(fn):
+        fn._max_examples = min(int(max_examples), _MAX_EXAMPLES)
+        return fn
+    return deco
+
+
+def given(*specs):
+    def deco(fn):
+        def run(*args, **kw):
+            rng = np.random.default_rng(0)
+            for _ in range(getattr(run, "_max_examples", _MAX_EXAMPLES)):
+                drawn = [s.draw(rng) for s in specs]
+                fn(*args, *drawn, **kw)
+        run.__name__ = fn.__name__
+        run.__doc__ = fn.__doc__
+        return run
+    return deco

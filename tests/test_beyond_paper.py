@@ -2,7 +2,6 @@
 eviction (evicted keys must degrade into §3.3 false positives)."""
 import jax
 import numpy as np
-import pytest
 
 from conftest import make_batch, prefill_inputs
 from repro.config import CacheConfig

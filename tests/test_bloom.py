@@ -1,6 +1,10 @@
 """Property tests for the Bloom-filter catalog (paper §3.1, §3.3)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from hypo_compat import given, settings, st
 
 from repro.core.bloom import BloomFilter
 

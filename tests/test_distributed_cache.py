@@ -1,15 +1,11 @@
 """End-to-end distributed prompt caching: the paper's system behaviour."""
-import jax
-import numpy as np
 import pytest
 
 from repro.config import CacheConfig
-from repro.core import (CacheServer, Catalog, EdgeClient, SimClock,
-                        SimNetwork)
+from repro.core import CacheServer, EdgeClient, SimClock, SimNetwork
 from repro.core.transport import InProcTransport
-from repro.core.perfmodel import PI_5, PI_ZERO_2W
+from repro.core.perfmodel import PI_ZERO_2W
 from repro.data import MMLUGenerator, WordHashTokenizer
-from repro.models import Model
 from repro.serving.engine import InferenceEngine
 
 

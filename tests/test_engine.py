@@ -17,7 +17,6 @@ def test_padded_prefill_matches_exact(tiny_setup):
     st = eng.start({"tokens": toks})
     assert st.pos == 21
 
-    import jax
     # unpadded reference straight through the model
     cache = model.init_cache(1, model.cache_len(128))
     ref, _ = model.prefill(params, {"tokens": toks}, cache)

@@ -1,5 +1,8 @@
 """Prompt keys (integrity) and partial-matching ranges (paper §3.1-3.2)."""
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from hypo_compat import given, settings, st
 
 from repro.configs import get_config
 from repro.core.keys import PromptKey, model_meta

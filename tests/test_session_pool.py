@@ -1,0 +1,193 @@
+"""Concurrent cache-sharing sessions: fetch dedup, shared adoption,
+download/compute overlap accounting."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.config import CacheConfig
+from repro.core import (CacheServer, EdgeClient, FetchBroker, SessionPool,
+                        SimClock, SimNetwork)
+from repro.core.perfmodel import PI_ZERO_2W
+from repro.core.transport import InProcTransport
+from repro.data import MMLUGenerator, WordHashTokenizer
+from repro.serving.engine import InferenceEngine
+
+
+@pytest.fixture(scope="module")
+def world(tiny_setup):
+    cfg, model, params = tiny_setup
+    engine = InferenceEngine(model, params, max_len=512)
+    tok = WordHashTokenizer(cfg.vocab)
+    gen = MMLUGenerator(tok, n_shot=2)
+    return cfg, engine, gen
+
+
+def _seeder(server, engine):
+    return EdgeClient("seeder", engine,
+                      InProcTransport(server, SimNetwork(), SimClock()),
+                      CacheConfig(), perf=PI_ZERO_2W)
+
+
+# ---------------------------------------------------------------------------
+# FetchBroker unit behaviour
+# ---------------------------------------------------------------------------
+
+def test_broker_dedups_concurrent_fetches():
+    broker = FetchBroker()
+    calls, gate = [], threading.Event()
+
+    def issue():
+        calls.append(1)
+        gate.wait(5.0)
+        return {"ok": True, "blob": b"blob-bytes"}, 0.25, 100
+
+    results = []
+
+    def go():
+        results.append(broker.fetch(b"key", issue))
+
+    t1 = threading.Thread(target=go)
+    t1.start()
+    while not calls:                      # leader's GET is in flight
+        time.sleep(0.001)
+    t2 = threading.Thread(target=go)
+    t2.start()
+    time.sleep(0.02)
+    gate.set()
+    t1.join()
+    t2.join()
+    assert len(calls) == 1                # single download
+    assert all(r[0]["blob"] == b"blob-bytes" for r in results)
+    assert sorted(r[3] for r in results) == [False, True]
+    # follower paid no wire bytes
+    shared = next(r for r in results if r[3])
+    assert shared[1] == 0.0 and shared[2] == 0
+
+
+def test_broker_runs_prep_during_transfer():
+    broker = FetchBroker()
+    order = []
+
+    def issue():
+        order.append("issue-start")
+        time.sleep(0.05)
+        order.append("issue-end")
+        return {"ok": True, "blob": b"x"}, 0.0, 1
+
+    def prep():
+        order.append("prep")
+        return "template"
+
+    resp, dt, nb, sharedf, prepped = broker.fetch(b"k2", issue, prep=prep)
+    assert prepped == "template"
+    # prep ran while the transfer thread was still in flight
+    assert order.index("prep") < order.index("issue-end")
+
+
+def test_broker_does_not_cache_failures():
+    broker = FetchBroker()
+    n = []
+
+    def issue():
+        n.append(1)
+        return {"ok": False, "blob": None}, 0.0, 10
+
+    broker.fetch(b"miss", issue)
+    broker.fetch(b"miss", issue)
+    assert len(n) == 2                    # failed GETs are retried, not cached
+
+
+def test_broker_blob_cache_serves_later_sessions():
+    broker = FetchBroker()
+    n = []
+
+    def issue():
+        n.append(1)
+        return {"ok": True, "blob": b"y"}, 0.1, 50
+
+    first = broker.fetch(b"hit", issue)
+    second = broker.fetch(b"hit", issue)
+    assert len(n) == 1
+    assert not first[3] and second[3]     # second adoption is shared
+    assert broker.stats["cache_hits"] == 1
+
+
+# ---------------------------------------------------------------------------
+# SessionPool integration
+# ---------------------------------------------------------------------------
+
+def test_pool_single_get_per_shared_prefix(world):
+    """The tentpole assertion: N concurrent sessions wanting the same
+    prefix cost exactly ONE server GET (single download, shared
+    adoption), with outputs identical to the unshared path."""
+    cfg, engine, gen = world
+    server = CacheServer(CacheConfig())
+    p0 = gen.prompt("astronomy", 0)
+    r0 = _seeder(server, engine).infer(p0.segments, max_new_tokens=4)
+
+    pool = SessionPool(server, engine, n_sessions=3, perf=PI_ZERO_2W)
+    pool.sync_catalogs()
+    gets0 = server.handle("stats", {})["stats"]["gets"]
+    res = pool.run([p0.segments] * 3, max_new_tokens=4)
+    gets = server.handle("stats", {})["stats"]["gets"] - gets0
+
+    assert gets == 1                      # one download for three sessions
+    assert sum(r.shared_fetch for r in res) == 2
+    assert all(r.case == 5 for r in res)  # all three adopted the full hit
+    assert all(r.output_tokens == r0.output_tokens for r in res)
+    assert sum(r.blob_bytes_down > 0 for r in res) == 1
+
+
+def test_pool_partial_hits_share_one_get(world):
+    """Different questions over the same instruction+examples prefix:
+    the shared prefix is downloaded once, each session prefills only
+    its own suffix."""
+    cfg, engine, gen = world
+    server = CacheServer(CacheConfig())
+    _seeder(server, engine).infer(gen.prompt("virology", 0).segments,
+                                  max_new_tokens=2)
+    pool = SessionPool(server, engine, n_sessions=3, perf=PI_ZERO_2W)
+    pool.sync_catalogs()
+    gets0 = server.handle("stats", {})["stats"]["gets"]
+    res = pool.run([gen.prompt("virology", q).segments for q in (1, 2, 3)],
+                   max_new_tokens=4, upload_on_miss=False)
+    gets = server.handle("stats", {})["stats"]["gets"] - gets0
+    assert gets == 1
+    assert all(0 < r.matched_tokens < r.prompt_tokens for r in res)
+    # correctness: identical to an unpooled fresh client
+    fresh = EdgeClient(
+        "fresh", engine, InProcTransport(server, SimNetwork(), SimClock()),
+        CacheConfig(), perf=PI_ZERO_2W, use_catalog=True)
+    for q, r in zip((1, 2, 3), res):
+        ref = fresh.infer(gen.prompt("virology", q).segments,
+                          max_new_tokens=4, upload_on_miss=False)
+        assert r.output_tokens == ref.output_tokens
+
+
+def test_overlap_hides_download_behind_suffix_prefill(world):
+    """Partial hit with overlap: the sim TTFT charges only the
+    un-hidden remainder of the transfer (layer-streamed model)."""
+    cfg, engine, gen = world
+    server = CacheServer(CacheConfig())
+    _seeder(server, engine).infer(gen.prompt("nutrition", 0).segments,
+                                  max_new_tokens=2)
+
+    def run_one(overlap):
+        pool = SessionPool(server, engine, n_sessions=1, perf=PI_ZERO_2W,
+                           overlap=overlap)
+        pool.sync_catalogs()
+        return pool.run([gen.prompt("nutrition", 1).segments],
+                        max_new_tokens=2, upload_on_miss=False)[0]
+
+    r_plain = run_one(overlap=False)
+    r_overlap = run_one(overlap=True)
+    assert r_overlap.matched_tokens == r_plain.matched_tokens > 0
+    hidden = r_overlap.extra.get("overlap_hidden_s", 0.0)
+    assert hidden > 0
+    assert r_overlap.sim.redis >= 0
+    assert r_overlap.sim.ttft < r_plain.sim.ttft
+    assert r_overlap.output_tokens == r_plain.output_tokens
+    np.testing.assert_allclose(r_overlap.sim.ttft,
+                               r_plain.sim.ttft - hidden, rtol=0.2)

@@ -1,7 +1,6 @@
 """Analytic state sizing must track real serialized blob sizes — the
 break-even analysis depends on it."""
 import jax
-import numpy as np
 import pytest
 
 from conftest import make_batch, prefill_inputs

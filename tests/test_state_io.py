@@ -1,6 +1,5 @@
 """State blob (de)serialization — the transferable prompt cache."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

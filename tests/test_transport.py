@@ -1,5 +1,4 @@
 """Transports: simulated-latency accounting and the real TCP server."""
-import numpy as np
 
 from repro.config import CacheConfig
 from repro.core import CacheServer, SimClock, SimNetwork
