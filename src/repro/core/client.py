@@ -11,6 +11,14 @@ Given a structured prompt, the client:
 
 Bloom false positives surface as a failed GET: the client falls back to
 local prefill — correctness is never affected (paper §3.3), only latency.
+A dead or unreachable peer surfaces as a ``TransportError`` and degrades
+the same way: one bounded fast-fail, then local prefill — never a hang.
+
+``transport`` may also be a :class:`~repro.core.cluster.PeerDirectory`
+(multi-peer fabric): the catalog probe then consults one Bloom catalog
+per peer and a link-aware :class:`~repro.core.cluster.FetchPlanner`
+orders the (peer, range) candidates by estimated fetch+recompute time;
+uploads follow the consistent-hash placement policy.
 
 Both a *wall* breakdown (real times in this process) and a *sim* breakdown
 (emulated edge device + simulated Wi-Fi) are produced per request.
@@ -24,11 +32,14 @@ import numpy as np
 
 from repro.config import CacheConfig
 from repro.core.catalog import Catalog
+from repro.core.cluster.directory import PeerDirectory
+from repro.core.cluster.planner import FetchAttempt, FetchPlanner
 from repro.core.keys import PromptKey, model_meta
 from repro.core.metrics import Breakdown, InferResult
 from repro.core.perfmodel import DevicePerfModel
 from repro.core.segments import PromptSegments
 from repro.core import state_io
+from repro.core.transport import TransportError
 from repro.serving.engine import InferenceEngine
 from repro.serving.sampler import greedy
 
@@ -50,6 +61,19 @@ class EdgeClient:
         self.perf_cfg = perf_cfg or engine.model.cfg
         self.catalog = catalog or Catalog(cache_cfg)
         self.use_catalog = use_catalog
+        # multi-peer fabric: a PeerDirectory holds per-peer catalogs and
+        # links; fetches go through a link-aware planner instead of the
+        # single master catalog
+        self.directory = transport if isinstance(transport, PeerDirectory) \
+            else None
+        if self.directory is not None:
+            emulated = self.perf_cfg is not engine.model.cfg
+            dtype_bytes = 2 if emulated else \
+                np.dtype(engine.cache_dtype).itemsize
+            self.planner = FetchPlanner(self.directory, self.perf_cfg,
+                                        perf, dtype_bytes=dtype_bytes)
+        else:
+            self.planner = None
         # cross-session fetch dedup + shared blob adoption (SessionPool)
         self.broker = broker
         # model the blob transfer as layer-streamed so the partial-hit
@@ -64,7 +88,14 @@ class EdgeClient:
     # ------------------------------------------------------------------
     def sync_catalog(self) -> None:
         now = self.clock.now() if self.clock else time.monotonic()
-        self.catalog.maybe_sync(self.transport, now)
+        if self.directory is not None:
+            self.directory.maybe_sync(now)
+            return
+        try:
+            self.catalog.maybe_sync(self.transport, now)
+        except TransportError:
+            pass                 # server unreachable: stale catalog is
+            # fine — lookups degrade into misses / §3.3 false positives
 
     # ------------------------------------------------------------------
     def infer(self, prompt: PromptSegments, max_new_tokens: int = 16,
@@ -80,43 +111,75 @@ class EdgeClient:
         if self.perf:
             sim.token = self.perf.time_tokenize(n)
 
-        # Step 2: catalog probe, longest range first
+        # Step 2: catalog probe, longest range first. In fabric mode the
+        # planner turns the probe results into link-aware (peer, range)
+        # attempts; otherwise attempts are the single-server candidates.
         t0 = time.perf_counter()
-        candidates: List[PromptKey] = []
-        if self.use_catalog:
+        min_match = self.cache_cfg.min_match_tokens
+        if self.directory is not None:
+            plan = self.planner.plan(keys, n, min_match=min_match,
+                                     use_catalog=self.use_catalog)
+            wall.bloom = time.perf_counter() - t0
+            if self.perf and self.use_catalog:
+                n_cats = max(len(self.directory.links), 1)
+                sim.bloom = self.perf.time_bloom(len(keys) * n_cats)
+        elif self.use_catalog:
             candidates = [k for k in keys
-                          if k.n_tokens >= self.cache_cfg.min_match_tokens
+                          if k.n_tokens >= min_match
                           and self.catalog.lookup(k.digest)]
+            plan = [FetchAttempt(None, k) for k in candidates]
             wall.bloom = time.perf_counter() - t0
             if self.perf:
                 sim.bloom = self.perf.time_bloom(len(keys))
         else:
             # ablation (§5.2.3): no catalog — ask the server directly
-            candidates = [k for k in keys
-                          if k.n_tokens >= self.cache_cfg.min_match_tokens]
+            plan = [FetchAttempt(None, k) for k in keys
+                    if k.n_tokens >= min_match]
 
         matched, false_pos, down_bytes = 0, False, 0
         state, shared, hit_dl_sim, extra_overlap = None, False, 0.0, 0.0
+        served_by, est_fetch, actual_fetch, n_attempts, dead = \
+            "", 0.0, 0.0, 0, 0
         emulated = self.perf_cfg is not self.engine.model.cfg
-        for cand in candidates:         # longest first
-            resp, dt, nb, was_shared, template = self._fetch(cand)
+        for att in plan:                # best estimated total time first
+            cand = att.key
+            n_attempts += 1
+            resp, dt, nb, was_shared, template = self._fetch(
+                cand, att.peer_id)
+            net = self._link_net(att.peer_id)
+            hit = bool(resp.get("ok") and resp.get("blob"))
             dl = 0.0
-            if self.clock is not None:
+            if self.clock is not None and net is not None:
                 if was_shared:
                     dl = 0.0         # piggybacks on the deduped transfer
+                elif resp.get("dead"):
+                    dl = net.rtt_s   # connection refused: one fast-fail
                 elif emulated:
                     from repro.core.sizing import state_bytes
-                    net = self.transport.net
-                    full = (resp.get("ok") and resp.get("blob")) or False
+                    # only the full-prompt range's blob carries logits
                     nb_full = state_bytes(cfg, cand.n_tokens,
-                                          with_logits=bool(full))
-                    dl = net.transfer_time(nb_full if full else 256)
+                                          with_logits=hit and
+                                          cand.n_tokens == n)
+                    dl = net.transfer_time(nb_full if hit else 256)
                 else:
                     dl = dt
                 sim.redis += dl
             else:
                 wall.redis += dt
-            if resp.get("ok") and resp.get("blob"):
+            if resp.get("dead"):
+                # peer unreachable (already marked suspect) — fall to the
+                # next attempt, then to local prefill; never a hang
+                dead += 1
+                continue
+            if self.directory is not None and att.peer_id is not None \
+                    and not was_shared:
+                # shared (broker-deduped) adoptions put no bytes on the
+                # wire — only the leader's GET is accounted per peer
+                self.directory.record_get(
+                    att.peer_id, hit, att.est_fetch_s,
+                    dl if self.clock is not None else dt,
+                    len(resp.get("blob") or b"") if hit else 0)
+            if hit:
                 blob = resp["blob"]
                 shared = was_shared
                 hit_dl_sim = dl
@@ -128,6 +191,17 @@ class EdgeClient:
                                                               template)
                 matched = cand.n_tokens
                 state = (cache, n_eff, logits)
+                if att.peer_id is not None:
+                    served_by = att.peer_id
+                    est_fetch = att.est_fetch_s
+                    actual_fetch = dl if self.clock is not None else dt
+                    if not was_shared:
+                        # hot keys replicate to the fastest other peer
+                        # (off the critical path); only the leader of a
+                        # deduped transfer counts — N pooled adoptions
+                        # are one fetch, not N
+                        self.directory.note_fetch(cand.digest, blob,
+                                                  att.peer_id)
                 break
             else:
                 false_pos = True     # catalog said yes, server said no
@@ -182,25 +256,46 @@ class EdgeClient:
             blob_bytes_down=down_bytes,
             blob_bytes_up=(up if (matched == 0 and upload_on_miss) else 0),
             false_positive=false_pos and matched == 0,
-            shared_fetch=shared)
+            shared_fetch=shared, served_by=served_by,
+            est_fetch_s=est_fetch, actual_fetch_s=actual_fetch,
+            fetch_attempts=n_attempts)
         if extra_overlap:
             res.extra["overlap_hidden_s"] = extra_overlap
+        if dead:
+            res.extra["dead_peer_failures"] = float(dead)
         return res
 
     # ------------------------------------------------------------------
-    def _fetch(self, cand: PromptKey):
+    def _link_net(self, peer_id: Optional[str]):
+        if peer_id is not None:
+            return self.directory.link(peer_id).net
+        return getattr(self.transport, "net", None)
+
+    def _fetch(self, cand: PromptKey, peer_id: Optional[str] = None):
         """GET one candidate blob. Returns (resp, dt, nbytes, shared,
         restore_template|None). With a FetchBroker, concurrent requests
-        for the same key are deduplicated and the restore-target cache
-        template is allocated while the blob is on the wire."""
+        for the same (peer, key) are deduplicated and the restore-target
+        cache template is allocated while the blob is on the wire. A
+        dead peer returns a ``{"ok": False, "dead": True}`` response
+        (the peer is already marked suspect by the directory)."""
+        if peer_id is not None:
+            def issue():
+                return self.directory.request(peer_id, "get",
+                                              {"key": cand.digest})
+            broker_key = (peer_id, cand.digest)
+        else:
+            def issue():
+                return self.transport.request("get", {"key": cand.digest})
+            broker_key = cand.digest
         if self.broker is None:
-            resp, dt, nb = self.transport.request("get",
-                                                  {"key": cand.digest})
+            try:
+                resp, dt, nb = issue()
+            except TransportError as e:
+                return ({"ok": False, "dead": True, "error": repr(e)},
+                        0.0, 0, False, None)
             return resp, dt, nb, False, None
-        return self.broker.fetch(
-            cand.digest,
-            lambda: self.transport.request("get", {"key": cand.digest}),
-            prep=self.engine.new_cache)
+        return self.broker.fetch(broker_key, issue,
+                                 prep=self.engine.new_cache)
 
     # ------------------------------------------------------------------
     def _upload_ranges(self, prompt: PromptSegments,
@@ -208,8 +303,9 @@ class EdgeClient:
         """Register every prefix range of this prompt (paper Fig. 3).
 
         Upload is asynchronous in the paper (off the latency path); we
-        track bytes but do not charge request time
-        (advance_clock=False)."""
+        track bytes but do not charge request time (advance_clock=False).
+        In fabric mode each range goes to its consistent-hash primary
+        peer (ring fallback on dead peers)."""
         model = self.engine.model
         total = 0
         for k in keys:
@@ -222,8 +318,15 @@ class EdgeClient:
                 level=self.cache_cfg.compress_level,
                 quantize=self.cache_cfg.quantize,
                 codec=self.cache_cfg.compress_codec)
-            self.transport.request("put", {"key": k.digest, "blob": blob},
-                                   advance_clock=False)
+            if self.directory is not None:
+                total += self.directory.upload(k.digest, blob)
+                continue
+            try:
+                self.transport.request("put",
+                                       {"key": k.digest, "blob": blob},
+                                       advance_clock=False)
+            except TransportError:
+                continue             # best effort: server gone, skip
             self.catalog.register(k.digest)
             total += len(blob)
         return total

@@ -1,0 +1,81 @@
+"""Multi-peer prompt-cache fabric (beyond the paper's single cache box).
+
+The paper shares prompt caches through ONE server; this package scales
+that to N peers, each with its own blob store, master Bloom catalog,
+and heterogeneous client link:
+
+* :class:`CachePeer`        — one fabric member (store + catalog + link)
+* :class:`PeerDirectory`    — client-side per-peer catalogs, liveness,
+                              gossip-backed delta sync, placement
+* :class:`FetchPlanner`     — link-aware (peer, range) selection with
+                              fetch-vs-recompute pruning
+* :class:`PlacementPolicy`  — consistent-hash primary + ring fallbacks
+* :class:`CacheCluster`     — convenience: build peers, drive gossip,
+                              kill/revive peers, mint directories
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Union
+
+from repro.config import CacheConfig
+from repro.core.netsim import SimClock, SimNetwork
+from repro.core.cluster.directory import (  # noqa: F401
+    PeerDirectory, PeerLink,
+)
+from repro.core.cluster.peer import (  # noqa: F401
+    CachePeer, PeerTransport, gossip_round,
+)
+from repro.core.cluster.placement import (  # noqa: F401
+    HotKeyTracker, PlacementPolicy,
+)
+from repro.core.cluster.planner import (  # noqa: F401
+    FetchAttempt, FetchPlanner,
+)
+
+LinkSpec = Union[SimNetwork, tuple]
+
+
+class CacheCluster:
+    """N peers + their links, one handle.
+
+    ``links`` is a list of per-peer link specs — ``SimNetwork`` objects
+    or ``(bandwidth_bps, rtt_s)`` tuples — whose length sets the peer
+    count. ``directory()`` mints a fresh client-side view (own per-peer
+    catalogs, own clock); ``gossip()`` runs one full-mesh anti-entropy
+    round; ``kill``/``revive`` flip peer liveness for fault drills.
+    """
+
+    def __init__(self, links: Sequence[LinkSpec],
+                 cache_cfg: CacheConfig = CacheConfig(),
+                 names: Optional[Sequence[str]] = None):
+        self.cache_cfg = cache_cfg
+        self.peers: List[CachePeer] = []
+        for i, spec in enumerate(links):
+            net = spec if isinstance(spec, SimNetwork) else \
+                SimNetwork(bandwidth_bps=spec[0], rtt_s=spec[1])
+            name = names[i] if names else f"peer{i}"
+            self.peers.append(CachePeer(name, cache_cfg, net))
+        self.by_id: Dict[str, CachePeer] = {
+            p.peer_id: p for p in self.peers}
+
+    # ------------------------------------------------------------------
+    def directory(self, clock: Optional[SimClock] = None,
+                  **kw) -> PeerDirectory:
+        return PeerDirectory(self.peers, self.cache_cfg,
+                             clock=clock or SimClock(), **kw)
+
+    def gossip(self) -> int:
+        return gossip_round(self.peers)
+
+    def kill(self, peer_id: str) -> None:
+        self.by_id[peer_id].alive = False
+
+    def revive(self, peer_id: str) -> None:
+        self.by_id[peer_id].alive = True
+
+    # ------------------------------------------------------------------
+    def stored_bytes(self) -> int:
+        return sum(p.server.stored_bytes for p in self.peers)
+
+    def server_stats(self) -> Dict[str, dict]:
+        return {p.peer_id: dict(p.server.stats) for p in self.peers}

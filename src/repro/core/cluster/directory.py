@@ -1,0 +1,204 @@
+"""Client-side view of the cache fabric: one Bloom catalog *per peer*.
+
+The :class:`PeerDirectory` replaces the single transport in
+``EdgeClient``. It knows, per peer: the link (own bandwidth/RTT), a
+local Bloom catalog of that peer's contents (kept fresh by delta/gossip
+``csync``), liveness belief (a failed request marks the peer *suspect*
+for a cooldown window — never a hang), and per-peer
+:class:`~repro.core.metrics.PeerStats`.
+
+Uploads follow the consistent-hash placement policy; keys observed hot
+at fetch time are replicated best-effort to the fastest other peer, so
+the skewed head of the workload migrates onto the best links.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+from repro.config import CacheConfig
+from repro.core.catalog import Catalog
+from repro.core.metrics import PeerStats
+from repro.core.netsim import SimClock
+from repro.core.cluster.peer import CachePeer, PeerTransport
+from repro.core.cluster.placement import HotKeyTracker, PlacementPolicy
+from repro.core.transport import TransportError
+
+
+class PeerLink:
+    """Everything the client tracks about one peer."""
+
+    def __init__(self, peer: CachePeer, transport, cache_cfg: CacheConfig):
+        self.peer = peer
+        self.transport = transport
+        self.catalog = Catalog(cache_cfg)
+        self.stats = PeerStats(peer.peer_id)
+        self.suspect_until = -1e18      # sim-clock time; past = usable
+        self.local_version = 0          # csync cursor into peer.key_log
+        self.remote_version = 0         # csync cursor into peer.remote_log
+
+    @property
+    def net(self):
+        return getattr(self.transport, "net", None)
+
+
+class PeerDirectory:
+    def __init__(self, peers: Sequence[CachePeer],
+                 cache_cfg: CacheConfig = CacheConfig(),
+                 clock: Optional[SimClock] = None,
+                 placement: Optional[PlacementPolicy] = None,
+                 hot_threshold: int = 3,
+                 replicate_hot: bool = True,
+                 suspect_cooldown_s: float = 30.0,
+                 sync_peers: Optional[Sequence[str]] = None):
+        self.cache_cfg = cache_cfg
+        self.clock = clock or SimClock()
+        self.links: Dict[str, PeerLink] = {}
+        for p in peers:
+            self.links[p.peer_id] = PeerLink(
+                p, PeerTransport(p, self.clock), cache_cfg)
+        self.placement = placement or PlacementPolicy(
+            [p.peer_id for p in peers])
+        self.hot = HotKeyTracker(hot_threshold)
+        self.replicate_hot = replicate_hot
+        self.suspect_cooldown_s = suspect_cooldown_s
+        # restrict which peers this client syncs with (partial
+        # connectivity: gossip keeps the other catalogs fresh anyway)
+        self.sync_peers = list(sync_peers) if sync_peers else None
+        self.last_sync_t = -1e18
+        self.sync_bytes = 0
+        self.replications = 0
+
+    # -- liveness ------------------------------------------------------
+    def peer_ids(self) -> List[str]:
+        return list(self.links)
+
+    def link(self, peer_id: str) -> PeerLink:
+        return self.links[peer_id]
+
+    def usable_ids(self) -> List[str]:
+        now = self.clock.now()
+        return [pid for pid, ln in self.links.items()
+                if ln.suspect_until <= now]
+
+    def mark_suspect(self, peer_id: str) -> None:
+        ln = self.links[peer_id]
+        ln.suspect_until = self.clock.now() + self.suspect_cooldown_s
+        ln.stats.transport_errors += 1
+
+    # -- catalog -------------------------------------------------------
+    def lookup(self, digest: bytes) -> List[str]:
+        """Peers whose catalog (probably) holds ``digest``, usable only."""
+        return [pid for pid in self.usable_ids()
+                if self.links[pid].catalog.lookup(digest)]
+
+    def register(self, peer_id: str, digest: bytes) -> None:
+        self.links[peer_id].catalog.register(digest)
+
+    def maybe_sync(self, now: float) -> bool:
+        """Delta-sync the per-peer catalogs (rate-limited, off the
+        request's critical path — advance_clock=False)."""
+        if now - self.last_sync_t < self.cache_cfg.sync_interval_s:
+            return False
+        self.last_sync_t = now
+        targets = self.sync_peers or self.usable_ids()
+        for pid in targets:
+            ln = self.links.get(pid)
+            if ln is None or ln.suspect_until > now:
+                continue
+            try:
+                resp, _, nb = ln.transport.request(
+                    "csync", {"since": ln.local_version,
+                              "since_remote": ln.remote_version},
+                    advance_clock=False)
+            except TransportError:
+                self.mark_suspect(pid)
+                continue
+            self.sync_bytes += nb
+            for k in resp.get("keys", []):
+                ln.catalog.register(k)
+            ln.local_version = resp.get("version", ln.local_version)
+            ln.stats.tombstones = resp.get("tombstones",
+                                           ln.stats.tombstones)
+            for k, owner in resp.get("remote", []):
+                other = self.links.get(owner)
+                if other is not None:
+                    other.catalog.register(k)
+            ln.remote_version = resp.get("remote_version",
+                                         ln.remote_version)
+        return True
+
+    # -- request routing -----------------------------------------------
+    def request(self, peer_id: str, op: str, payload: dict,
+                advance_clock: bool = True):
+        """Route one request to a peer; a transport failure marks the
+        peer suspect and re-raises :class:`TransportError`."""
+        try:
+            return self.links[peer_id].transport.request(
+                op, payload, advance_clock)
+        except TransportError:
+            self.mark_suspect(peer_id)
+            raise
+
+    def est_fetch_s(self, peer_id: str, nbytes: int) -> float:
+        net = self.links[peer_id].net
+        return net.transfer_time(nbytes) if net is not None else 0.0
+
+    # -- placement -----------------------------------------------------
+    def upload(self, digest: bytes, blob: bytes) -> int:
+        """PUT to the consistent-hash primary, falling down the ring on
+        dead peers (best effort; async in the paper's sense, so no sim
+        clock is advanced). Returns bytes shipped (0 = nowhere alive)."""
+        now = self.clock.now()
+        for pid in self.placement.ring_order(digest):
+            ln = self.links[pid]
+            if ln.suspect_until > now:
+                continue
+            try:
+                self.request(pid, "put", {"key": digest, "blob": blob},
+                             advance_clock=False)
+            except TransportError:
+                continue
+            ln.catalog.register(digest)
+            ln.stats.bytes_up += len(blob)
+            return len(blob)
+        return 0
+
+    def note_fetch(self, digest: bytes, blob: bytes,
+                   src_peer: str) -> Optional[str]:
+        """Record a successful fetch; once the key is hot, replicate it
+        best-effort to the fastest usable peer that does not already
+        advertise it. Returns the replica peer id when one was made."""
+        self.hot.note(digest)
+        if not (self.replicate_hot and self.hot.is_hot(digest)):
+            return None
+        holders = set(self.lookup(digest)) | {src_peer}
+        cands = [pid for pid in self.usable_ids() if pid not in holders]
+        if not cands:
+            return None
+        target = min(cands,
+                     key=lambda pid: self.est_fetch_s(pid, len(blob)))
+        try:
+            self.request(target, "put", {"key": digest, "blob": blob},
+                         advance_clock=False)
+        except TransportError:
+            return None
+        self.links[target].catalog.register(digest)
+        self.links[target].stats.bytes_up += len(blob)
+        self.replications += 1
+        return target
+
+    # -- accounting ----------------------------------------------------
+    def record_get(self, peer_id: str, hit: bool, est_s: float,
+                   actual_s: float, nbytes: int) -> None:
+        st = self.links[peer_id].stats
+        st.gets += 1
+        if hit:
+            st.hits += 1
+            st.bytes_down += nbytes
+            st.est_fetch_s += est_s
+            st.actual_fetch_s += actual_s
+        else:
+            st.misses += 1
+
+    def peer_stats(self) -> Dict[str, PeerStats]:
+        return {pid: ln.stats for pid, ln in self.links.items()}

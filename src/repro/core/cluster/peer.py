@@ -1,0 +1,126 @@
+"""A cache *peer*: one member of the multi-peer prompt-cache fabric.
+
+Each peer is a full :class:`CacheServer` (own blob store, own master
+Bloom catalog, own key log) reachable over its *own* link — a
+:class:`SimNetwork` with per-peer bandwidth/RTT, modeling the
+heterogeneous edge clusters of TPI-LLM (arXiv:2410.00531) where one
+neighbor sits on fast 5 GHz Wi-Fi and another behind a lossy 2.4 GHz
+hop.
+
+Peers additionally *gossip*: off the critical path they exchange
+key-log deltas with each other, so each peer can advertise not only
+its own blobs but also which keys its neighbors hold. A client that
+only ever syncs with peer B still discovers a blob uploaded via peer A
+(``csync`` returns ``remote`` entries tagged with the owner peer id).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.config import CacheConfig
+from repro.core.netsim import SimClock, SimNetwork
+from repro.core.server import CacheServer
+from repro.core.transport import InProcTransport, TransportError
+
+# gossip wire cost per advertised key: 32-byte digest + owner id + framing
+_GOSSIP_BYTES_PER_KEY = 48
+
+
+class CachePeer:
+    def __init__(self, peer_id: str,
+                 cache_cfg: CacheConfig = CacheConfig(),
+                 net: Optional[SimNetwork] = None,
+                 gossip_net: Optional[SimNetwork] = None):
+        self.peer_id = peer_id
+        self.server = CacheServer(cache_cfg)
+        self.net = net or SimNetwork()          # client <-> peer link
+        self.gossip_net = gossip_net or self.net  # peer <-> peer link
+        self.alive = True
+        # gossip state: how far we've consumed each neighbor's key log,
+        # and the (digest, owner) entries we can advertise onward
+        self._cursors: Dict[str, int] = {}
+        self.remote_log: List[Tuple[bytes, str]] = []
+        self._remote_seen: Set[Tuple[bytes, str]] = set()
+        self.gossip_stats = {"rounds": 0, "keys_in": 0, "bytes": 0}
+
+    # ------------------------------------------------------------------
+    def pull_from(self, other: "CachePeer") -> int:
+        """One gossip pull: fold ``other``'s new keys (own + relayed)
+        into our remote log. Returns the number of fresh entries."""
+        if not (self.alive and other.alive):
+            return 0
+        keys, v = other.server.sync(self._cursors.get(other.peer_id, 0))
+        self._cursors[other.peer_id] = v
+        fresh = 0
+        for k in keys:
+            entry = (k, other.peer_id)
+            if entry in self._remote_seen or k in self.server.store:
+                continue
+            self._remote_seen.add(entry)
+            self.remote_log.append(entry)
+            fresh += 1
+        # relay second-hand knowledge (epidemic spread: what *other*
+        # learned from its neighbors becomes visible here too)
+        rkey = other.peer_id + "#remote"
+        start = self._cursors.get(rkey, 0)
+        for k, owner in other.remote_log[start:]:
+            entry = (k, owner)
+            if owner == self.peer_id or entry in self._remote_seen:
+                continue
+            self._remote_seen.add(entry)
+            self.remote_log.append(entry)
+            fresh += 1
+        self._cursors[rkey] = len(other.remote_log)
+        self.gossip_stats["keys_in"] += fresh
+        self.gossip_stats["bytes"] += fresh * _GOSSIP_BYTES_PER_KEY
+        self.gossip_stats["rounds"] += 1
+        return fresh
+
+    # ------------------------------------------------------------------
+    def handle(self, op: str, payload: dict) -> dict:
+        """Transport entry point: the server's ops plus cluster sync.
+
+        ``csync`` is the cluster-aware catalog sync: like ``sync`` it
+        returns this peer's new key digests, but it also returns the
+        gossiped ``remote`` (digest, owner-peer) entries so one sync
+        round refreshes the client's catalogs for *every* peer."""
+        if op == "csync":
+            keys, v = self.server.sync(payload.get("since", 0))
+            since_r = payload.get("since_remote", 0)
+            remote = [[k, owner] for k, owner in self.remote_log[since_r:]]
+            return {"ok": True, "keys": keys, "version": v,
+                    "remote": remote,
+                    "remote_version": len(self.remote_log),
+                    "tombstones": self.server.stats["tombstones"],
+                    "peer": self.peer_id}
+        return self.server.handle(op, payload)
+
+
+class PeerTransport(InProcTransport):
+    """In-process transport to one peer over its own simulated link.
+
+    A killed peer (``peer.alive = False``) fast-fails with
+    :class:`TransportError` — the socket-refused analogue — which the
+    directory turns into a *suspect* mark and the client turns into
+    local prefill."""
+
+    def __init__(self, peer: CachePeer, clock: Optional[SimClock] = None):
+        super().__init__(peer, peer.net, clock)
+        self.peer = peer
+
+    def request(self, op: str, payload: dict, advance_clock: bool = True):
+        if not self.peer.alive:
+            raise TransportError(f"peer {self.peer.peer_id!r} is down")
+        return super().request(op, payload, advance_clock)
+
+
+def gossip_round(peers: Sequence[CachePeer]) -> int:
+    """One full-mesh anti-entropy round: every live peer pulls deltas
+    from every other live peer. Off the critical path (no sim clock is
+    advanced); returns the number of entries exchanged."""
+    total = 0
+    for dst in peers:
+        for src in peers:
+            if dst is not src:
+                total += dst.pull_from(src)
+    return total

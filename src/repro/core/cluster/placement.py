@@ -1,0 +1,80 @@
+"""Blob placement for the multi-peer cache fabric.
+
+Uploads go to a *consistent-hash primary* so every client agrees on
+where a key lives without coordination, and peer churn only remaps the
+keys owned by the departed peer. On top of that, keys that prove *hot*
+at fetch time (shared instruction/example prefixes under a skewed
+workload) are replicated best-effort to additional — preferably faster
+— peers, so the fetch planner can route the bulk of the traffic over
+the best links.
+"""
+from __future__ import annotations
+
+import bisect
+import hashlib
+from typing import Dict, List, Sequence
+
+
+def _ring_hash(data: bytes) -> int:
+    return int.from_bytes(
+        hashlib.blake2b(data, digest_size=8).digest(), "big")
+
+
+class PlacementPolicy:
+    """Consistent-hash ring over peer ids (``vnodes`` points per peer)."""
+
+    def __init__(self, peer_ids: Sequence[str], vnodes: int = 32):
+        self.peer_ids = list(peer_ids)
+        self.vnodes = vnodes
+        self._points: List[int] = []
+        self._owners: List[str] = []
+        pts = []
+        for pid in self.peer_ids:
+            for v in range(vnodes):
+                pts.append((_ring_hash(f"{pid}#{v}".encode()), pid))
+        pts.sort()
+        self._points = [p for p, _ in pts]
+        self._owners = [o for _, o in pts]
+
+    # ------------------------------------------------------------------
+    def primary(self, digest: bytes) -> str:
+        return self.ring_order(digest)[0]
+
+    def ring_order(self, digest: bytes) -> List[str]:
+        """All peers in ring order starting at the key's point — the
+        primary first, then the successive fallback/replica targets."""
+        if not self._points:
+            return []
+        i = bisect.bisect_right(self._points, _ring_hash(digest))
+        order: List[str] = []
+        n = len(self._points)
+        for step in range(n):
+            pid = self._owners[(i + step) % n]
+            if pid not in order:
+                order.append(pid)
+                if len(order) == len(self.peer_ids):
+                    break
+        return order
+
+
+class HotKeyTracker:
+    """Counts fetches per key digest; a key is *hot* once it has been
+    fetched ``threshold`` times — the signal for best-effort
+    replication to a faster peer."""
+
+    def __init__(self, threshold: int = 3, max_entries: int = 4096):
+        self.threshold = threshold
+        self.max_entries = max_entries
+        self.counts: Dict[bytes, int] = {}
+
+    def note(self, digest: bytes) -> int:
+        if digest not in self.counts and \
+                len(self.counts) >= self.max_entries:
+            # drop the coldest entry; approximate but bounded
+            coldest = min(self.counts, key=self.counts.get)
+            del self.counts[coldest]
+        self.counts[digest] = self.counts.get(digest, 0) + 1
+        return self.counts[digest]
+
+    def is_hot(self, digest: bytes) -> bool:
+        return self.counts.get(digest, 0) >= self.threshold

@@ -1,0 +1,77 @@
+"""Link-aware fetch planning over the peer fabric.
+
+Given the longest-first prefix ranges of a prompt, the planner turns
+"which (peer, range) should I fetch?" into an explicit cost model:
+
+    est_total(peer, range) = link_rtt + est_blob_bytes * 8 / link_bw
+                           + t_prefill(n_prompt - range)
+
+and emits all candidate attempts sorted by that estimate — the SparKV
+(arXiv:2604.21231) overhead-aware fetch-vs-recompute decision, per
+link. Attempts that estimate *worse than recomputing locally from
+scratch* are dropped entirely (a long prefix behind a 2 Mb/s link can
+lose to local prefill on a fast device). The client walks the plan in
+order, falling to the next attempt on Bloom false positives, evictions,
+and dead peers, and to local prefill when the plan is exhausted.
+
+Without a device perf model there is no compute estimate to trade
+against, so the plan preserves the paper's longest-first order and
+only uses the link model to break ties between peers.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
+
+from repro.core.keys import PromptKey
+from repro.core.sizing import state_bytes
+
+
+@dataclass(frozen=True)
+class FetchAttempt:
+    peer_id: Optional[str]         # None = single-transport mode
+    key: PromptKey
+    est_fetch_s: float = 0.0
+    est_total_s: float = 0.0       # fetch + estimated suffix prefill
+
+
+class FetchPlanner:
+    def __init__(self, directory, perf_cfg, perf=None,
+                 dtype_bytes: int = 2):
+        self.directory = directory
+        self.perf_cfg = perf_cfg   # sizing/compute config (may be emulated)
+        self.perf = perf           # DevicePerfModel or None
+        # bytes/element of the serialized cache states (2 when emulating
+        # the paper's bf16 blobs; the engine's real dtype otherwise)
+        self.dtype_bytes = dtype_bytes
+
+    # ------------------------------------------------------------------
+    def plan(self, keys: Sequence[PromptKey], n_tokens: int,
+             min_match: int = 0,
+             use_catalog: bool = True) -> List[FetchAttempt]:
+        cfg, perf, d = self.perf_cfg, self.perf, self.directory
+        attempts: List[FetchAttempt] = []
+        for k in keys:
+            if k.n_tokens < min_match:
+                continue
+            if use_catalog:
+                pids = d.lookup(k.digest)
+            else:                  # ablation: ask every live peer
+                pids = d.usable_ids()
+            if not pids:
+                continue
+            nb = state_bytes(cfg, k.n_tokens, dtype_bytes=self.dtype_bytes,
+                             with_logits=k.n_tokens == n_tokens)
+            suffix_s = (perf.time_prefill(cfg, n_tokens - k.n_tokens)
+                        if perf else 0.0)
+            for pid in pids:
+                est = d.est_fetch_s(pid, nb)
+                attempts.append(FetchAttempt(pid, k, est, est + suffix_s))
+        if perf is not None:
+            local_s = perf.time_prefill(cfg, n_tokens)
+            attempts = [a for a in attempts if a.est_total_s < local_s]
+            attempts.sort(key=lambda a: (a.est_total_s, a.est_fetch_s))
+        else:
+            attempts.sort(
+                key=lambda a: (-a.key.n_tokens, a.est_fetch_s))
+        return attempts

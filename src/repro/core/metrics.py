@@ -45,7 +45,40 @@ class InferResult:
     blob_bytes_up: int = 0
     false_positive: bool = False
     shared_fetch: bool = False     # blob adopted from a deduped in-flight GET
+    served_by: str = ""            # cluster: peer that served the hit
+    est_fetch_s: float = 0.0       # planner's link-model estimate
+    actual_fetch_s: float = 0.0    # what the fetch actually cost (sim/wall)
+    fetch_attempts: int = 0        # GETs tried (Bloom FPs / dead peers + hit)
     extra: Dict[str, float] = field(default_factory=dict)
+
+
+@dataclass
+class PeerStats:
+    """Per-peer accounting on the client side of the cache fabric."""
+    peer_id: str
+    gets: int = 0
+    hits: int = 0
+    misses: int = 0                # failed GETs (Bloom FP / eviction)
+    transport_errors: int = 0      # dead-peer fast-fails
+    bytes_down: int = 0
+    bytes_up: int = 0
+    est_fetch_s: float = 0.0       # sum of planner estimates on hits
+    actual_fetch_s: float = 0.0    # sum of realized fetch times on hits
+    tombstones: int = 0            # stale keys the peer advertised at sync
+
+    @property
+    def est_error_s(self) -> float:
+        """Signed planner error (negative = planner was optimistic).
+        Under full perf emulation the estimate and the charged transfer
+        share one link model, so this is 0 by construction; it carries
+        signal in wall-clock runs and whenever real (compressed) wire
+        bytes diverge from the analytic blob sizing."""
+        return self.est_fetch_s - self.actual_fetch_s
+
+    def as_dict(self) -> Dict[str, float]:
+        d = dict(self.__dict__)
+        d["est_error_s"] = self.est_error_s
+        return d
 
 
 # ---------------------------------------------------------------------------
@@ -102,24 +135,50 @@ class ServingReport:
     latency_p50: float
     latency_p99: float
     queue_wait_p50: float
+    # cluster fabric: per-peer hit/miss/bytes and est-vs-actual fetch
+    # time (empty outside multi-peer runs)
+    per_peer: Dict[str, PeerStats] = field(default_factory=dict)
 
     @classmethod
-    def from_requests(cls, reqs: Sequence[RequestStats],
-                      wall_s: float) -> "ServingReport":
-        ttfts = [r.ttft for r in reqs]
-        lats = [r.latency for r in reqs]
-        waits = [r.queue_wait for r in reqs]
-        total = sum(r.n_out for r in reqs)
+    def _build(cls, ttfts, lats, queue_waits, total_tokens: int,
+               wall_s: float, per_peer) -> "ServingReport":
         return cls(
-            n_requests=len(reqs),
-            total_output_tokens=total,
+            n_requests=len(ttfts),
+            total_output_tokens=total_tokens,
             wall_s=wall_s,
-            throughput_tok_s=total / wall_s if wall_s > 0 else 0.0,
+            throughput_tok_s=total_tokens / wall_s if wall_s > 0 else 0.0,
             ttft_p50=percentile(ttfts, 50), ttft_p90=percentile(ttfts, 90),
             ttft_p99=percentile(ttfts, 99),
             latency_p50=percentile(lats, 50),
             latency_p99=percentile(lats, 99),
-            queue_wait_p50=percentile(waits, 50))
+            queue_wait_p50=percentile(queue_waits, 50),
+            per_peer=dict(per_peer or {}))
+
+    @classmethod
+    def from_requests(cls, reqs: Sequence[RequestStats],
+                      wall_s: float,
+                      per_peer: Dict[str, PeerStats] = None
+                      ) -> "ServingReport":
+        return cls._build([r.ttft for r in reqs],
+                          [r.latency for r in reqs],
+                          [r.queue_wait for r in reqs],
+                          sum(r.n_out for r in reqs), wall_s, per_peer)
+
+    @classmethod
+    def from_infer_results(cls, results: Sequence["InferResult"],
+                           wall_s: float = 0.0,
+                           per_peer: Dict[str, PeerStats] = None,
+                           sim: bool = True) -> "ServingReport":
+        """Aggregate EdgeClient results (sim or wall breakdowns) into the
+        same report shape the scheduler produces — used by the cluster
+        benchmarks to compare fabrics under one vocabulary. EdgeClients
+        have no admission queue, so queue_wait_p50 is 0."""
+        bds = [(r.sim if sim else r.wall) for r in results]
+        return cls._build([b.ttft for b in bds], [b.ttlt for b in bds],
+                          [], sum(len(r.output_tokens) for r in results),
+                          wall_s, per_peer)
 
     def as_dict(self) -> Dict[str, float]:
-        return dict(self.__dict__)
+        d = dict(self.__dict__)
+        d["per_peer"] = {k: v.as_dict() for k, v in self.per_peer.items()}
+        return d

@@ -26,10 +26,15 @@ class CacheServer:
         self.master = BloomFilter(cache_cfg.bloom_capacity,
                                   cache_cfg.bloom_fp_rate)
         self.key_log: List[bytes] = []      # insertion order, for sync
+        # keys evicted under the byte budget but still present in the
+        # Bloom catalogs: every one is a guaranteed stale-catalog false
+        # positive until re-uploaded. Exposed through the ``sync`` op so
+        # clients/benchmarks can measure the stale-FP rate directly.
+        self.tombstones: set = set()
         self.lock = threading.Lock()
         self.stats = {"puts": 0, "gets": 0, "hits": 0, "misses": 0,
                       "bytes_in": 0, "bytes_out": 0, "syncs": 0,
-                      "evictions": 0}
+                      "evictions": 0, "tombstones": 0}
 
     # ------------------------------------------------------------------
     def put(self, key: bytes, blob: bytes) -> int:
@@ -43,6 +48,7 @@ class CacheServer:
             if fresh:
                 self.master.add(key)
                 self.key_log.append(key)
+                self.tombstones.discard(key)    # re-upload heals the hole
             self.stats["puts"] += 1
             self.stats["bytes_in"] += len(blob)
             # LRU eviction under a byte budget: evicted keys stay in the
@@ -53,6 +59,8 @@ class CacheServer:
                 old_key, old_blob = self.store.popitem(last=False)
                 self.stored_bytes -= len(old_blob)
                 self.stats["evictions"] += 1
+                self.tombstones.add(old_key)
+            self.stats["tombstones"] = len(self.tombstones)
             return len(self.key_log)
 
     def get(self, key: bytes) -> Optional[bytes]:
@@ -83,7 +91,10 @@ class CacheServer:
             return {"ok": blob is not None, "blob": blob}
         if op == "sync":
             keys, v = self.sync(payload.get("since", 0))
-            return {"ok": True, "keys": keys, "version": v}
+            with self.lock:
+                n_tomb = self.stats["tombstones"]
+            return {"ok": True, "keys": keys, "version": v,
+                    "tombstones": n_tomb}
         if op == "stats":
             with self.lock:
                 return {"ok": True, "stats": dict(self.stats),

@@ -33,7 +33,7 @@ from repro.core.client import EdgeClient
 from repro.core.metrics import InferResult
 from repro.core.netsim import SimClock, SimNetwork
 from repro.core.server import CacheServer
-from repro.core.transport import InProcTransport
+from repro.core.transport import InProcTransport, TransportError
 
 
 class _Inflight:
@@ -54,6 +54,13 @@ class FetchBroker:
       * recently completed fetches are served from a small LRU blob
         cache, so "same prefix, a moment later" also costs zero GETs.
     Failed GETs (Bloom false positives) are never cached.
+
+    ``key`` is any hashable handle: the blob digest in single-server
+    mode, a ``(peer_id, digest)`` pair in fabric mode — the same blob on
+    two peers is two distinct transfers (different links), so dedup is
+    per (peer, key). A :class:`TransportError` from ``issue`` publishes
+    a ``{"ok": False, "dead": True}`` miss so every waiting follower
+    degrades to its own fallback instead of hanging.
     """
 
     def __init__(self, cache_entries: int = 32):
@@ -105,6 +112,9 @@ class FetchBroker:
     def _issue(entry: _Inflight, issue) -> None:
         try:
             entry.result = issue()
+        except TransportError as e:      # dead peer: bounded fast-fail
+            entry.result = ({"ok": False, "dead": True,
+                             "error": repr(e)}, 0.0, 0)
         except Exception as e:           # surface transport errors as misses
             entry.result = ({"ok": False, "error": repr(e)}, 0.0, 0)
         finally:
@@ -112,25 +122,38 @@ class FetchBroker:
 
 
 class SessionPool:
-    """N concurrent cache-sharing sessions over one engine + one server.
+    """N concurrent cache-sharing sessions over one engine + one server
+    (or one multi-peer cache fabric).
 
     Every session is a full ``EdgeClient`` (own local catalog, own
     simulated clock) sharing the engine, the server, and a
     ``FetchBroker``. ``run(jobs)`` executes the jobs concurrently
     (session i takes jobs i, i+N, ...) and returns results in job order.
+
+    Pass ``cluster=CacheCluster(...)`` instead of ``server`` to run the
+    sessions against the peer fabric: each session gets its own
+    ``PeerDirectory`` (own per-peer catalogs and clock) over the shared
+    peers, and the broker dedups in-flight GETs per (peer, key).
     """
 
-    def __init__(self, server: CacheServer, engine, n_sessions: int = 2,
+    def __init__(self, server: Optional[CacheServer], engine,
+                 n_sessions: int = 2,
                  cache_cfg: CacheConfig = CacheConfig(), net=None,
                  perf=None, perf_cfg=None, overlap: bool = True,
-                 broker: Optional[FetchBroker] = None):
+                 broker: Optional[FetchBroker] = None, cluster=None):
+        if server is None and cluster is None:
+            raise ValueError("need a server or a cluster")
         self.server = server
+        self.cluster = cluster
         self.engine = engine
         self.net = net or SimNetwork()
         self.broker = broker or FetchBroker()
         self.sessions: List[EdgeClient] = []
         for i in range(n_sessions):
-            tr = InProcTransport(server, self.net, SimClock())
+            if cluster is not None:
+                tr = cluster.directory(clock=SimClock())
+            else:
+                tr = InProcTransport(server, self.net, SimClock())
             self.sessions.append(EdgeClient(
                 f"session{i}", engine, tr, cache_cfg, perf=perf,
                 catalog=Catalog(cache_cfg), perf_cfg=perf_cfg,

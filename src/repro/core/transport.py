@@ -10,6 +10,12 @@
 
 Every request returns ``(response, sim_seconds, n_bytes)`` so callers can
 attribute "Redis" time in the paper's Table-3 sense.
+
+Failure contract: a dead, unreachable, or too-slow peer raises
+:class:`TransportError` (never a bare socket exception, never a hang —
+both connect and requests are bounded by timeouts). Callers degrade to
+local prefill; the cluster layer additionally marks the peer *suspect*
+so the fetch planner skips it for a cooldown period.
 """
 from __future__ import annotations
 
@@ -24,6 +30,12 @@ from repro.core.netsim import SimClock, SimNetwork
 from repro.core.server import CacheServer
 
 _HDR = struct.Struct("<I")
+
+
+class TransportError(ConnectionError):
+    """A cache peer could not be reached (dead/slow socket, closed
+    connection, refused connect). Degrades to local prefill — never
+    affects correctness, only latency (paper §3.3 fallback)."""
 
 
 def _pack(obj) -> bytes:
@@ -54,10 +66,35 @@ class InProcTransport:
 
 
 class TCPTransport:
-    def __init__(self, host: str, port: int, timeout: float = 30.0):
+    """Length-prefixed msgpack over one socket.
+
+    ``connect_timeout`` bounds the initial connect; ``timeout`` bounds
+    every request round trip. Any socket failure (refused, closed,
+    timed out) surfaces as :class:`TransportError` so a dead or slow
+    peer costs one bounded round trip and the session continues with
+    local prefill instead of blocking.
+    """
+
+    def __init__(self, host: str, port: int, timeout: float = 5.0,
+                 connect_timeout: Optional[float] = None):
         self.addr = (host, port)
-        self.sock = socket.create_connection(self.addr, timeout=timeout)
+        self.timeout = timeout
+        self.connect_timeout = connect_timeout or timeout
         self.lock = threading.Lock()
+        self.sock: Optional[socket.socket] = None
+        with self.lock:
+            self._connect()
+
+    def _connect(self) -> None:
+        try:
+            self.sock = socket.create_connection(
+                self.addr, timeout=self.connect_timeout)
+            self.sock.settimeout(self.timeout)
+        except OSError as e:
+            self.sock = None
+            raise TransportError(
+                f"connect to {self.addr[0]}:{self.addr[1]} "
+                f"failed: {e}") from e
 
     def request(self, op: str, payload: dict,
                 advance_clock: bool = True) -> Tuple[dict, float, int]:
@@ -65,8 +102,21 @@ class TCPTransport:
         req = _pack({"op": op, **payload})
         t0 = time.perf_counter()
         with self.lock:
-            self.sock.sendall(_HDR.pack(len(req)) + req)
-            raw = self._recv_frame()
+            if self.sock is None:    # previous failure poisoned the
+                self._connect()      # stream: start a fresh one
+            try:
+                self.sock.sendall(_HDR.pack(len(req)) + req)
+                raw = self._recv_frame()
+            except OSError as e:     # timeout, reset, closed, ...
+                # the stream may hold a half-read or in-flight response
+                # that would mis-pair with the NEXT request — poison the
+                # socket so the next call reconnects cleanly
+                try:
+                    self.sock.close()
+                finally:
+                    self.sock = None
+                raise TransportError(
+                    f"request {op!r} to {self.addr} failed: {e}") from e
         dt = time.perf_counter() - t0
         return _unpack(raw), dt, len(req) + len(raw)
 
@@ -80,12 +130,15 @@ class TCPTransport:
         while len(buf) < n:
             chunk = self.sock.recv(n - len(buf))
             if not chunk:
-                raise ConnectionError("server closed connection")
+                raise TransportError("server closed connection")
             buf += chunk
         return buf
 
     def close(self):
-        self.sock.close()
+        with self.lock:
+            if self.sock is not None:
+                self.sock.close()
+                self.sock = None
 
 
 def serve_tcp(server: CacheServer, host: str = "127.0.0.1",

@@ -1,0 +1,328 @@
+"""Multi-peer cache fabric: placement, gossip, planning, fault paths.
+
+The correctness contract is the paper's §3.3 extended to N peers: any
+catalog lie (Bloom false positive, eviction, stale gossip) and any
+transport failure (dead peer) costs latency only — outputs are
+token-identical to the single-server and cache-off runs, and a request
+never hangs.
+"""
+import pytest
+
+from repro.config import CacheConfig
+from repro.core import (
+    CacheCluster, CacheServer, EdgeClient, SimClock, SimNetwork,
+    TransportError,
+)
+from repro.core.cluster import PlacementPolicy, gossip_round
+from repro.core.perfmodel import PI_ZERO_2W
+from repro.core.session_pool import FetchBroker, SessionPool
+from repro.core.transport import InProcTransport
+from repro.data import MMLUGenerator, WordHashTokenizer
+from repro.serving.engine import InferenceEngine
+
+HET_LINKS = [(30e6, 0.002), (21e6, 0.003), (8e6, 0.008)]
+
+
+@pytest.fixture(scope="module")
+def fabric_world(tiny_setup):
+    cfg, model, params = tiny_setup
+    tok = WordHashTokenizer(cfg.vocab)
+    gen = MMLUGenerator(tok, n_shot=2)
+    engine = InferenceEngine(model, params, max_len=512)
+
+    def make_cluster(links=None, ccfg=None, **dir_kw):
+        ccfg = ccfg or CacheConfig()
+        cluster = CacheCluster(links or HET_LINKS, ccfg)
+
+        def client(name, **kw):
+            dkw = dict(dir_kw)
+            dkw.update(kw.pop("dir_kw", {}))
+            d = cluster.directory(clock=SimClock(), **dkw)
+            return EdgeClient(name, engine, d, ccfg,
+                              perf=PI_ZERO_2W, **kw)
+        return cluster, client
+    return gen, engine, make_cluster
+
+
+# ---------------------------------------------------------------------------
+# placement
+# ---------------------------------------------------------------------------
+
+def test_consistent_hash_stability():
+    ids3 = ["a", "b", "c"]
+    p3 = PlacementPolicy(ids3)
+    p2 = PlacementPolicy(["a", "b"])
+    keys = [bytes([i]) * 32 for i in range(200)]
+    moved = 0
+    for k in keys:
+        assert p3.primary(k) in ids3
+        order = p3.ring_order(k)
+        assert sorted(order) == sorted(ids3)       # every peer reachable
+        assert p3.ring_order(k) == order           # deterministic
+        if p3.primary(k) != p2.primary(k):
+            moved += 1
+            assert p3.primary(k) == "c"            # only c's keys remap
+    assert 0 < moved < len(keys)                   # and not all keys
+
+
+# ---------------------------------------------------------------------------
+# gossip: uploaded via A, discoverable via B
+# ---------------------------------------------------------------------------
+
+def test_gossip_spreads_key_knowledge(fabric_world):
+    gen, engine, make_cluster = fabric_world
+    cluster, _ = make_cluster()
+    a, b, c = cluster.peers
+    a.server.put(b"k" * 32, b"blob-on-a")
+    assert gossip_round(cluster.peers) > 0
+    # b can now advertise a's key with its owner
+    resp = b.handle("csync", {"since": 0, "since_remote": 0})
+    assert [b"k" * 32, a.peer_id] in resp["remote"]
+    # a second round adds nothing (delta sync converged)
+    assert gossip_round(cluster.peers) == 0
+
+
+def test_blob_via_peer_a_discoverable_syncing_only_peer_b(fabric_world):
+    """The issue's headline scenario: client 1 uploads through the
+    fabric (placement picks some peer); client 2 only ever syncs with a
+    DIFFERENT peer, yet still finds and fetches the blob. A
+    single-range prompt (fixed token ids) keeps the owner
+    deterministic."""
+    gen, engine, make_cluster = fabric_world
+    from repro.core import PromptSegments
+    cluster, client = make_cluster()
+    c1 = client("uploader")
+    tokens = list(range(3, 60))                # one range: the full prompt
+    seg = PromptSegments.make(tokens, [len(tokens)])
+    r1 = c1.infer(seg, max_new_tokens=4)
+    assert r1.case == 1 and r1.blob_bytes_up > 0
+    key = seg.keys(c1.meta)[0].digest
+    owner = next(pid for pid, peer in cluster.by_id.items()
+                 if key in peer.server.store)
+    other = next(pid for pid in cluster.by_id if pid != owner)
+
+    cluster.gossip()
+    c2 = client("syncer", dir_kw={"sync_peers": [other]})
+    c2.sync_catalog()
+    r2 = c2.infer(seg, max_new_tokens=4)
+    assert r2.matched_tokens == len(tokens)
+    assert r2.served_by == owner               # fetched from the owner
+    assert r2.output_tokens == r1.output_tokens
+
+
+# ---------------------------------------------------------------------------
+# Bloom FP -> failed GET -> local prefill, across multiple peers
+# ---------------------------------------------------------------------------
+
+def test_multi_peer_false_positive_falls_back_to_local(fabric_world):
+    gen, engine, make_cluster = fabric_world
+    cluster, client = make_cluster()
+    poisoned, honest = client("poisoned"), client("honest")
+    p = gen.prompt("prehistory", 3)
+    keys = p.segments.keys(poisoned.meta)
+    for pid in cluster.by_id:                  # every peer's catalog lies
+        for k in keys:
+            poisoned.directory.register(pid, k.digest)
+    r = poisoned.infer(p.segments, max_new_tokens=3, upload_on_miss=False)
+    rh = honest.infer(p.segments, max_new_tokens=3, upload_on_miss=False)
+    assert r.case == 1 and r.false_positive
+    assert r.fetch_attempts >= len(cluster.peers)   # walked the plan
+    assert r.output_tokens == rh.output_tokens
+    assert r.sim.redis > 0                     # paid the wasted GETs
+    misses = sum(s.misses
+                 for s in poisoned.directory.peer_stats().values())
+    assert misses == r.fetch_attempts
+
+
+# ---------------------------------------------------------------------------
+# dead peers: suspect, fall back, never hang, revive
+# ---------------------------------------------------------------------------
+
+def test_dead_peer_degrades_to_local_prefill(fabric_world):
+    gen, engine, make_cluster = fabric_world
+    cluster, client = make_cluster()
+    c1, c2 = client("seed"), client("reader")
+    p = gen.prompt("virology", 0)
+    r1 = c1.infer(p.segments, max_new_tokens=4)
+    c2.sync_catalog()
+    r2 = c2.infer(p.segments, max_new_tokens=4)
+    # the planner may pick a shorter range on a faster link — any
+    # remote hit will do
+    assert r2.matched_tokens > 0 and r2.served_by
+
+    for pid in cluster.by_id:                  # kill the WHOLE fabric
+        cluster.kill(pid)
+    r3 = c2.infer(p.segments, max_new_tokens=4, upload_on_miss=False)
+    assert r3.case == 1 and r3.matched_tokens == 0
+    assert r3.extra.get("dead_peer_failures", 0) >= 1
+    assert r3.output_tokens == r1.output_tokens
+    suspects = [ln for ln in c2.directory.links.values()
+                if ln.suspect_until > c2.clock.now()]
+    assert suspects                            # belief updated
+
+    # revive + cooldown elapsed -> remote hits come back
+    for pid in cluster.by_id:
+        cluster.revive(pid)
+    c2.clock.advance(c2.directory.suspect_cooldown_s + 1)
+    r4 = c2.infer(p.segments, max_new_tokens=4)
+    assert r4.matched_tokens > 0 and r4.served_by
+    assert r4.output_tokens == r1.output_tokens
+
+
+def test_dead_transport_error_is_bounded(fabric_world):
+    gen, engine, make_cluster = fabric_world
+    cluster, client = make_cluster()
+    c = client("c")
+    cluster.kill("peer0")
+    with pytest.raises(TransportError):
+        c.directory.request("peer0", "ping", {})
+    assert "peer0" not in c.directory.usable_ids()
+
+
+# ---------------------------------------------------------------------------
+# determinism: N-peer == single-server == cache-off, token for token
+# ---------------------------------------------------------------------------
+
+def test_npeer_outputs_token_identical_to_single_and_cache_off(fabric_world):
+    gen, engine, make_cluster = fabric_world
+    ccfg = CacheConfig()
+    prompts = [gen.prompt(d, q).segments
+               for d in ("anatomy", "nutrition") for q in range(3)]
+
+    def run_cluster():
+        cluster, client = make_cluster(ccfg=ccfg)
+        c = client("c")
+        outs = []
+        for p in prompts:
+            c.directory.last_sync_t = -1e18    # eager sync each prompt
+            c.sync_catalog()
+            cluster.gossip()
+            outs.append(c.infer(p, max_new_tokens=4).output_tokens)
+        return outs
+
+    def run_single():
+        server = CacheServer(ccfg)
+        tr = InProcTransport(server, SimNetwork(), SimClock())
+        c = EdgeClient("s", engine, tr, ccfg, perf=PI_ZERO_2W)
+        outs = []
+        for p in prompts:
+            c.catalog.last_sync_t = -1e18
+            c.sync_catalog()
+            outs.append(c.infer(p, max_new_tokens=4).output_tokens)
+        return outs
+
+    def run_cache_off():
+        server = CacheServer(ccfg)
+        tr = InProcTransport(server, SimNetwork(), SimClock())
+        c = EdgeClient("off", engine, tr, ccfg, perf=PI_ZERO_2W)
+        return [c.infer(p, max_new_tokens=4,
+                        upload_on_miss=False).output_tokens
+                for p in prompts]
+
+    off = run_cache_off()
+    assert run_cluster() == off
+    assert run_single() == off
+
+
+# ---------------------------------------------------------------------------
+# hot-key replication + planner link preference
+# ---------------------------------------------------------------------------
+
+def test_hot_key_replicates_to_fastest_peer(fabric_world):
+    gen, engine, make_cluster = fabric_world
+    cluster, client = make_cluster()
+    c = client("c", dir_kw={"hot_threshold": 2})
+    p = gen.prompt("marketing", 0)
+    c.infer(p.segments, max_new_tokens=2)      # upload via placement
+    c.sync_catalog()
+    for _ in range(3):                         # make the fetched key hot
+        r = c.infer(p.segments, max_new_tokens=2)
+        assert r.matched_tokens > 0
+    assert c.directory.replications >= 1
+    # some key now lives on more than one peer
+    replicated = [k for k in p.segments.keys(c.meta)
+                  if sum(k.digest in peer.server.store
+                         for peer in cluster.peers) >= 2]
+    assert replicated
+
+
+def test_planner_prefers_fast_link_and_prunes_slow(fabric_world):
+    gen, engine, make_cluster = fabric_world
+    # same key on a fast and a glacial peer: the plan leads with fast,
+    # and a hopeless link (slower than recompute) is pruned entirely
+    cluster, client = make_cluster(
+        links=[(100e6, 0.001), (1e4, 0.5)])    # 10 kb/s straggler
+    c = client("c")
+    p = gen.prompt("sociology", 0)
+    keys = p.segments.keys(c.meta)
+    for pid in cluster.by_id:
+        for k in keys:
+            c.directory.register(pid, k.digest)
+    n = len(p.segments.token_ids)
+    plan = c.planner.plan(keys, n,
+                          min_match=c.cache_cfg.min_match_tokens)
+    assert plan and plan[0].peer_id == "peer0"
+    assert all(a.peer_id == "peer0" for a in plan)   # straggler pruned
+    local_s = c.perf.time_prefill(c.perf_cfg, n)
+    assert all(a.est_total_s < local_s for a in plan)
+
+
+# ---------------------------------------------------------------------------
+# broker dedup is per (peer, key); session pool runs over the fabric
+# ---------------------------------------------------------------------------
+
+def test_broker_dedup_is_per_peer_and_key():
+    broker = FetchBroker()
+    calls = []
+
+    def issue(tag):
+        def _go():
+            calls.append(tag)
+            return {"ok": True, "blob": tag.encode()}, 0.0, 1
+        return _go
+
+    r1 = broker.fetch(("p1", b"k"), issue("p1"))
+    r2 = broker.fetch(("p2", b"k"), issue("p2"))
+    assert calls == ["p1", "p2"]               # distinct transfers
+    assert r1[0]["blob"] == b"p1" and r2[0]["blob"] == b"p2"
+    # same (peer, key) again -> LRU blob cache, no new transfer
+    r3 = broker.fetch(("p1", b"k"), issue("p1-again"))
+    assert calls == ["p1", "p2"] and r3[3] is True
+
+
+def test_session_pool_over_cluster(fabric_world):
+    gen, engine, make_cluster = fabric_world
+    cluster, _ = make_cluster()
+    pool = SessionPool(None, engine, n_sessions=2,
+                       cache_cfg=cluster.cache_cfg, perf=PI_ZERO_2W,
+                       cluster=cluster)
+    p = gen.prompt("jurisprudence", 0)
+    seed = pool.sessions[0].infer(p.segments, max_new_tokens=3)
+    pool.sync_catalogs()
+    jobs = [p.segments] * 4
+    results = pool.run(jobs, max_new_tokens=3)
+    assert all(r is not None for r in results)
+    assert all(r.output_tokens == seed.output_tokens for r in results)
+    # every session hit SOME prefix (the planner may prefer a shorter
+    # range on a faster link over the full blob on a slow one)
+    assert all(r.matched_tokens > 0 for r in results)
+
+
+# ---------------------------------------------------------------------------
+# eviction tombstones through the sync op
+# ---------------------------------------------------------------------------
+
+def test_eviction_tombstones_exposed_via_sync():
+    server = CacheServer(CacheConfig(max_store_bytes=250))
+    for i in range(5):
+        server.put(bytes([i]) * 32, b"x" * 100)
+    assert server.stats["evictions"] >= 2
+    assert server.stats["tombstones"] == server.stats["evictions"]
+    resp = server.handle("sync", {"since": 0})
+    assert resp["tombstones"] == server.stats["tombstones"]
+    assert resp["version"] == 5
+    # re-uploading an evicted key heals its tombstone
+    victim = next(iter(server.tombstones))
+    before = server.stats["tombstones"]
+    server.put(victim, b"y" * 10)
+    assert server.stats["tombstones"] == before - 1

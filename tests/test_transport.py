@@ -1,8 +1,13 @@
 """Transports: simulated-latency accounting and the real TCP server."""
+import socket
+
+import pytest
 
 from repro.config import CacheConfig
 from repro.core import CacheServer, SimClock, SimNetwork
-from repro.core.transport import InProcTransport, TCPTransport, serve_tcp
+from repro.core.transport import (
+    InProcTransport, TCPTransport, TransportError, serve_tcp,
+)
 
 
 def test_inproc_latency_model():
@@ -38,6 +43,46 @@ def test_tcp_roundtrip():
         tr.close()
     finally:
         shutdown()
+
+
+def test_tcp_connect_refused_raises_transport_error():
+    # grab a port that is definitely closed
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    with pytest.raises(TransportError):
+        TCPTransport("127.0.0.1", port, timeout=0.5)
+
+
+def test_tcp_dead_server_raises_transport_error_not_hang():
+    server = CacheServer(CacheConfig())
+    port, shutdown = serve_tcp(server)
+    tr = TCPTransport("127.0.0.1", port, timeout=1.0)
+    resp, _, _ = tr.request("ping", {})
+    assert resp["ok"]
+    shutdown()                    # server goes away mid-session
+    with pytest.raises(TransportError):
+        for _ in range(3):        # closed socket surfaces within a try
+            tr.request("ping", {})
+    tr.close()
+
+
+def test_tcp_request_timeout_is_bounded():
+    # a listener that accepts but never answers: the request must fail
+    # within the socket timeout instead of blocking the session
+    import time
+    srv = socket.socket()
+    srv.bind(("127.0.0.1", 0))
+    srv.listen(1)
+    port = srv.getsockname()[1]
+    tr = TCPTransport("127.0.0.1", port, timeout=0.3)
+    t0 = time.perf_counter()
+    with pytest.raises(TransportError):
+        tr.request("ping", {})
+    assert time.perf_counter() - t0 < 5.0
+    tr.close()
+    srv.close()
 
 
 def test_server_sync_incremental():
