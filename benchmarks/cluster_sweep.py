@@ -71,22 +71,31 @@ def run_single(engine, w, prompts, ccfg, max_new: int, cache: bool):
 
 
 def run_fabric(engine, w, prompts, ccfg, max_new: int, links,
-               kill_at: int = -1, kill_peer: str = ""):
+               kill_at: int = -1, kill_peer: str = "",
+               adaptive: bool = True, gossip_fanout=None,
+               congest_at: int = -1, congest_peer: str = "",
+               congest_bw: float = 1e6):
     cluster = CacheCluster(links, ccfg)
     # replicate on first fetch: at most one GET per key ever pays a slow
     # link, then the planner routes over the fastest replica (the store
     # budget is charged identically to the single-server baseline)
-    d = cluster.directory(clock=SimClock(), hot_threshold=1)
+    d = cluster.directory(clock=SimClock(), hot_threshold=1,
+                          adaptive=adaptive)
     c = EdgeClient("fabric", engine, d, ccfg, perf=w.perf, perf_cfg=w.cfg)
     results = []
     for i, p in enumerate(prompts):
-        cluster.gossip()
+        cluster.gossip(fanout=gossip_fanout)
         d.last_sync_t = -1e18
         c.sync_catalog()
         if i == kill_at:
             # kill AFTER the sync so the next GET (not the off-path
             # sync) is what discovers the death — the worst case
             cluster.kill(kill_peer)
+        if i == congest_at:
+            # silent mid-run congestion: the link's true bandwidth
+            # collapses but nothing announces it — only observed
+            # transfers can reveal it to the planner
+            cluster.by_id[congest_peer].net.bandwidth_bps = congest_bw
         results.append(c.infer(p, max_new_tokens=max_new))
     return results, cluster, d
 
@@ -167,6 +176,47 @@ def main():
             f"{cluster.stored_bytes()};budget={budget_total};"
             f"replications={d.replications};{hits};"
             f"est_err_s={est_err:.3f}"))
+
+    # congestion drill: the fastest link silently collapses to 1 Mb/s a
+    # third of the way in. The static planner keeps pricing it from its
+    # nominal 40 Mb/s and keeps routing the hot head over it; the
+    # adaptive planner reprices from observed transfers (LinkEstimator
+    # EWMA) within a few fetches and reroutes to replicas/local prefill.
+    name, setting, links, skew = sweep[0]
+    w, engine = world_engine(setting)
+    prompts = skewed_workload(w.gen, n_prompts, domains, skew)
+    ccfg_peer = CacheConfig(max_store_bytes=budget_total // len(links))
+    off, _ = run_single(engine, w, prompts,
+                        CacheConfig(max_store_bytes=budget_total),
+                        max_new, cache=False)
+    congest = dict(congest_at=n_prompts // 3, congest_peer="peer0",
+                   congest_bw=1e6)
+    static, _, _ = run_fabric(engine, w, prompts, ccfg_peer, max_new,
+                              links, adaptive=False, **congest)
+    adapt, _, d_ad = run_fabric(engine, w, prompts, ccfg_peer, max_new,
+                                links, adaptive=True, **congest)
+    outs = [r.output_tokens for r in off]
+    assert [r.output_tokens for r in static] == outs, \
+        "congestion drill: static outputs diverged"
+    assert [r.output_tokens for r in adapt] == outs, \
+        "congestion drill: adaptive outputs diverged"
+    post = slice(n_prompts // 3, None)
+    t_static, t_adapt = mean_ttft(static), mean_ttft(adapt)
+    t_static_post = mean_ttft(static[post])
+    t_adapt_post = mean_ttft(adapt[post])
+    assert t_adapt < t_static, (
+        f"adaptive planner ({t_adapt:.3f}s) did not beat static "
+        f"({t_static:.3f}s) under congestion")
+    p0 = d_ad.peer_stats().get("peer0")
+    lines.append(csv_line(
+        "cluster_congested_adaptive_vs_static", t_adapt * 1e6,
+        f"congested=peer0@{n_prompts // 3}->1Mb/s;"
+        f"ttft_static={t_static:.3f}s;ttft_adaptive={t_adapt:.3f}s;"
+        f"adaptive_vs_static={100 * (1 - t_adapt / t_static):.1f}%;"
+        f"post_ttft_static={t_static_post:.3f}s;"
+        f"post_ttft_adaptive={t_adapt_post:.3f}s;"
+        f"est_bw_peer0={p0.est_bw_bps / 1e6:.1f}Mb/s;"
+        f"obs_peer0={p0.link_observations};tokens_identical=True"))
 
     # fault drill: kill the fastest peer halfway through the skewed run,
     # right after a catalog sync — the next GET discovers the death

@@ -1,0 +1,83 @@
+"""Epidemic gossip fanout vs the full mesh: convergence at N=16.
+
+Each of N peers starts holding a few unique keys. One *round* lets
+every peer pull ``csync`` deltas from its partners — all N-1 of them in
+the full mesh, or ``k`` random neighbors in the epidemic variant. We
+measure rounds and total exchanged entries until every peer can
+advertise every key (full knowledge), which is what bounds how stale a
+client's per-peer catalogs can be.
+
+The point: the full mesh converges in one round but costs O(N²)
+exchanges per round — at N=16 that is 240 pulls per round, every
+round, forever. Epidemic fanout k=2 pays O(N·k)=32 pulls per round and
+still converges in O(log N) rounds, so the *steady-state* sync traffic
+(the rounds after convergence, when nothing is new) drops ~8x.
+
+    PYTHONPATH=src python -m benchmarks.gossip_convergence
+"""
+from __future__ import annotations
+
+import random
+
+from benchmarks.common import csv_line, timed
+from repro.config import CacheConfig
+from repro.core import CacheCluster
+from repro.core.cluster.peer import gossip_round
+
+N_PEERS = 16
+KEYS_PER_PEER = 4
+MAX_ROUNDS = 64
+
+
+def build_cluster() -> tuple:
+    cluster = CacheCluster([(21e6, 0.003)] * N_PEERS,
+                           CacheConfig(bloom_capacity=10_000))
+    digests = []
+    for i, p in enumerate(cluster.peers):
+        for j in range(KEYS_PER_PEER):
+            d = bytes([i, j]) * 16
+            p.server.put(d, b"x")
+            digests.append(d)
+    return cluster, digests
+
+
+def converged(peers, digests) -> bool:
+    return all(p.knows(d) for p in peers for d in digests)
+
+
+def run(fanout, seed: int = 0):
+    cluster, digests = build_cluster()
+    peers = cluster.peers
+    rng = random.Random(seed)
+    rounds, pulls = 0, 0
+    while rounds < MAX_ROUNDS and not converged(peers, digests):
+        gossip_round(peers, fanout=fanout, rng=rng)
+        rounds += 1
+        per_round = (len(peers) * (len(peers) - 1) if fanout is None
+                     else len(peers) * min(fanout, len(peers) - 1))
+        pulls += per_round
+    entries = sum(p.gossip_stats["keys_in"] for p in peers)
+    wire = sum(p.gossip_stats["bytes"] for p in peers)
+    return rounds, pulls, entries, wire, converged(peers, digests)
+
+
+def main():
+    lines = []
+    for fanout in (None, 1, 2, 4):
+        label = "mesh" if fanout is None else f"k{fanout}"
+        (rounds, pulls, entries, wire, ok), dt = timed(run, fanout)
+        assert ok or fanout == 1, \
+            f"gossip fanout={fanout} failed to converge in {MAX_ROUNDS}"
+        # steady-state pulls/round once converged is the recurring cost
+        steady = (N_PEERS * (N_PEERS - 1) if fanout is None
+                  else N_PEERS * (fanout or 0))
+        lines.append(csv_line(
+            f"gossip_convergence_{label}", dt / max(rounds, 1) * 1e6,
+            f"n={N_PEERS};rounds={rounds};pulls={pulls};"
+            f"entries={entries};wire_bytes={wire};"
+            f"steady_pulls_per_round={steady};converged={ok}"))
+    return lines
+
+
+if __name__ == "__main__":
+    main()

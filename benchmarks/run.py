@@ -21,6 +21,7 @@ MODULES = [
     "benchmarks.range_stride",         # beyond-paper: dense range regs
     "benchmarks.workload_sim",         # full 6434-prompt workload (§5.1)
     "benchmarks.cluster_sweep",        # multi-peer fabric vs single box
+    "benchmarks.gossip_convergence",   # epidemic fanout vs full mesh, N=16
     "benchmarks.engine_micro",         # substrate microbenchmarks
     "benchmarks.serving_throughput",   # continuous batching + sessions
     "benchmarks.roofline_table",       # §Roofline (from dry-run records)

@@ -1,16 +1,23 @@
 """Walkthrough of the multi-peer cache fabric (beyond the paper's
 single cache box).
 
-Three peers with heterogeneous links form the fabric. Edge clients hold
-one Bloom catalog per peer (kept fresh by delta sync + peer-to-peer
-gossip), plan fetches by estimated per-link cost, place uploads by
-consistent hashing, and replicate hot keys onto the fastest link.
-Halfway through, the fastest peer is killed: requests fast-fail, the
-peer is marked suspect, and the workload completes with identical
-tokens.
+Peers with heterogeneous links form the fabric. Edge clients hold one
+Bloom catalog per peer (kept fresh by delta sync + peer-to-peer
+gossip), plan fetches by estimated per-link cost (adaptive EWMA link
+estimation), place uploads by consistent hashing, and replicate hot
+keys onto the fastest link. Halfway through, one peer is killed:
+requests fast-fail, the peer is marked suspect, and the workload
+completes with identical tokens.
+
+Default mode simulates the peers in-process (deterministic latencies).
+``--tcp`` launches REAL peer processes — one ``repro.core.net.daemon``
+per peer, supervised, gossiping over localhost sockets — and drives
+the identical client stack against them; the mid-run kill is a real
+``kill -9`` of a daemon.
 
     PYTHONPATH=src python examples/cluster_demo.py
     PYTHONPATH=src python examples/cluster_demo.py --peers 5 --no-kill
+    PYTHONPATH=src python examples/cluster_demo.py --tcp
 """
 import argparse
 
@@ -19,7 +26,7 @@ import numpy as np
 
 from repro.config import CacheConfig
 from repro.configs import get_config
-from repro.core import CacheCluster, EdgeClient, SimClock
+from repro.core import CacheCluster, EdgeClient, PeerSupervisor, SimClock
 from repro.core.perfmodel import PI_ZERO_2W
 from repro.data import MMLUGenerator, WordHashTokenizer, MMLU_DOMAINS
 from repro.models import Model
@@ -35,6 +42,8 @@ def main():
     ap.add_argument("--clients", type=int, default=2)
     ap.add_argument("--prompts", type=int, default=16)
     ap.add_argument("--no-kill", action="store_true")
+    ap.add_argument("--tcp", action="store_true",
+                    help="real peer processes over localhost sockets")
     args = ap.parse_args()
 
     cfg = get_config("gemma3-270m").reduced()
@@ -45,47 +54,66 @@ def main():
     gen = MMLUGenerator(WordHashTokenizer(cfg.vocab), n_shot=2)
 
     ccfg = CacheConfig()
-    cluster = CacheCluster(LINKS[:args.peers], ccfg)
-    print("fabric:", ", ".join(
-        f"{p.peer_id}({p.net.bandwidth_bps / 1e6:.0f}Mb/s,"
-        f"{p.net.rtt_s * 1e3:.0f}ms)" for p in cluster.peers))
+    if args.tcp:
+        sup = PeerSupervisor.fleet(args.peers).start()
+        fabric = sup
+        print("fabric (real processes):", ", ".join(
+            f"{pid}@{host}:{port} pid={sup.procs[pid].proc.pid}"
+            for pid, (host, port) in sup.addresses().items()))
+        mk_dir = lambda: sup.directory(hot_threshold=2)
+        perf, perf_cfg = None, None          # wall clock is the metric
+    else:
+        cluster = CacheCluster(LINKS[:args.peers], ccfg)
+        fabric = cluster
+        print("fabric:", ", ".join(
+            f"{p.peer_id}({p.net.bandwidth_bps / 1e6:.0f}Mb/s,"
+            f"{p.net.rtt_s * 1e3:.0f}ms)" for p in cluster.peers))
+        mk_dir = lambda: cluster.directory(clock=SimClock(),
+                                           hot_threshold=2)
+        perf, perf_cfg = PI_ZERO_2W, full_cfg
 
-    clients = []
-    for i in range(args.clients):
-        d = cluster.directory(clock=SimClock(), hot_threshold=2)
-        clients.append(EdgeClient(f"edge-{i}", engine, d, ccfg,
-                                  perf=PI_ZERO_2W, perf_cfg=full_cfg))
+    clients = [EdgeClient(f"edge-{i}", engine, mk_dir(), ccfg,
+                          perf=perf, perf_cfg=perf_cfg)
+               for i in range(args.clients)]
 
     rng = np.random.default_rng(0)
     kill_at = -1 if args.no_kill else args.prompts // 2
     served = []                       # (prompt, tokens) for the anchor
     for i in range(args.prompts):
         if i == kill_at:
-            fastest = max(cluster.peers,
-                          key=lambda p: p.net.bandwidth_bps).peer_id
-            cluster.kill(fastest)
-            print(f"--- killed {fastest} ---")
+            if args.tcp:
+                victim = next(iter(sup.procs))
+                sup.kill(victim, hard=True)       # a real kill -9
+                print(f"--- kill -9 {victim} "
+                      f"(pid {sup.procs[victim].proc.pid}) ---")
+            else:
+                victim = max(cluster.peers,
+                             key=lambda p: p.net.bandwidth_bps).peer_id
+                cluster.kill(victim)
+                print(f"--- killed {victim} ---")
         p = gen.prompt(MMLU_DOMAINS[i % 2], int(rng.integers(3)))
         c = clients[int(rng.integers(len(clients)))]
-        cluster.gossip()              # peers exchange key-log deltas
+        if not args.tcp:
+            cluster.gossip()          # peers exchange key-log deltas
         c.directory.last_sync_t = -1e18
         c.sync_catalog()              # client refreshes per-peer catalogs
         r = c.infer(p.segments, max_new_tokens=6)
         via = f"via {r.served_by}" if r.served_by else "local"
         dead = int(r.extra.get("dead_peer_failures", 0))
+        bd = r.wall if args.tcp else r.sim
+        unit = 1e3 if args.tcp else 1.0
         print(f"[{c.name}] {p.domain:22s} case={r.case} "
               f"matched={r.matched_tokens:3d}/{r.prompt_tokens:3d} "
               f"{via:10s} est={r.est_fetch_s * 1e3:6.1f}ms "
               f"act={r.actual_fetch_s * 1e3:6.1f}ms "
-              f"ttft={r.sim.ttft:6.2f}s"
+              f"ttft={bd.ttft * unit:7.2f}{'ms' if args.tcp else 's '}"
               + (f" dead_fastfails={dead}" if dead else ""))
         served.append((p.segments, r.output_tokens))
 
     # correctness anchor: a cache-off client (never uploads, never
     # fetches) must produce the exact same greedy tokens
-    off = EdgeClient("cache-off", engine,
-                     cluster.directory(clock=SimClock()), ccfg,
-                     perf=PI_ZERO_2W, perf_cfg=full_cfg)
+    off = EdgeClient("cache-off", engine, mk_dir(), ccfg,
+                     perf=perf, perf_cfg=perf_cfg)
     for seg, tokens in served:
         r = off.infer(seg, max_new_tokens=6, upload_on_miss=False)
         assert r.output_tokens == tokens, "fabric changed the tokens!"
@@ -97,10 +125,18 @@ def main():
         print(f"  {pid}: hits={st.hits} misses={st.misses} "
               f"down={st.bytes_down / 1e3:.0f}kB up={st.bytes_up / 1e3:.0f}kB "
               f"dead_fails={st.transport_errors} "
+              f"est_bw={st.est_bw_bps / 1e6:.1f}Mb/s "
+              f"est_rtt={st.est_rtt_s * 1e3:.1f}ms "
+              f"obs={st.link_observations} "
               f"est_err={st.est_error_s * 1e3:+.1f}ms")
     print("replications (hot keys -> fastest link):",
           sum(c.directory.replications for c in clients))
-    print("server stats:", cluster.server_stats())
+    if args.tcp:
+        print("fleet health:", fabric.health())
+        fabric.stop()
+        print("fleet stopped (graceful drain)")
+    else:
+        print("server stats:", fabric.server_stats())
 
 
 if __name__ == "__main__":

@@ -2,15 +2,16 @@
 
 Public API:
     BloomFilter, Catalog, PromptKey, PromptSegments,
-    CacheServer, EdgeClient, SimNetwork, SimClock, DevicePerfModel,
-    SessionPool, FetchBroker, TransportError,
-    CacheCluster, CachePeer, PeerDirectory, FetchPlanner, PlacementPolicy
+    CacheServer, EdgeClient, SimNetwork, SimClock, WallClock,
+    DevicePerfModel, SessionPool, FetchBroker, TransportError,
+    CacheCluster, CachePeer, PeerDirectory, FetchPlanner, PlacementPolicy,
+    LinkEstimator, TCPPeerLink, PeerSupervisor, serve_peer_tcp
 """
 from repro.core.bloom import BloomFilter  # noqa: F401
 from repro.core.catalog import Catalog  # noqa: F401
 from repro.core.keys import PromptKey, model_meta  # noqa: F401
 from repro.core.segments import PromptSegments  # noqa: F401
-from repro.core.netsim import SimClock, SimNetwork  # noqa: F401
+from repro.core.netsim import SimClock, SimNetwork, WallClock  # noqa: F401
 from repro.core.server import CacheServer  # noqa: F401
 from repro.core.transport import TransportError  # noqa: F401
 from repro.core.client import EdgeClient  # noqa: F401
@@ -18,4 +19,7 @@ from repro.core.perfmodel import DevicePerfModel  # noqa: F401
 from repro.core.session_pool import FetchBroker, SessionPool  # noqa: F401
 from repro.core.cluster import (  # noqa: F401
     CacheCluster, CachePeer, FetchPlanner, PeerDirectory, PlacementPolicy,
+)
+from repro.core.net import (  # noqa: F401
+    LinkEstimator, PeerSpec, PeerSupervisor, TCPPeerLink, serve_peer_tcp,
 )

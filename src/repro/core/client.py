@@ -147,9 +147,12 @@ class EdgeClient:
             resp, dt, nb, was_shared, template = self._fetch(
                 cand, att.peer_id)
             net = self._link_net(att.peer_id)
+            # a link with a SimNetwork behind it charges modeled time;
+            # a real TCP link (net is None) charges measured wall time
+            sim_link = self.clock is not None and net is not None
             hit = bool(resp.get("ok") and resp.get("blob"))
-            dl = 0.0
-            if self.clock is not None and net is not None:
+            dl, basis_bytes = 0.0, None
+            if sim_link:
                 if was_shared:
                     dl = 0.0         # piggybacks on the deduped transfer
                 elif resp.get("dead"):
@@ -160,12 +163,16 @@ class EdgeClient:
                     nb_full = state_bytes(cfg, cand.n_tokens,
                                           with_logits=hit and
                                           cand.n_tokens == n)
+                    if hit:
+                        basis_bytes = nb_full
                     dl = net.transfer_time(nb_full if hit else 256)
                 else:
                     dl = dt
                 sim.redis += dl
+                actual_cost = dl
             else:
                 wall.redis += dt
+                actual_cost = dt
             if resp.get("dead"):
                 # peer unreachable (already marked suspect) — fall to the
                 # next attempt, then to local prefill; never a hang
@@ -174,11 +181,14 @@ class EdgeClient:
             if self.directory is not None and att.peer_id is not None \
                     and not was_shared:
                 # shared (broker-deduped) adoptions put no bytes on the
-                # wire — only the leader's GET is accounted per peer
+                # wire — only the leader's GET is accounted per peer.
+                # basis_bytes keeps the estimator's bandwidth samples on
+                # the same byte basis as the planner's estimates when
+                # the blob transfer was charged from analytic sizing.
                 self.directory.record_get(
-                    att.peer_id, hit, att.est_fetch_s,
-                    dl if self.clock is not None else dt,
-                    len(resp.get("blob") or b"") if hit else 0)
+                    att.peer_id, hit, att.est_fetch_s, actual_cost,
+                    len(resp.get("blob") or b"") if hit else 0,
+                    basis_bytes=basis_bytes)
             if hit:
                 blob = resp["blob"]
                 shared = was_shared
@@ -194,7 +204,7 @@ class EdgeClient:
                 if att.peer_id is not None:
                     served_by = att.peer_id
                     est_fetch = att.est_fetch_s
-                    actual_fetch = dl if self.clock is not None else dt
+                    actual_fetch = actual_cost
                     if not was_shared:
                         # hot keys replicate to the fastest other peer
                         # (off the critical path); only the leader of a
@@ -288,11 +298,15 @@ class EdgeClient:
                 return self.transport.request("get", {"key": cand.digest})
             broker_key = cand.digest
         if self.broker is None:
+            t0 = time.perf_counter()
             try:
                 resp, dt, nb = issue()
             except TransportError as e:
+                # charge what the fast-fail actually cost (a refused
+                # connect is ~0, a request timeout is the full bound) —
+                # the wall breakdown must show the stall
                 return ({"ok": False, "dead": True, "error": repr(e)},
-                        0.0, 0, False, None)
+                        time.perf_counter() - t0, 0, False, None)
             return resp, dt, nb, False, None
         return self.broker.fetch(broker_key, issue,
                                  prep=self.engine.new_cache)

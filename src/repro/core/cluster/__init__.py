@@ -15,6 +15,7 @@ and heterogeneous client link:
 """
 from __future__ import annotations
 
+import random
 from typing import Dict, List, Optional, Sequence, Union
 
 from repro.config import CacheConfig
@@ -25,6 +26,7 @@ from repro.core.cluster.directory import (  # noqa: F401
 from repro.core.cluster.peer import (  # noqa: F401
     CachePeer, PeerTransport, gossip_round,
 )
+from repro.core.net.estimator import LinkEstimator  # noqa: F401
 from repro.core.cluster.placement import (  # noqa: F401
     HotKeyTracker, PlacementPolicy,
 )
@@ -57,6 +59,7 @@ class CacheCluster:
             self.peers.append(CachePeer(name, cache_cfg, net))
         self.by_id: Dict[str, CachePeer] = {
             p.peer_id: p for p in self.peers}
+        self._gossip_rng = random.Random(0xC1)   # epidemic partner picks
 
     # ------------------------------------------------------------------
     def directory(self, clock: Optional[SimClock] = None,
@@ -64,8 +67,11 @@ class CacheCluster:
         return PeerDirectory(self.peers, self.cache_cfg,
                              clock=clock or SimClock(), **kw)
 
-    def gossip(self) -> int:
-        return gossip_round(self.peers)
+    def gossip(self, fanout: Optional[int] = None) -> int:
+        """One anti-entropy round: full mesh by default, epidemic
+        random-``fanout`` pulls per peer when ``fanout`` is given."""
+        return gossip_round(self.peers, fanout=fanout,
+                            rng=self._gossip_rng)
 
     def kill(self, peer_id: str) -> None:
         self.by_id[peer_id].alive = False

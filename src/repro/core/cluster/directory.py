@@ -1,19 +1,33 @@
 """Client-side view of the cache fabric: one Bloom catalog *per peer*.
 
 The :class:`PeerDirectory` replaces the single transport in
-``EdgeClient``. It knows, per peer: the link (own bandwidth/RTT), a
-local Bloom catalog of that peer's contents (kept fresh by delta/gossip
-``csync``), liveness belief (a failed request marks the peer *suspect*
-for a cooldown window — never a hang), and per-peer
-:class:`~repro.core.metrics.PeerStats`.
+``EdgeClient``. It knows, per peer: the link (in-proc simulated or a
+real :class:`~repro.core.net.link.TCPPeerLink` socket — the directory
+is transport-agnostic), a local Bloom catalog of that peer's contents
+(kept fresh by delta/gossip ``csync``), liveness belief (a failed
+request marks the peer *suspect* for a cooldown window — never a
+hang), and per-peer :class:`~repro.core.metrics.PeerStats`.
+
+Fetch costs come from a :class:`~repro.core.net.estimator.LinkEstimator`
+— an EWMA over the transfers the directory actually observes — seeded
+from each link's nominal ``SimNetwork`` parameters when they exist, so
+a fresh directory prices links exactly like the static PR-2 planner
+and then *adapts*: a congested link's estimate degrades within a few
+fetches and the planner reroutes (``adaptive=False`` pins the
+construction-time nominal costs for A/B comparison; see
+``benchmarks/cluster_sweep.py``).
 
 Uploads follow the consistent-hash placement policy; keys observed hot
 at fetch time are replicated best-effort to the fastest other peer, so
-the skewed head of the workload migrates onto the best links.
+the skewed head of the workload migrates onto the best links. With a
+decaying :class:`HotKeyTracker` (``hot_decay_every``), keys that cool
+lose that extra replica again: the directory remembers which replicas
+it minted and garbage-collects them (``del`` op) once the key is no
+longer hot, returning the bytes to the peer's store budget.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.config import CacheConfig
 from repro.core.catalog import Catalog
@@ -21,18 +35,21 @@ from repro.core.metrics import PeerStats
 from repro.core.netsim import SimClock
 from repro.core.cluster.peer import CachePeer, PeerTransport
 from repro.core.cluster.placement import HotKeyTracker, PlacementPolicy
+from repro.core.net.estimator import LinkEstimator
 from repro.core.transport import TransportError
 
 
 class PeerLink:
     """Everything the client tracks about one peer."""
 
-    def __init__(self, peer: CachePeer, transport, cache_cfg: CacheConfig):
-        self.peer = peer
+    def __init__(self, peer_id: str, transport, cache_cfg: CacheConfig,
+                 peer: Optional[CachePeer] = None):
+        self.peer_id = peer_id
+        self.peer = peer               # in-proc fabric only; None on TCP
         self.transport = transport
         self.catalog = Catalog(cache_cfg)
-        self.stats = PeerStats(peer.peer_id)
-        self.suspect_until = -1e18      # sim-clock time; past = usable
+        self.stats = PeerStats(peer_id)
+        self.suspect_until = -1e18      # clock time; past = usable
         self.local_version = 0          # csync cursor into peer.key_log
         self.remote_version = 0         # csync cursor into peer.remote_log
 
@@ -42,23 +59,35 @@ class PeerLink:
 
 
 class PeerDirectory:
-    def __init__(self, peers: Sequence[CachePeer],
+    def __init__(self, peers: Sequence,
                  cache_cfg: CacheConfig = CacheConfig(),
                  clock: Optional[SimClock] = None,
                  placement: Optional[PlacementPolicy] = None,
                  hot_threshold: int = 3,
+                 hot_decay_every: int = 0,
                  replicate_hot: bool = True,
                  suspect_cooldown_s: float = 30.0,
-                 sync_peers: Optional[Sequence[str]] = None):
+                 sync_peers: Optional[Sequence[str]] = None,
+                 estimator: Optional[LinkEstimator] = None,
+                 adaptive: bool = True):
+        """``peers`` mixes :class:`CachePeer` objects (in-proc fabric:
+        the directory builds the simulated ``PeerTransport``) and
+        transport-like objects carrying a ``peer_id`` and
+        ``request(op, payload, advance_clock)`` — e.g.
+        :class:`~repro.core.net.link.TCPPeerLink` for real peers."""
         self.cache_cfg = cache_cfg
         self.clock = clock or SimClock()
         self.links: Dict[str, PeerLink] = {}
         for p in peers:
-            self.links[p.peer_id] = PeerLink(
-                p, PeerTransport(p, self.clock), cache_cfg)
-        self.placement = placement or PlacementPolicy(
-            [p.peer_id for p in peers])
-        self.hot = HotKeyTracker(hot_threshold)
+            if isinstance(p, CachePeer):
+                link = PeerLink(p.peer_id, PeerTransport(p, self.clock),
+                                cache_cfg, peer=p)
+            else:                       # transport-like (TCPPeerLink, ...)
+                link = PeerLink(p.peer_id, p, cache_cfg)
+            self.links[link.peer_id] = link
+        self.placement = placement or PlacementPolicy(list(self.links))
+        self.hot = HotKeyTracker(hot_threshold,
+                                 decay_every=hot_decay_every)
         self.replicate_hot = replicate_hot
         self.suspect_cooldown_s = suspect_cooldown_s
         # restrict which peers this client syncs with (partial
@@ -67,6 +96,24 @@ class PeerDirectory:
         self.last_sync_t = -1e18
         self.sync_bytes = 0
         self.replications = 0
+        self.replica_gcs = 0
+        # replicas THIS directory minted: digest -> replica peer id
+        # (the GC set for cooled keys)
+        self._replicas: Dict[bytes, str] = {}
+        # link costs: nominal snapshot at construction + adaptive EWMA
+        # seeded from it. ``adaptive=False`` pins the nominal costs.
+        self.adaptive = adaptive
+        self.estimator = estimator or LinkEstimator()
+        self._nominal: Dict[str, Tuple[float, float]] = {}
+        for pid, ln in self.links.items():
+            net = ln.net
+            if net is not None:
+                self._nominal[pid] = (net.bandwidth_bps, net.rtt_s)
+                self.estimator.seed(pid, net.bandwidth_bps, net.rtt_s)
+            else:
+                self._nominal[pid] = (self.estimator.default_bw_bps,
+                                      self.estimator.default_rtt_s)
+                self.estimator.seed(pid)
 
     # -- liveness ------------------------------------------------------
     def peer_ids(self) -> List[str]:
@@ -140,8 +187,14 @@ class PeerDirectory:
             raise
 
     def est_fetch_s(self, peer_id: str, nbytes: int) -> float:
-        net = self.links[peer_id].net
-        return net.transfer_time(nbytes) if net is not None else 0.0
+        """Estimated seconds to move ``nbytes`` from ``peer_id`` — what
+        the :class:`~repro.core.cluster.FetchPlanner` consumes. Adaptive
+        mode prices from the estimator's observed EWMA; otherwise from
+        the construction-time nominal link parameters."""
+        if self.adaptive:
+            return self.estimator.est_fetch_s(peer_id, nbytes)
+        bw, rtt = self._nominal[peer_id]
+        return rtt + nbytes * 8.0 / bw
 
     # -- placement -----------------------------------------------------
     def upload(self, digest: bytes, blob: bytes) -> int:
@@ -167,10 +220,17 @@ class PeerDirectory:
                    src_peer: str) -> Optional[str]:
         """Record a successful fetch; once the key is hot, replicate it
         best-effort to the fastest usable peer that does not already
-        advertise it. Returns the replica peer id when one was made."""
+        advertise it. Keys that have *cooled* (decaying tracker) lose
+        the replica this directory minted for them — see
+        :meth:`gc_replicas`. Returns the replica peer id when one was
+        made."""
         self.hot.note(digest)
+        if self.hot.decay_every > 0:
+            self.gc_replicas()
         if not (self.replicate_hot and self.hot.is_hot(digest)):
             return None
+        if digest in self._replicas:
+            return None                # this directory already made one
         holders = set(self.lookup(digest)) | {src_peer}
         cands = [pid for pid in self.usable_ids() if pid not in holders]
         if not cands:
@@ -185,11 +245,43 @@ class PeerDirectory:
         self.links[target].catalog.register(digest)
         self.links[target].stats.bytes_up += len(blob)
         self.replications += 1
+        self._replicas[digest] = target
         return target
+
+    def gc_replicas(self) -> int:
+        """Delete the extra replicas of keys that are no longer hot.
+
+        Only replicas minted by this directory are touched (never the
+        consistent-hash primary), so the worst case of an over-eager GC
+        is the pre-replication state. The freed bytes return to the
+        replica peer's store budget; the key lingers in Bloom catalogs
+        as a tombstone and degrades into a §3.3 false positive if
+        probed. Returns the number of replicas collected."""
+        gone = 0
+        for digest in [d for d, _ in self._replicas.items()
+                       if not self.hot.is_hot(d)]:
+            target = self._replicas[digest]
+            try:
+                self.request(target, "del", {"key": digest},
+                             advance_clock=False)
+            except TransportError:
+                # transient failure: keep the entry so the next GC pass
+                # retries instead of leaking an untracked replica (and
+                # so a re-heated key can't mint a second copy)
+                continue
+            del self._replicas[digest]
+            gone += 1
+            self.replica_gcs += 1
+        return gone
 
     # -- accounting ----------------------------------------------------
     def record_get(self, peer_id: str, hit: bool, est_s: float,
-                   actual_s: float, nbytes: int) -> None:
+                   actual_s: float, nbytes: int,
+                   basis_bytes: Optional[int] = None) -> None:
+        """Account one GET and feed the link estimator. ``basis_bytes``
+        is the byte count the planner's estimate was computed from
+        (analytic blob sizing under perf emulation); it defaults to the
+        wire bytes so real-TCP observations use what actually moved."""
         st = self.links[peer_id].stats
         st.gets += 1
         if hit:
@@ -197,8 +289,17 @@ class PeerDirectory:
             st.bytes_down += nbytes
             st.est_fetch_s += est_s
             st.actual_fetch_s += actual_s
+            self.estimator.observe(peer_id, basis_bytes or nbytes,
+                                   actual_s)
         else:
             st.misses += 1
+            # a failed GET is a near-empty round trip: an RTT sample
+            self.estimator.observe(peer_id, 256, actual_s)
 
     def peer_stats(self) -> Dict[str, PeerStats]:
+        for pid, ln in self.links.items():
+            bw, rtt, n_obs = self.estimator.snapshot(pid)
+            ln.stats.est_bw_bps = bw
+            ln.stats.est_rtt_s = rtt
+            ln.stats.link_observations = n_obs
         return {pid: ln.stats for pid, ln in self.links.items()}

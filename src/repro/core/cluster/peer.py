@@ -1,20 +1,31 @@
 """A cache *peer*: one member of the multi-peer prompt-cache fabric.
 
 Each peer is a full :class:`CacheServer` (own blob store, own master
-Bloom catalog, own key log) reachable over its *own* link — a
-:class:`SimNetwork` with per-peer bandwidth/RTT, modeling the
-heterogeneous edge clusters of TPI-LLM (arXiv:2410.00531) where one
-neighbor sits on fast 5 GHz Wi-Fi and another behind a lossy 2.4 GHz
-hop.
+Bloom catalog, own key log) reachable over its *own* link — in the
+simulation a :class:`SimNetwork` with per-peer bandwidth/RTT, modeling
+the heterogeneous edge clusters of TPI-LLM (arXiv:2410.00531); in a
+real deployment a TCP socket served by
+:func:`repro.core.net.server.serve_peer_tcp`.
 
 Peers additionally *gossip*: off the critical path they exchange
 key-log deltas with each other, so each peer can advertise not only
 its own blobs but also which keys its neighbors hold. A client that
 only ever syncs with peer B still discovers a blob uploaded via peer A
 (``csync`` returns ``remote`` entries tagged with the owner peer id).
+
+The gossip exchange itself is transport-agnostic: a pull is one
+``csync`` request against the source (direct ``handle`` call in-proc,
+a socket round trip between peer daemons) whose reply is folded in by
+:meth:`CachePeer.fold_gossip`. ``gossip_round`` runs either the
+full-mesh anti-entropy of the PR-2 fabric or — with ``fanout=k`` —
+epidemic rounds where every peer pulls from only ``k`` random
+neighbors, trading a few extra rounds for O(N·k) instead of O(N²)
+exchanges per round (see ``benchmarks/gossip_convergence.py``).
 """
 from __future__ import annotations
 
+import random
+import threading
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.config import CacheConfig
@@ -37,44 +48,72 @@ class CachePeer:
         self.gossip_net = gossip_net or self.net  # peer <-> peer link
         self.alive = True
         # gossip state: how far we've consumed each neighbor's key log,
-        # and the (digest, owner) entries we can advertise onward
+        # and the (digest, owner) entries we can advertise onward.
+        # Guarded by _glock: a daemon's gossip thread folds while its
+        # server connections read csync.
+        self._glock = threading.Lock()
         self._cursors: Dict[str, int] = {}
         self.remote_log: List[Tuple[bytes, str]] = []
         self._remote_seen: Set[Tuple[bytes, str]] = set()
         self.gossip_stats = {"rounds": 0, "keys_in": 0, "bytes": 0}
 
     # ------------------------------------------------------------------
+    def gossip_cursors(self, src_id: str) -> Tuple[int, int]:
+        """(since, since_remote) for a ``csync`` pull from ``src_id``."""
+        with self._glock:
+            return (self._cursors.get(src_id, 0),
+                    self._cursors.get(src_id + "#remote", 0))
+
+    def fold_gossip(self, resp: dict) -> int:
+        """Fold one ``csync`` reply from a neighbor into our remote
+        log; updates that neighbor's cursors. Returns the number of
+        fresh entries. Works identically whether the reply came from a
+        direct in-proc call or over a socket (msgpack lists)."""
+        src = resp.get("peer", "")
+        fresh = 0
+        with self._glock:
+            for k in resp.get("keys", []):      # src's own new keys
+                entry = (bytes(k), src)
+                if entry in self._remote_seen or k in self.server.store:
+                    continue
+                self._remote_seen.add(entry)
+                self.remote_log.append(entry)
+                fresh += 1
+            # relay second-hand knowledge (epidemic spread: what the
+            # source learned from its neighbors becomes visible here)
+            for k, owner in resp.get("remote", []):
+                entry = (bytes(k), owner)
+                if owner == self.peer_id or entry in self._remote_seen:
+                    continue
+                self._remote_seen.add(entry)
+                self.remote_log.append(entry)
+                fresh += 1
+            self._cursors[src] = resp.get("version",
+                                          self._cursors.get(src, 0))
+            self._cursors[src + "#remote"] = resp.get(
+                "remote_version", self._cursors.get(src + "#remote", 0))
+            self.gossip_stats["keys_in"] += fresh
+            self.gossip_stats["bytes"] += fresh * _GOSSIP_BYTES_PER_KEY
+            self.gossip_stats["rounds"] += 1
+        return fresh
+
     def pull_from(self, other: "CachePeer") -> int:
-        """One gossip pull: fold ``other``'s new keys (own + relayed)
-        into our remote log. Returns the number of fresh entries."""
+        """One in-proc gossip pull: a direct ``csync`` against the
+        other peer, folded in. Returns the number of fresh entries."""
         if not (self.alive and other.alive):
             return 0
-        keys, v = other.server.sync(self._cursors.get(other.peer_id, 0))
-        self._cursors[other.peer_id] = v
-        fresh = 0
-        for k in keys:
-            entry = (k, other.peer_id)
-            if entry in self._remote_seen or k in self.server.store:
-                continue
-            self._remote_seen.add(entry)
-            self.remote_log.append(entry)
-            fresh += 1
-        # relay second-hand knowledge (epidemic spread: what *other*
-        # learned from its neighbors becomes visible here too)
-        rkey = other.peer_id + "#remote"
-        start = self._cursors.get(rkey, 0)
-        for k, owner in other.remote_log[start:]:
-            entry = (k, owner)
-            if owner == self.peer_id or entry in self._remote_seen:
-                continue
-            self._remote_seen.add(entry)
-            self.remote_log.append(entry)
-            fresh += 1
-        self._cursors[rkey] = len(other.remote_log)
-        self.gossip_stats["keys_in"] += fresh
-        self.gossip_stats["bytes"] += fresh * _GOSSIP_BYTES_PER_KEY
-        self.gossip_stats["rounds"] += 1
-        return fresh
+        since, since_r = self.gossip_cursors(other.peer_id)
+        resp = other.handle("csync", {"since": since,
+                                      "since_remote": since_r})
+        return self.fold_gossip(resp)
+
+    def knows(self, digest: bytes) -> bool:
+        """True if this peer can advertise ``digest`` — holds it or has
+        gossip-learned an owner for it (convergence probes)."""
+        if digest in self.server.store:
+            return True
+        with self._glock:
+            return any(k == digest for k, _ in self._remote_seen)
 
     # ------------------------------------------------------------------
     def handle(self, op: str, payload: dict) -> dict:
@@ -86,11 +125,14 @@ class CachePeer:
         round refreshes the client's catalogs for *every* peer."""
         if op == "csync":
             keys, v = self.server.sync(payload.get("since", 0))
-            since_r = payload.get("since_remote", 0)
-            remote = [[k, owner] for k, owner in self.remote_log[since_r:]]
+            with self._glock:
+                since_r = payload.get("since_remote", 0)
+                remote = [[k, owner]
+                          for k, owner in self.remote_log[since_r:]]
+                remote_v = len(self.remote_log)
             return {"ok": True, "keys": keys, "version": v,
                     "remote": remote,
-                    "remote_version": len(self.remote_log),
+                    "remote_version": remote_v,
                     "tombstones": self.server.stats["tombstones"],
                     "peer": self.peer_id}
         return self.server.handle(op, payload)
@@ -107,6 +149,7 @@ class PeerTransport(InProcTransport):
     def __init__(self, peer: CachePeer, clock: Optional[SimClock] = None):
         super().__init__(peer, peer.net, clock)
         self.peer = peer
+        self.peer_id = peer.peer_id
 
     def request(self, op: str, payload: dict, advance_clock: bool = True):
         if not self.peer.alive:
@@ -114,13 +157,27 @@ class PeerTransport(InProcTransport):
         return super().request(op, payload, advance_clock)
 
 
-def gossip_round(peers: Sequence[CachePeer]) -> int:
-    """One full-mesh anti-entropy round: every live peer pulls deltas
-    from every other live peer. Off the critical path (no sim clock is
-    advanced); returns the number of entries exchanged."""
+def gossip_round(peers: Sequence[CachePeer], fanout: Optional[int] = None,
+                 rng: Optional[random.Random] = None) -> int:
+    """One anti-entropy round; returns the number of entries exchanged.
+
+    ``fanout=None`` is the full mesh: every live peer pulls deltas from
+    every other live peer (O(N²) exchanges — exact single-round
+    convergence for first-hand keys). ``fanout=k`` is the epidemic
+    variant: every peer pulls from ``k`` uniformly random live
+    neighbors, so a round costs O(N·k) exchanges and knowledge spreads
+    in expected O(log N) rounds. Off the critical path (no sim clock is
+    advanced)."""
     total = 0
+    if fanout is None:
+        for dst in peers:
+            for src in peers:
+                if dst is not src:
+                    total += dst.pull_from(src)
+        return total
+    rng = rng or random.Random()
     for dst in peers:
-        for src in peers:
-            if dst is not src:
-                total += dst.pull_from(src)
+        others = [p for p in peers if p is not dst and p.alive]
+        for src in rng.sample(others, min(fanout, len(others))):
+            total += dst.pull_from(src)
     return total

@@ -60,12 +60,23 @@ class PlacementPolicy:
 class HotKeyTracker:
     """Counts fetches per key digest; a key is *hot* once it has been
     fetched ``threshold`` times — the signal for best-effort
-    replication to a faster peer."""
+    replication to a faster peer.
 
-    def __init__(self, threshold: int = 3, max_entries: int = 4096):
+    With ``decay_every > 0`` the counts are halved after every
+    ``decay_every`` observed fetches, so hotness tracks the *recent*
+    workload: a key that stops being fetched cools below the threshold
+    within a few decay periods (exponential forgetting), which is what
+    lets the directory garbage-collect its extra replica and hand the
+    bytes back to the store budget."""
+
+    def __init__(self, threshold: int = 3, max_entries: int = 4096,
+                 decay_every: int = 0):
         self.threshold = threshold
         self.max_entries = max_entries
+        self.decay_every = decay_every
         self.counts: Dict[bytes, int] = {}
+        self._notes_since_decay = 0
+        self.decays = 0
 
     def note(self, digest: bytes) -> int:
         if digest not in self.counts and \
@@ -74,7 +85,18 @@ class HotKeyTracker:
             coldest = min(self.counts, key=self.counts.get)
             del self.counts[coldest]
         self.counts[digest] = self.counts.get(digest, 0) + 1
-        return self.counts[digest]
+        if self.decay_every > 0:
+            self._notes_since_decay += 1
+            if self._notes_since_decay >= self.decay_every:
+                self.decay()
+        return self.counts.get(digest, 0)
+
+    def decay(self) -> None:
+        """Halve every count; entries that reach zero are dropped."""
+        self._notes_since_decay = 0
+        self.decays += 1
+        self.counts = {d: c // 2 for d, c in self.counts.items()
+                       if c // 2 > 0}
 
     def is_hot(self, digest: bytes) -> bool:
         return self.counts.get(digest, 0) >= self.threshold

@@ -14,6 +14,13 @@ lose to local prefill on a fast device). The client walks the plan in
 order, falling to the next attempt on Bloom false positives, evictions,
 and dead peers, and to local prefill when the plan is exhausted.
 
+``link_rtt`` and ``link_bw`` are *adaptive*: ``directory.est_fetch_s``
+prices every candidate from the
+:class:`~repro.core.net.estimator.LinkEstimator`'s EWMA over observed
+transfers (seeded from the nominal link parameters), so the same
+planner code adapts to congestion on the simulated fabric and prices
+real TCP links it was never given parameters for.
+
 Without a device perf model there is no compute estimate to trade
 against, so the plan preserves the paper's longest-first order and
 only uses the link model to break ties between peers.

@@ -65,6 +65,12 @@ class PeerStats:
     est_fetch_s: float = 0.0       # sum of planner estimates on hits
     actual_fetch_s: float = 0.0    # sum of realized fetch times on hits
     tombstones: int = 0            # stale keys the peer advertised at sync
+    # adaptive link estimation (EWMA over observed transfers): the
+    # planner's current belief about this link, and how many transfer
+    # observations shaped it (0 = still on the seeded prior)
+    est_bw_bps: float = 0.0
+    est_rtt_s: float = 0.0
+    link_observations: int = 0
 
     @property
     def est_error_s(self) -> float:

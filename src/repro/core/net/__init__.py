@@ -1,0 +1,45 @@
+"""Real multi-process peer runtime over TCP.
+
+This package turns the in-process cluster fabric of
+:mod:`repro.core.cluster` into a deployable system of real peer
+processes on real sockets:
+
+* :mod:`~repro.core.net.frames`     — versioned length-prefixed wire format
+* :class:`PeerServer` / ``serve_peer_tcp`` — async TCP server hosting a
+  peer's ``handle(op, payload)`` with a graceful in-flight drain
+* :class:`TCPPeerLink`              — socket-backed peer link that plugs
+  into :class:`~repro.core.cluster.PeerDirectory` where the simulated
+  link goes
+* :class:`LinkEstimator`            — EWMA bandwidth/RTT per peer from
+  observed transfers; prices the fetch planner on both fabrics
+* :class:`PeerSupervisor`           — spawns, health-checks, restarts,
+  and tears down N peer daemons (``python -m repro.core.net.daemon``)
+
+Submodules are loaded lazily: :mod:`repro.core.transport` imports
+``frames`` from here while ``link``/``supervisor`` import the transport
+back, and laziness keeps that cycle unwound.
+"""
+from __future__ import annotations
+
+_EXPORTS = {
+    "FrameError": ("repro.core.net.frames", "FrameError"),
+    "LinkEstimate": ("repro.core.net.estimator", "LinkEstimate"),
+    "LinkEstimator": ("repro.core.net.estimator", "LinkEstimator"),
+    "PeerServer": ("repro.core.net.server", "PeerServer"),
+    "serve_peer_tcp": ("repro.core.net.server", "serve_peer_tcp"),
+    "TCPPeerLink": ("repro.core.net.link", "TCPPeerLink"),
+    "PeerSpec": ("repro.core.net.supervisor", "PeerSpec"),
+    "PeerSupervisor": ("repro.core.net.supervisor", "PeerSupervisor"),
+}
+
+__all__ = list(_EXPORTS)
+
+
+def __getattr__(name: str):
+    try:
+        mod_name, attr = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}") from None
+    import importlib
+    return getattr(importlib.import_module(mod_name), attr)

@@ -1,0 +1,140 @@
+"""Peer daemon: one cache peer as a standalone OS process.
+
+    python -m repro.core.net.daemon --peer-id peer0 --port 0 \
+        --max-store-bytes 2000000
+
+Hosts a :class:`~repro.core.cluster.CachePeer` behind
+:func:`~repro.core.net.server.serve_peer_tcp` and prints one
+machine-readable handshake line on stdout once the socket is bound::
+
+    PEER-READY <peer_id> <host> <port>
+
+which is how the :class:`~repro.core.net.supervisor.PeerSupervisor`
+learns OS-assigned ports. The import footprint is deliberately tiny —
+config + cache + sockets, no JAX — so a fleet of daemons starts in
+milliseconds.
+
+On top of the peer's ops the daemon speaks three control ops:
+
+* ``health``        — liveness + store occupancy + pid
+* ``set_neighbors`` — ``{peers: {peer_id: [host, port], ...}}``; arms
+  the epidemic gossip thread, which every ``--gossip-interval`` seconds
+  pulls ``csync`` deltas from ``--gossip-fanout`` random neighbors over
+  TCP and folds them in (random-k rounds, not a full mesh)
+* ``shutdown``      — replies ``{"ok": True}`` then exits through the
+  server's graceful drain, so concurrent in-flight requests still get
+  their responses before the sockets close
+
+SIGTERM triggers the same graceful path.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import random
+import signal
+import sys
+import threading
+from typing import Dict, Tuple
+
+from repro.config import CacheConfig
+from repro.core.cluster.peer import CachePeer
+from repro.core.net.link import TCPPeerLink
+from repro.core.net.server import serve_peer_tcp
+from repro.core.transport import TransportError
+
+
+class DaemonHandler:
+    """Wraps a peer's ``handle`` with the daemon control ops."""
+
+    def __init__(self, peer: CachePeer, stop_event: threading.Event):
+        self.peer = peer
+        self.stop_event = stop_event
+        self.neighbors: Dict[str, Tuple[str, int]] = {}
+        self._nlock = threading.Lock()
+
+    def handle(self, op: str, payload: dict) -> dict:
+        if op == "health":
+            return {"ok": True, "peer": self.peer.peer_id,
+                    "pid": os.getpid(),
+                    "stored_bytes": self.peer.server.stored_bytes,
+                    "n_entries": len(self.peer.server.store),
+                    "gossip": dict(self.peer.gossip_stats)}
+        if op == "set_neighbors":
+            with self._nlock:
+                self.neighbors = {
+                    pid: (host, int(port))
+                    for pid, (host, port) in payload["peers"].items()
+                    if pid != self.peer.peer_id}
+            return {"ok": True, "n_neighbors": len(self.neighbors)}
+        if op == "shutdown":
+            self.stop_event.set()
+            return {"ok": True, "bye": self.peer.peer_id}
+        return self.peer.handle(op, payload)
+
+    def snapshot_neighbors(self) -> Dict[str, Tuple[str, int]]:
+        with self._nlock:
+            return dict(self.neighbors)
+
+
+def gossip_loop(handler: DaemonHandler, interval_s: float, fanout: int,
+                stop_event: threading.Event) -> None:
+    """Epidemic pull gossip over TCP: each round, ``csync`` against
+    ``fanout`` random neighbors and fold the deltas in. A dead neighbor
+    costs one bounded :class:`TransportError`, nothing more."""
+    peer = handler.peer
+    rng = random.Random(hash(peer.peer_id) & 0xFFFF)
+    links: Dict[str, TCPPeerLink] = {}
+    while not stop_event.wait(interval_s):
+        neighbors = handler.snapshot_neighbors()
+        if not neighbors:
+            continue
+        ids = sorted(neighbors)
+        for pid in rng.sample(ids, min(fanout, len(ids))):
+            link = links.get(pid)
+            if link is None or link.addr != neighbors[pid]:
+                link = links[pid] = TCPPeerLink(
+                    pid, *neighbors[pid], timeout=2.0)
+            since, since_r = peer.gossip_cursors(pid)
+            try:
+                resp, _, _ = link.request(
+                    "csync", {"since": since, "since_remote": since_r})
+            except TransportError:
+                continue
+            peer.fold_gossip(resp)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--peer-id", required=True)
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0)
+    ap.add_argument("--max-store-bytes", type=int, default=0)
+    ap.add_argument("--gossip-interval", type=float, default=0.25)
+    ap.add_argument("--gossip-fanout", type=int, default=2)
+    ap.add_argument("--drain-timeout", type=float, default=5.0)
+    args = ap.parse_args(argv)
+
+    stop_event = threading.Event()
+    peer = CachePeer(args.peer_id, CacheConfig(
+        max_store_bytes=args.max_store_bytes))
+    handler = DaemonHandler(peer, stop_event)
+    server = serve_peer_tcp(handler, args.host, args.port,
+                            drain_timeout_s=args.drain_timeout)
+
+    signal.signal(signal.SIGTERM, lambda *_: stop_event.set())
+    signal.signal(signal.SIGINT, lambda *_: stop_event.set())
+    threading.Thread(target=gossip_loop,
+                     args=(handler, args.gossip_interval,
+                           args.gossip_fanout, stop_event),
+                     daemon=True).start()
+
+    print(f"PEER-READY {args.peer_id} {args.host} {server.port}",
+          flush=True)
+    stop_event.wait()
+    server.close(graceful=True)        # drain in-flight, then exit
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,146 @@
+"""Versioned length-prefixed frame format for the peer wire protocol.
+
+Every message on a peer socket is one frame::
+
+    +-------+---------+-----+-------------+------------------+
+    | magic | version | pad | length (u32)| msgpack payload  |
+    | b"PC" |  1 byte | 1B  | little end. | ``length`` bytes |
+    +-------+---------+-----+-------------+------------------+
+
+The 2-byte magic catches cross-protocol accidents (an HTTP client, a
+stray port scan) immediately instead of interpreting garbage as a
+length; the version byte lets a future wire change fail loudly on both
+sides rather than mis-parse. Violations raise :class:`FrameError` — a
+``ConnectionError`` subclass, so transports that already translate
+socket failures into ``TransportError`` handle it on the same path.
+
+Sync (blocking socket) and async (asyncio stream) helpers share the
+header so the threaded client transport and the asyncio peer server
+speak byte-identical frames.
+"""
+from __future__ import annotations
+
+import struct
+from typing import Optional
+
+import msgpack
+
+MAGIC = b"PC"
+VERSION = 1
+_HDR = struct.Struct("<2sBxI")          # magic, version, pad, payload len
+HEADER_SIZE = _HDR.size
+# a prompt-cache blob for a long prompt is a few MB; 1 GiB is far above
+# any legitimate frame and bounds memory against a corrupt length field
+MAX_FRAME_BYTES = 1 << 30
+
+
+class FrameError(ConnectionError):
+    """Malformed frame: bad magic, unknown version, oversized or
+    truncated payload. The stream can no longer be trusted — callers
+    must poison/close the connection."""
+
+
+def pack_payload(obj) -> bytes:
+    return msgpack.packb(obj, use_bin_type=True)
+
+
+def unpack_payload(raw: bytes):
+    """Decode a frame payload; any unpack failure (corrupt bytes,
+    trailing garbage) is a protocol violation, i.e. a FrameError."""
+    try:
+        return msgpack.unpackb(raw, raw=False)
+    except Exception as e:
+        raise FrameError(f"undecodable frame payload: {e!r}") from e
+
+
+def encode_frame(obj, version: int = VERSION) -> bytes:
+    payload = pack_payload(obj)
+    if len(payload) > MAX_FRAME_BYTES:
+        raise FrameError(f"frame payload {len(payload)}B exceeds "
+                         f"{MAX_FRAME_BYTES}B limit")
+    return _HDR.pack(MAGIC, version, len(payload)) + payload
+
+
+def parse_header(hdr: bytes) -> int:
+    """Validate a header; returns the payload length."""
+    magic, version, n = _HDR.unpack(hdr)
+    if magic != MAGIC:
+        raise FrameError(f"bad frame magic {magic!r} (expected {MAGIC!r})")
+    if version != VERSION:
+        raise FrameError(f"unsupported frame version {version} "
+                         f"(speaking {VERSION})")
+    if n > MAX_FRAME_BYTES:
+        raise FrameError(f"frame length {n}B exceeds limit")
+    return n
+
+
+# ---------------------------------------------------------------------------
+# blocking-socket helpers (client transports, tests)
+# ---------------------------------------------------------------------------
+
+def _recv_exact(sock, n: int) -> bytes:
+    buf = b""
+    while len(buf) < n:
+        chunk = sock.recv(min(1 << 20, n - len(buf)))
+        if not chunk:
+            raise FrameError(
+                f"connection closed mid-frame ({len(buf)}/{n} bytes)")
+        buf += chunk
+    return buf
+
+
+def send_frame(sock, obj) -> int:
+    """Send one frame; returns bytes put on the wire."""
+    data = encode_frame(obj)
+    sock.sendall(data)
+    return len(data)
+
+
+def recv_frame(sock):
+    """Receive one frame. Raises :class:`FrameError` on EOF (clean or
+    mid-frame) and on any protocol violation."""
+    return recv_frame_with_size(sock)[0]
+
+
+def recv_frame_with_size(sock):
+    """Like :func:`recv_frame` but also returns the total wire bytes
+    (header + payload) consumed."""
+    hdr = _recv_exact(sock, HEADER_SIZE)
+    n = parse_header(hdr)
+    return unpack_payload(_recv_exact(sock, n)), HEADER_SIZE + n
+
+
+# ---------------------------------------------------------------------------
+# asyncio-stream helpers (peer server)
+# ---------------------------------------------------------------------------
+
+async def recv_frame_async(reader) -> Optional[tuple]:
+    """Read one frame from an asyncio ``StreamReader``.
+
+    Returns ``(message, wire_bytes)`` — or ``None`` on clean EOF at a
+    frame boundary (the peer hung up between requests); raises
+    :class:`FrameError` on EOF mid-frame or protocol violations."""
+    import asyncio
+    try:
+        hdr = await reader.readexactly(HEADER_SIZE)
+    except asyncio.IncompleteReadError as e:
+        if not e.partial:
+            return None                 # clean close between frames
+        raise FrameError(
+            f"connection closed mid-header ({len(e.partial)}/"
+            f"{HEADER_SIZE} bytes)") from e
+    n = parse_header(hdr)
+    try:
+        payload = await reader.readexactly(n)
+    except asyncio.IncompleteReadError as e:
+        raise FrameError(
+            f"connection closed mid-frame ({len(e.partial)}/{n} "
+            f"bytes)") from e
+    return unpack_payload(payload), HEADER_SIZE + n
+
+
+async def send_frame_async(writer, obj) -> int:
+    data = encode_frame(obj)
+    writer.write(data)
+    await writer.drain()
+    return len(data)

@@ -1,0 +1,41 @@
+"""Client-side link to one real (TCP) cache peer.
+
+``TCPPeerLink`` is the socket twin of the in-proc
+:class:`~repro.core.cluster.peer.PeerTransport`: it carries a
+``peer_id`` and plugs into :class:`~repro.core.cluster.PeerDirectory`
+exactly where the simulated link does — the directory, planner, client,
+and session pool are identical on both fabrics. There is no
+``SimNetwork`` behind it (``net`` is ``None``); fetch costs come from
+the :class:`~repro.core.net.estimator.LinkEstimator`, fed by what the
+link actually measures.
+
+Connections are lazy and self-healing: the first request connects, a
+failed request poisons the socket (so a delayed response can never
+mis-pair with a later request) and the next request reconnects — which
+is also how a link survives its peer being restarted by the
+:class:`~repro.core.net.supervisor.PeerSupervisor` on the same port.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+from repro.core.transport import TCPTransport
+
+
+class TCPPeerLink(TCPTransport):
+    net = None                         # no simulated link behind a socket
+
+    def __init__(self, peer_id: str, host: str, port: int,
+                 timeout: float = 5.0,
+                 connect_timeout: Optional[float] = None):
+        self.peer_id = peer_id
+        super().__init__(host, port, timeout=timeout,
+                         connect_timeout=connect_timeout, eager=False)
+
+    @property
+    def address(self) -> Tuple[str, int]:
+        return self.addr
+
+    def __repr__(self) -> str:
+        return (f"TCPPeerLink({self.peer_id!r}, "
+                f"{self.addr[0]}:{self.addr[1]})")

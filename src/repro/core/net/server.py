@@ -1,0 +1,186 @@
+"""Async TCP server hosting one cache peer's ``handle(op, payload)``.
+
+``serve_peer_tcp`` puts any handler object (a
+:class:`~repro.core.cluster.CachePeer`, a bare
+:class:`~repro.core.server.CacheServer`, or a daemon wrapper) behind a
+real socket speaking the versioned frame protocol of
+:mod:`repro.core.net.frames`. The event loop runs on a daemon thread so
+the call returns immediately; handlers execute on the loop's default
+executor, so a multi-MB blob GET on one connection never blocks a
+health ping on another.
+
+Shutdown contract (the part PR 2's thread server got wrong): a graceful
+``close()`` first stops accepting, then *drains* — every request whose
+frame was fully read gets its handler run and its response flushed
+before the connection is closed — and only then tears down idle
+connections. A client caught by the close therefore sees either a
+complete response or a clean connection close at a frame boundary,
+which the transports surface as :class:`TransportError`; never a
+truncated frame, never a hang.
+"""
+from __future__ import annotations
+
+import asyncio
+import threading
+from typing import Optional, Set
+
+from repro.core.net import frames
+
+
+class PeerServer:
+    """One peer handler behind an asyncio TCP server.
+
+    Use :func:`serve_peer_tcp` instead of instantiating directly.
+    """
+
+    def __init__(self, handler, host: str = "127.0.0.1", port: int = 0,
+                 drain_timeout_s: float = 5.0):
+        # ``handler`` is the object whose .handle(op, payload) we serve;
+        # a plain callable is accepted too.
+        self.handle = handler.handle if hasattr(handler, "handle") \
+            else handler
+        self.host = host
+        self.port = port               # actual port after start()
+        self.drain_timeout_s = drain_timeout_s
+        self.stats = {"connections": 0, "requests": 0, "frame_errors": 0,
+                      "bytes_in": 0, "bytes_out": 0}
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._server: Optional[asyncio.AbstractServer] = None
+        self._thread: Optional[threading.Thread] = None
+        self._writers: Set[asyncio.StreamWriter] = set()
+        self._inflight = 0             # requests read but not yet flushed
+        self._stopping = False
+        self._closed = threading.Event()
+
+    # ------------------------------------------------------------------
+    def start(self) -> "PeerServer":
+        started = threading.Event()
+        fail: list = []
+
+        def run_loop():
+            loop = asyncio.new_event_loop()
+            asyncio.set_event_loop(loop)
+            self._loop = loop
+            try:
+                self._server = loop.run_until_complete(
+                    asyncio.start_server(self._conn, self.host, self.port))
+            except OSError as e:
+                fail.append(e)
+                started.set()
+                return
+            self.port = self._server.sockets[0].getsockname()[1]
+            started.set()
+            try:
+                loop.run_forever()
+            finally:
+                loop.close()
+                self._closed.set()
+
+        self._thread = threading.Thread(target=run_loop, daemon=True,
+                                        name=f"peer-srv:{self.host}")
+        self._thread.start()
+        started.wait()
+        if fail:
+            raise fail[0]
+        return self
+
+    # ------------------------------------------------------------------
+    async def _conn(self, reader: asyncio.StreamReader,
+                    writer: asyncio.StreamWriter) -> None:
+        self.stats["connections"] += 1
+        self._writers.add(writer)
+        loop = asyncio.get_event_loop()
+        try:
+            while not self._stopping:
+                try:
+                    got = await frames.recv_frame_async(reader)
+                except frames.FrameError:
+                    self.stats["frame_errors"] += 1
+                    return             # poisoned stream: drop it
+                if got is None:        # client hung up cleanly
+                    return
+                msg, n_in = got
+                self.stats["bytes_in"] += n_in
+                if not isinstance(msg, dict):
+                    # well-formed frame, nonsense payload: a protocol
+                    # violation, not a handler error
+                    self.stats["frame_errors"] += 1
+                    return
+                # From here to the flush the request counts as in
+                # flight: a graceful close() waits for it.
+                self._inflight += 1
+                try:
+                    self.stats["requests"] += 1
+                    op = msg.pop("op", None)
+                    try:
+                        resp = await loop.run_in_executor(
+                            None, self.handle, op, msg)
+                    except Exception as e:   # handler bug -> error reply
+                        resp = {"ok": False, "error": repr(e)}
+                    self.stats["bytes_out"] += await frames.send_frame_async(
+                        writer, resp)
+                finally:
+                    self._inflight -= 1
+        except (ConnectionError, asyncio.CancelledError):
+            pass
+        finally:
+            self._writers.discard(writer)
+            try:
+                writer.close()
+            except Exception:
+                pass
+
+    # ------------------------------------------------------------------
+    async def _shutdown(self, graceful: bool) -> None:
+        self._stopping = True
+        if self._server is not None:
+            self._server.close()       # stop accepting
+        if graceful:
+            # drain: let every already-read request finish and flush
+            deadline = self._loop.time() + self.drain_timeout_s
+            while self._inflight > 0 and self._loop.time() < deadline:
+                await asyncio.sleep(0.005)
+        for w in list(self._writers):  # idle conns: clean close at a
+            try:                       # frame boundary
+                w.close()
+            except Exception:
+                pass
+        # reap connection coroutines still parked on recv so the loop
+        # closes without "task was destroyed but it is pending" noise
+        me = asyncio.current_task()
+        tasks = [t for t in asyncio.all_tasks(self._loop) if t is not me]
+        for t in tasks:
+            t.cancel()
+        await asyncio.gather(*tasks, return_exceptions=True)
+        self._loop.stop()
+
+    def close(self, graceful: bool = True) -> None:
+        """Stop the server. ``graceful=True`` drains in-flight requests
+        (bounded by ``drain_timeout_s``) before closing connections."""
+        loop = self._loop
+        if loop is None or self._closed.is_set() or not loop.is_running():
+            return
+        try:
+            asyncio.run_coroutine_threadsafe(
+                self._shutdown(graceful), loop)
+        except RuntimeError:
+            return                     # loop already gone
+        self._closed.wait(self.drain_timeout_s + 2.0)
+
+    # ------------------------------------------------------------------
+    def __enter__(self) -> "PeerServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def serve_peer_tcp(handler, host: str = "127.0.0.1", port: int = 0,
+                   drain_timeout_s: float = 5.0) -> PeerServer:
+    """Serve ``handler.handle(op, payload)`` over TCP.
+
+    Returns a started :class:`PeerServer`; read ``.port`` for the bound
+    port (OS-assigned when ``port=0``), call ``.close()`` (or use it as
+    a context manager) to shut down with an in-flight drain.
+    """
+    return PeerServer(handler, host, port, drain_timeout_s).start()

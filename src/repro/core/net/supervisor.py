@@ -1,0 +1,291 @@
+"""Process supervisor for a fleet of TCP cache-peer daemons.
+
+``PeerSupervisor`` turns "N peers" into N real OS processes: it spawns
+``python -m repro.core.net.daemon`` per peer (each with its own store
+budget and bind address), reads the ``PEER-READY`` handshake to learn
+OS-assigned ports, wires the peers into a gossip mesh
+(``set_neighbors``), health-checks them over the wire, restarts the
+ones that die (same peer id, same port — existing
+:class:`~repro.core.net.link.TCPPeerLink` sockets reconnect lazily),
+and tears the fleet down through the daemons' graceful drain.
+
+``directory()`` mints a client-side
+:class:`~repro.core.cluster.PeerDirectory` over TCP links — the same
+object the in-process fabric uses, so every layer above (planner,
+client, session pool, benchmarks) runs unchanged against real
+processes. Tests, benchmarks, and ``examples/cluster_demo.py --tcp``
+build their fleets through this class.
+"""
+from __future__ import annotations
+
+import os
+import signal
+import subprocess
+import sys
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.net.link import TCPPeerLink
+from repro.core.transport import TransportError
+
+
+@dataclass
+class PeerSpec:
+    peer_id: str
+    host: str = "127.0.0.1"
+    port: int = 0                      # 0 = OS-assigned, learned at READY
+    max_store_bytes: int = 0
+    gossip_interval_s: float = 0.25
+    gossip_fanout: int = 2
+    extra_args: Tuple[str, ...] = field(default_factory=tuple)
+
+
+class PeerProc:
+    """One supervised daemon: its spec, live process, and bound port."""
+
+    def __init__(self, spec: PeerSpec):
+        self.spec = spec
+        self.proc: Optional[subprocess.Popen] = None
+        self.port: int = spec.port
+        self.restarts = 0
+        # last few lines of child output (drained continuously so a
+        # chatty daemon can never wedge on a full stdout pipe)
+        self.tail: "deque[str]" = deque(maxlen=20)
+
+    @property
+    def alive(self) -> bool:
+        return self.proc is not None and self.proc.poll() is None
+
+
+def _src_pythonpath() -> str:
+    """PYTHONPATH entry that makes ``import repro`` work in the child
+    (the daemon is spawned with ``-m``, so it needs the src root)."""
+    import repro
+    src = os.path.dirname(os.path.dirname(os.path.abspath(
+        repro.__file__)))
+    existing = os.environ.get("PYTHONPATH", "")
+    return src + (os.pathsep + existing if existing else "")
+
+
+class PeerSupervisor:
+    def __init__(self, specs: Sequence[PeerSpec],
+                 python: str = sys.executable,
+                 start_timeout_s: float = 30.0,
+                 request_timeout_s: float = 5.0):
+        if not specs:
+            raise ValueError("need at least one PeerSpec")
+        self.python = python
+        self.start_timeout_s = start_timeout_s
+        self.request_timeout_s = request_timeout_s
+        self.procs: Dict[str, PeerProc] = {
+            s.peer_id: PeerProc(s) for s in specs}
+        self._env = dict(os.environ, PYTHONPATH=_src_pythonpath())
+
+    @classmethod
+    def fleet(cls, n_peers: int, max_store_bytes: int = 0,
+              host: str = "127.0.0.1", **kw) -> "PeerSupervisor":
+        """N uniform peers named peer0..peerN-1, each with the given
+        per-peer store budget."""
+        return cls([PeerSpec(f"peer{i}", host=host,
+                             max_store_bytes=max_store_bytes)
+                    for i in range(n_peers)], **kw)
+
+    # -- lifecycle -----------------------------------------------------
+    def start(self) -> "PeerSupervisor":
+        for pp in self.procs.values():
+            self._spawn(pp)
+        self.wire_gossip()
+        return self
+
+    def _spawn(self, pp: PeerProc) -> None:
+        s = pp.spec
+        cmd = [self.python, "-m", "repro.core.net.daemon",
+               "--peer-id", s.peer_id, "--host", s.host,
+               "--port", str(pp.port),
+               "--max-store-bytes", str(s.max_store_bytes),
+               "--gossip-interval", str(s.gossip_interval_s),
+               "--gossip-fanout", str(s.gossip_fanout),
+               *s.extra_args]
+        pp.proc = subprocess.Popen(
+            cmd, env=self._env, stdout=subprocess.PIPE,
+            stderr=subprocess.STDOUT, text=True, bufsize=1)
+        pp.port = self._wait_ready(pp)
+
+    def _wait_ready(self, pp: PeerProc) -> int:
+        """Block until the daemon prints PEER-READY; returns the bound
+        port. Raises with the child's output if it dies or stalls. The
+        reader thread keeps draining stdout for the process lifetime —
+        an undrained pipe fills, and a blocked write inside the
+        daemon's event loop would freeze the whole peer."""
+        found: Dict[str, int] = {}
+        ready = threading.Event()
+
+        def reader():
+            try:
+                for line in pp.proc.stdout:
+                    pp.tail.append(line.rstrip())
+                    if "port" not in found and \
+                            line.startswith("PEER-READY "):
+                        found["port"] = int(line.split()[3])
+                        ready.set()
+            except ValueError:
+                pass                   # stop() closed the pipe under us
+            ready.set()                # EOF: child exited
+
+        threading.Thread(target=reader, daemon=True).start()
+        ready.wait(self.start_timeout_s)
+        if "port" not in found:
+            pp.proc.kill()
+            raise RuntimeError(
+                f"peer {pp.spec.peer_id!r} failed to start within "
+                f"{self.start_timeout_s}s: {list(pp.tail)[-5:]}")
+        return found["port"]
+
+    def wire_gossip(self) -> None:
+        """Tell every live daemon the full peer address map (arms the
+        epidemic gossip threads)."""
+        addrs = {pid: [pp.spec.host, pp.port]
+                 for pid, pp in self.procs.items() if pp.alive}
+        for pid in addrs:
+            try:
+                self.request(pid, "set_neighbors", {"peers": addrs})
+            except TransportError:
+                pass                   # it will be re-wired on restart
+
+    # -- addressing / client views -------------------------------------
+    def addresses(self) -> Dict[str, Tuple[str, int]]:
+        return {pid: (pp.spec.host, pp.port)
+                for pid, pp in self.procs.items()}
+
+    def links(self, timeout: Optional[float] = None) -> List[TCPPeerLink]:
+        """Fresh lazy-connecting links, one per peer (order = spec
+        order). Each call returns new sockets — one set per client."""
+        return [TCPPeerLink(pid, pp.spec.host, pp.port,
+                            timeout=timeout or self.request_timeout_s)
+                for pid, pp in self.procs.items()]
+
+    def directory(self, clock=None, **kw):
+        """Client-side PeerDirectory over TCP links (wall clock: real
+        time drives sync intervals and suspect cooldowns)."""
+        from repro.core.cluster.directory import PeerDirectory
+        from repro.core.netsim import WallClock
+        return PeerDirectory(self.links(), clock=clock or WallClock(),
+                             **kw)
+
+    def request(self, peer_id: str, op: str, payload: dict,
+                timeout: Optional[float] = None) -> dict:
+        pp = self.procs[peer_id]
+        link = TCPPeerLink(peer_id, pp.spec.host, pp.port,
+                           timeout=timeout or self.request_timeout_s)
+        try:
+            resp, _, _ = link.request(op, payload)
+            return resp
+        finally:
+            link.close()
+
+    # -- health / fault handling ---------------------------------------
+    def health(self) -> Dict[str, bool]:
+        """One bounded health ping per peer; False = dead/unreachable."""
+        out = {}
+        for pid, pp in self.procs.items():
+            if not pp.alive:
+                out[pid] = False
+                continue
+            try:
+                out[pid] = bool(
+                    self.request(pid, "health", {}, timeout=2.0)
+                    .get("ok"))
+            except TransportError:
+                out[pid] = False
+        return out
+
+    def check_and_restart(self) -> List[str]:
+        """Health-check the fleet; restart every dead peer. Returns the
+        ids restarted."""
+        restarted = []
+        for pid, ok in self.health().items():
+            if not ok:
+                self.restart(pid)
+                restarted.append(pid)
+        return restarted
+
+    def restart(self, peer_id: str) -> None:
+        """Respawn a peer on its previous port (clients' lazy links
+        reconnect on their next request). The store starts empty — a
+        restarted cache peer is a cold cache, never wrong data."""
+        pp = self.procs[peer_id]
+        if pp.alive:
+            pp.proc.kill()
+            pp.proc.wait()
+        pp.restarts += 1
+        self._spawn(pp)
+        self.wire_gossip()
+
+    def kill(self, peer_id: str, hard: bool = True) -> None:
+        """Take a peer down. ``hard=True`` is ``kill -9`` (the fault
+        drill: no drain, no goodbye); ``hard=False`` asks the daemon to
+        drain and exit."""
+        pp = self.procs[peer_id]
+        if not pp.alive:
+            return
+        if hard:
+            pp.proc.send_signal(signal.SIGKILL)
+            pp.proc.wait()
+        else:
+            try:
+                self.request(peer_id, "shutdown", {}, timeout=2.0)
+            except TransportError:
+                pp.proc.terminate()
+            try:
+                pp.proc.wait(timeout=10.0)
+            except subprocess.TimeoutExpired:
+                pp.proc.kill()
+                pp.proc.wait()
+
+    def stop(self) -> None:
+        """Graceful fleet teardown: shutdown op (drains in-flight
+        requests), then SIGTERM, then SIGKILL."""
+        for pid, pp in self.procs.items():
+            if pp.alive:
+                self.kill(pid, hard=False)
+        for pp in self.procs.values():
+            if pp.proc is not None and pp.proc.stdout:
+                pp.proc.stdout.close()
+
+    # -- context manager ----------------------------------------------
+    def __enter__(self) -> "PeerSupervisor":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    def wait_converged(self, digests: Sequence[bytes],
+                       timeout_s: float = 10.0) -> bool:
+        """Poll until every live peer can advertise every digest (its
+        csync covers them) — used by tests to bound gossip settling
+        instead of sleeping."""
+        deadline = time.monotonic() + timeout_s
+        want = {bytes(d) for d in digests}
+        while time.monotonic() < deadline:
+            ok = True
+            for pid, pp in self.procs.items():
+                if not pp.alive:
+                    continue
+                try:
+                    resp = self.request(pid, "csync",
+                                        {"since": 0, "since_remote": 0})
+                except TransportError:
+                    ok = False
+                    break
+                known = {bytes(k) for k in resp.get("keys", [])}
+                known |= {bytes(k) for k, _ in resp.get("remote", [])}
+                if not want <= known:
+                    ok = False
+                    break
+            if ok:
+                return True
+            time.sleep(0.05)
+        return False

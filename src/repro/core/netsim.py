@@ -23,6 +23,20 @@ class SimClock:
         return self.t
 
 
+class WallClock:
+    """Clock-compatible wrapper over ``time.monotonic`` for the real
+    (TCP) fabric: the directory's sync rate-limit and suspect cooldowns
+    read ``now()`` like the sim clock, but nothing is advanced — time
+    passes on its own."""
+
+    def advance(self, dt: float) -> None:
+        pass                           # real time advances itself
+
+    def now(self) -> float:
+        import time
+        return time.monotonic()
+
+
 @dataclass
 class SimNetwork:
     bandwidth_bps: float = 21e6

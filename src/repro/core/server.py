@@ -34,7 +34,7 @@ class CacheServer:
         self.lock = threading.Lock()
         self.stats = {"puts": 0, "gets": 0, "hits": 0, "misses": 0,
                       "bytes_in": 0, "bytes_out": 0, "syncs": 0,
-                      "evictions": 0, "tombstones": 0}
+                      "evictions": 0, "tombstones": 0, "deletes": 0}
 
     # ------------------------------------------------------------------
     def put(self, key: bytes, blob: bytes) -> int:
@@ -75,6 +75,21 @@ class CacheServer:
                 self.stats["bytes_out"] += len(blob)
             return blob
 
+    def delete(self, key: bytes) -> bool:
+        """Drop a blob and return its bytes to the store budget (replica
+        GC of cooled hot keys). Like eviction, the key stays in the
+        Bloom catalogs as a tombstone — a later GET degrades into a
+        §3.3 false positive, never an error."""
+        with self.lock:
+            blob = self.store.pop(key, None)
+            if blob is None:
+                return False
+            self.stored_bytes -= len(blob)
+            self.tombstones.add(key)
+            self.stats["deletes"] += 1
+            self.stats["tombstones"] = len(self.tombstones)
+            return True
+
     def sync(self, since_version: int) -> Tuple[List[bytes], int]:
         with self.lock:
             self.stats["syncs"] += 1
@@ -89,6 +104,8 @@ class CacheServer:
         if op == "get":
             blob = self.get(payload["key"])
             return {"ok": blob is not None, "blob": blob}
+        if op == "del":
+            return {"ok": self.delete(payload["key"])}
         if op == "sync":
             keys, v = self.sync(payload.get("since", 0))
             with self.lock:

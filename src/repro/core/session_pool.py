@@ -110,13 +110,17 @@ class FetchBroker:
 
     @staticmethod
     def _issue(entry: _Inflight, issue) -> None:
+        import time
+        t0 = time.perf_counter()
         try:
             entry.result = issue()
-        except TransportError as e:      # dead peer: bounded fast-fail
-            entry.result = ({"ok": False, "dead": True,
-                             "error": repr(e)}, 0.0, 0)
+        except TransportError as e:      # dead peer: bounded fast-fail,
+            entry.result = ({"ok": False, "dead": True,    # charged at
+                             "error": repr(e)},            # actual cost
+                            time.perf_counter() - t0, 0)
         except Exception as e:           # surface transport errors as misses
-            entry.result = ({"ok": False, "error": repr(e)}, 0.0, 0)
+            entry.result = ({"ok": False, "error": repr(e)},
+                            time.perf_counter() - t0, 0)
         finally:
             entry.event.set()
 
@@ -130,28 +134,39 @@ class SessionPool:
     ``FetchBroker``. ``run(jobs)`` executes the jobs concurrently
     (session i takes jobs i, i+N, ...) and returns results in job order.
 
-    Pass ``cluster=CacheCluster(...)`` instead of ``server`` to run the
+    Pass ``cluster=CacheCluster(...)`` (or any object with a
+    ``directory(clock=...)`` factory — a
+    :class:`~repro.core.net.supervisor.PeerSupervisor` over real TCP
+    peer processes works identically) instead of ``server`` to run the
     sessions against the peer fabric: each session gets its own
     ``PeerDirectory`` (own per-peer catalogs and clock) over the shared
-    peers, and the broker dedups in-flight GETs per (peer, key).
+    peers, and the broker dedups in-flight GETs per (peer, key). All
+    sessions share one :class:`~repro.core.net.estimator.LinkEstimator`,
+    so a congested link discovered by one session immediately reprices
+    every other session's fetch plan.
     """
 
     def __init__(self, server: Optional[CacheServer], engine,
                  n_sessions: int = 2,
                  cache_cfg: CacheConfig = CacheConfig(), net=None,
                  perf=None, perf_cfg=None, overlap: bool = True,
-                 broker: Optional[FetchBroker] = None, cluster=None):
+                 broker: Optional[FetchBroker] = None, cluster=None,
+                 estimator=None):
         if server is None and cluster is None:
             raise ValueError("need a server or a cluster")
+        from repro.core.net.estimator import LinkEstimator
         self.server = server
         self.cluster = cluster
         self.engine = engine
         self.net = net or SimNetwork()
         self.broker = broker or FetchBroker()
+        self.estimator = estimator or LinkEstimator()
         self.sessions: List[EdgeClient] = []
         for i in range(n_sessions):
             if cluster is not None:
-                tr = cluster.directory(clock=SimClock())
+                # the factory picks the clock: SimClock per session on
+                # the in-proc fabric, WallClock over real TCP peers
+                tr = cluster.directory(estimator=self.estimator)
             else:
                 tr = InProcTransport(server, self.net, SimClock())
             self.sessions.append(EdgeClient(

@@ -3,47 +3,37 @@
 * ``InProcTransport``  — deterministic simulation: the request runs in-process
   and a :class:`SimNetwork` models Wi-Fi transfer time on a :class:`SimClock`.
   Benchmarks use this (reproducible, no sleeps).
-* ``TCPTransport``     — real length-prefixed msgpack over a socket, with
-  ``serve_tcp`` running a :class:`CacheServer` in a background thread.
-  ``examples/distributed_cache_demo.py --tcp`` exercises it for real
-  multi-process deployment.
+* ``TCPTransport``     — real msgpack frames over a socket, speaking the
+  versioned length-prefixed format of :mod:`repro.core.net.frames`.
+  ``serve_tcp`` runs a :class:`CacheServer` behind the async peer
+  server (:mod:`repro.core.net.server`) for real multi-process
+  deployment; ``examples/distributed_cache_demo.py --tcp`` exercises it.
 
 Every request returns ``(response, sim_seconds, n_bytes)`` so callers can
 attribute "Redis" time in the paper's Table-3 sense.
 
 Failure contract: a dead, unreachable, or too-slow peer raises
 :class:`TransportError` (never a bare socket exception, never a hang —
-both connect and requests are bounded by timeouts). Callers degrade to
-local prefill; the cluster layer additionally marks the peer *suspect*
-so the fetch planner skips it for a cooldown period.
+both connect and requests are bounded by timeouts, and a server close
+mid-request surfaces as a clean error, not a truncated-frame crash).
+Callers degrade to local prefill; the cluster layer additionally marks
+the peer *suspect* so the fetch planner skips it for a cooldown period.
 """
 from __future__ import annotations
 
 import socket
-import struct
 import threading
 from typing import Optional, Tuple
-
-import msgpack
 
 from repro.core.netsim import SimClock, SimNetwork
 from repro.core.server import CacheServer
 
-_HDR = struct.Struct("<I")
-
 
 class TransportError(ConnectionError):
     """A cache peer could not be reached (dead/slow socket, closed
-    connection, refused connect). Degrades to local prefill — never
-    affects correctness, only latency (paper §3.3 fallback)."""
-
-
-def _pack(obj) -> bytes:
-    return msgpack.packb(obj, use_bin_type=True)
-
-
-def _unpack(raw: bytes):
-    return msgpack.unpackb(raw, raw=False)
+    connection, refused connect, protocol violation). Degrades to local
+    prefill — never affects correctness, only latency (paper §3.3
+    fallback)."""
 
 
 class InProcTransport:
@@ -55,9 +45,10 @@ class InProcTransport:
 
     def request(self, op: str, payload: dict,
                 advance_clock: bool = True) -> Tuple[dict, float, int]:
-        req = _pack({"op": op, **payload})
+        from repro.core.net import frames
+        req = frames.pack_payload({"op": op, **payload})
         resp = self.server.handle(op, payload)
-        wire = _pack(resp)
+        wire = frames.pack_payload(resp)
         nbytes = len(req) + len(wire)
         dt = self.net.transfer_time(nbytes)
         if advance_clock:
@@ -66,24 +57,30 @@ class InProcTransport:
 
 
 class TCPTransport:
-    """Length-prefixed msgpack over one socket.
+    """Versioned msgpack frames over one socket.
 
     ``connect_timeout`` bounds the initial connect; ``timeout`` bounds
-    every request round trip. Any socket failure (refused, closed,
-    timed out) surfaces as :class:`TransportError` so a dead or slow
-    peer costs one bounded round trip and the session continues with
-    local prefill instead of blocking.
+    every request round trip. Any socket or framing failure (refused,
+    closed, timed out, bad frame) surfaces as :class:`TransportError`
+    so a dead or slow peer costs one bounded round trip and the session
+    continues with local prefill instead of blocking.
+
+    With ``eager=False`` the connect is deferred to the first request —
+    a directory can then be built over peers that are still starting
+    up, paying the (bounded) connect cost lazily.
     """
 
     def __init__(self, host: str, port: int, timeout: float = 5.0,
-                 connect_timeout: Optional[float] = None):
+                 connect_timeout: Optional[float] = None,
+                 eager: bool = True):
         self.addr = (host, port)
         self.timeout = timeout
         self.connect_timeout = connect_timeout or timeout
         self.lock = threading.Lock()
         self.sock: Optional[socket.socket] = None
-        with self.lock:
-            self._connect()
+        if eager:
+            with self.lock:
+                self._connect()
 
     def _connect(self) -> None:
         try:
@@ -99,15 +96,16 @@ class TCPTransport:
     def request(self, op: str, payload: dict,
                 advance_clock: bool = True) -> Tuple[dict, float, int]:
         import time
-        req = _pack({"op": op, **payload})
+
+        from repro.core.net import frames
         t0 = time.perf_counter()
         with self.lock:
-            if self.sock is None:    # previous failure poisoned the
-                self._connect()      # stream: start a fresh one
+            if self.sock is None:    # lazy connect / previous failure
+                self._connect()      # poisoned the stream: fresh one
             try:
-                self.sock.sendall(_HDR.pack(len(req)) + req)
-                raw = self._recv_frame()
-            except OSError as e:     # timeout, reset, closed, ...
+                n_up = frames.send_frame(self.sock, {"op": op, **payload})
+                resp, n_down = frames.recv_frame_with_size(self.sock)
+            except (OSError, frames.FrameError) as e:
                 # the stream may hold a half-read or in-flight response
                 # that would mis-pair with the NEXT request — poison the
                 # socket so the next call reconnects cleanly
@@ -118,21 +116,7 @@ class TCPTransport:
                 raise TransportError(
                     f"request {op!r} to {self.addr} failed: {e}") from e
         dt = time.perf_counter() - t0
-        return _unpack(raw), dt, len(req) + len(raw)
-
-    def _recv_frame(self) -> bytes:
-        hdr = self._recv_exact(_HDR.size)
-        (n,) = _HDR.unpack(hdr)
-        return self._recv_exact(n)
-
-    def _recv_exact(self, n: int) -> bytes:
-        buf = b""
-        while len(buf) < n:
-            chunk = self.sock.recv(n - len(buf))
-            if not chunk:
-                raise TransportError("server closed connection")
-            buf += chunk
-        return buf
+        return resp, dt, n_up + n_down
 
     def close(self):
         with self.lock:
@@ -143,54 +127,12 @@ class TCPTransport:
 
 def serve_tcp(server: CacheServer, host: str = "127.0.0.1",
               port: int = 0):
-    """Run the cache server over TCP in a daemon thread.
-    Returns (port, shutdown_fn)."""
-    srv_sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
-    srv_sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
-    srv_sock.bind((host, port))
-    srv_sock.listen(16)
-    actual_port = srv_sock.getsockname()[1]
-    stop = threading.Event()
+    """Run the cache server over TCP. Returns (port, shutdown_fn).
 
-    def client_loop(conn):
-        try:
-            while not stop.is_set():
-                hdr = b""
-                while len(hdr) < _HDR.size:
-                    chunk = conn.recv(_HDR.size - len(hdr))
-                    if not chunk:
-                        return
-                    hdr += chunk
-                (n,) = _HDR.unpack(hdr)
-                buf = b""
-                while len(buf) < n:
-                    chunk = conn.recv(min(1 << 20, n - len(buf)))
-                    if not chunk:
-                        return
-                    buf += chunk
-                msg = _unpack(buf)
-                op = msg.pop("op")
-                resp = _pack(server.handle(op, msg))
-                conn.sendall(_HDR.pack(len(resp)) + resp)
-        finally:
-            conn.close()
-
-    def accept_loop():
-        srv_sock.settimeout(0.2)
-        while not stop.is_set():
-            try:
-                conn, _ = srv_sock.accept()
-            except socket.timeout:
-                continue
-            except OSError:
-                return
-            threading.Thread(target=client_loop, args=(conn,),
-                             daemon=True).start()
-
-    threading.Thread(target=accept_loop, daemon=True).start()
-
-    def shutdown():
-        stop.set()
-        srv_sock.close()
-
-    return actual_port, shutdown
+    Thin compatibility wrapper over
+    :func:`repro.core.net.server.serve_peer_tcp`, which owns the socket
+    loop (and its graceful in-flight drain on shutdown).
+    """
+    from repro.core.net.server import serve_peer_tcp
+    srv = serve_peer_tcp(server, host, port)
+    return srv.port, srv.close

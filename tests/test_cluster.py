@@ -267,6 +267,88 @@ def test_planner_prefers_fast_link_and_prunes_slow(fabric_world):
     assert all(a.est_total_s < local_s for a in plan)
 
 
+def test_hot_key_decay_gc_returns_replica_bytes_to_budget(fabric_world):
+    """A key that goes hot earns an extra replica; once it cools (decaying
+    tracker), the directory GCs exactly that replica — the bytes return
+    to the peer's store budget, and no peer ever overshoots it."""
+    gen, engine, make_cluster = fabric_world
+    budget = 600_000
+    from repro.config import CacheConfig as CC
+    ccfg = CC(max_store_bytes=budget)
+    cluster, client = make_cluster(ccfg=ccfg)
+    c = client("c", dir_kw={"hot_threshold": 2, "hot_decay_every": 6})
+    hot = gen.prompt("marketing", 0)
+    cold = gen.prompt("prehistory", 1)
+    c.infer(hot.segments, max_new_tokens=2)
+    c.sync_catalog()
+    for _ in range(3):                 # heat the key -> replica minted
+        assert c.infer(hot.segments, max_new_tokens=2).matched_tokens > 0
+    assert c.directory.replications >= 1
+    assert c.directory._replicas
+    replicated = {d: pid for d, pid in c.directory._replicas.items()}
+    for peer in cluster.peers:         # never over budget, replica incl.
+        assert peer.server.stored_bytes <= budget
+    before = cluster.stored_bytes()
+
+    # now the workload moves on: only the cold prompt is fetched, the
+    # decaying tracker halves the hot key below threshold, and the
+    # replica is collected
+    c.infer(cold.segments, max_new_tokens=2)
+    c.sync_catalog()
+    for _ in range(12):
+        c.infer(cold.segments, max_new_tokens=2)
+    assert c.directory.hot.decays >= 1
+    assert c.directory.replica_gcs >= 1
+    for digest, pid in replicated.items():
+        if digest not in c.directory._replicas:     # GC'd
+            assert digest not in cluster.by_id[pid].server.store
+            assert cluster.by_id[pid].server.stats["deletes"] >= 1
+    assert cluster.stored_bytes() < before + budget  # bytes came back
+    for peer in cluster.peers:
+        assert peer.server.stored_bytes <= budget    # still no overshoot
+
+
+def test_hot_key_tracker_decay_cools_keys():
+    from repro.core.cluster import HotKeyTracker
+    t = HotKeyTracker(threshold=2, decay_every=4)
+    for _ in range(3):
+        t.note(b"a")
+    assert t.is_hot(b"a")
+    t.note(b"b")                       # 4th note triggers the decay
+    assert t.decays == 1
+    assert not t.is_hot(b"a")          # 3 // 2 = 1 < threshold
+    assert t.counts.get(b"b", 0) == 0  # 1 // 2 = 0 -> dropped entirely
+
+
+# ---------------------------------------------------------------------------
+# epidemic gossip: random-k rounds converge like the full mesh
+# ---------------------------------------------------------------------------
+
+def test_epidemic_gossip_converges_at_lower_fanout():
+    import random as _random
+    from repro.core.cluster.peer import gossip_round as gr
+    cluster = CacheCluster([(21e6, 0.003)] * 8)
+    peers = cluster.peers
+    digests = []
+    for i, p in enumerate(peers):
+        d = bytes([i]) * 32
+        p.server.put(d, b"blob")
+        digests.append(d)
+    rng = _random.Random(3)
+    rounds = 0
+    while rounds < 40 and not all(
+            p.knows(d) for p in peers for d in digests):
+        gr(peers, fanout=2, rng=rng)
+        rounds += 1
+    assert rounds < 40                 # converged
+    assert rounds >= 2                 # but not in one full-mesh round
+    # and every peer can now advertise every key through csync
+    resp = peers[0].handle("csync", {"since": 0, "since_remote": 0})
+    known = {bytes(k) for k in resp["keys"]}
+    known |= {bytes(k) for k, _ in resp["remote"]}
+    assert set(digests) <= known
+
+
 # ---------------------------------------------------------------------------
 # broker dedup is per (peer, key); session pool runs over the fabric
 # ---------------------------------------------------------------------------

@@ -1,0 +1,424 @@
+"""The real peer runtime: frames, TCP peer server, link estimation,
+supervisor-managed peer daemons.
+
+Correctness contract (paper §3.3 extended to real processes): any
+socket-layer failure — refused connect, mid-request close, a peer
+killed with SIGKILL — costs one bounded TransportError and degrades to
+local prefill; outputs stay token-identical to the in-proc fabric and
+to cache-off, and nothing ever hangs on a dead socket.
+"""
+import socket
+import struct
+import threading
+import time
+
+import pytest
+
+from repro.config import CacheConfig
+from repro.core import (
+    CacheCluster, EdgeClient, SimClock, TransportError, WallClock,
+)
+from repro.core.cluster.peer import CachePeer
+from repro.core.cluster.directory import PeerDirectory
+from repro.core.net import frames
+from repro.core.net.estimator import LinkEstimator
+from repro.core.net.link import TCPPeerLink
+from repro.core.net.server import serve_peer_tcp
+from repro.core.net.supervisor import PeerSupervisor
+from repro.data import MMLUGenerator, WordHashTokenizer
+from repro.serving.engine import InferenceEngine
+
+
+# ---------------------------------------------------------------------------
+# frame format
+# ---------------------------------------------------------------------------
+
+def test_frame_roundtrip_and_size():
+    obj = {"op": "put", "key": b"k" * 32, "blob": b"x" * 10_000}
+    data = frames.encode_frame(obj)
+    n = frames.parse_header(data[:frames.HEADER_SIZE])
+    assert n == len(data) - frames.HEADER_SIZE
+    assert frames.unpack_payload(data[frames.HEADER_SIZE:]) == obj
+
+
+def test_frame_bad_magic_and_version_rejected():
+    good = frames.encode_frame({"a": 1})
+    with pytest.raises(frames.FrameError):
+        frames.parse_header(b"XX" + good[2:frames.HEADER_SIZE])
+    bad_version = struct.pack("<2sBxI", frames.MAGIC, 99, 1)
+    with pytest.raises(frames.FrameError):
+        frames.parse_header(bad_version)
+
+
+def test_frame_oversize_rejected():
+    hdr = struct.pack("<2sBxI", frames.MAGIC, frames.VERSION,
+                      frames.MAX_FRAME_BYTES + 1)
+    with pytest.raises(frames.FrameError):
+        frames.parse_header(hdr)
+
+
+# ---------------------------------------------------------------------------
+# peer server over real sockets (in-process threads, no subprocesses)
+# ---------------------------------------------------------------------------
+
+def test_peer_server_roundtrip_with_csync():
+    peer = CachePeer("p0", CacheConfig())
+    with serve_peer_tcp(peer) as srv:
+        link = TCPPeerLink("p0", "127.0.0.1", srv.port, timeout=5.0)
+        resp, _, _ = link.request("put", {"key": b"k" * 32,
+                                          "blob": b"blob"})
+        assert resp["ok"]
+        resp, _, _ = link.request("get", {"key": b"k" * 32})
+        assert resp["blob"] == b"blob"
+        resp, _, _ = link.request("csync", {"since": 0,
+                                            "since_remote": 0})
+        assert resp["peer"] == "p0" and resp["keys"] == [b"k" * 32]
+        link.close()
+
+
+def test_peer_server_handler_exception_is_error_reply_not_close():
+    class Boom:
+        def handle(self, op, payload):
+            if op == "boom":
+                raise RuntimeError("kaboom")
+            return {"ok": True}
+
+    with serve_peer_tcp(Boom()) as srv:
+        link = TCPPeerLink("b", "127.0.0.1", srv.port, timeout=5.0)
+        resp, _, _ = link.request("boom", {})
+        assert not resp["ok"] and "kaboom" in resp["error"]
+        # connection survived the handler error
+        assert link.request("ping", {})[0]["ok"]
+        link.close()
+
+
+def test_graceful_shutdown_drains_inflight_request():
+    """A request already being handled when close() is called must get
+    its full response (the drain), not a truncated frame."""
+    started = threading.Event()
+
+    class Slow:
+        def handle(self, op, payload):
+            started.set()
+            time.sleep(0.4)
+            return {"ok": True, "slept": True}
+
+    srv = serve_peer_tcp(Slow(), drain_timeout_s=5.0)
+    link = TCPPeerLink("slow", "127.0.0.1", srv.port, timeout=5.0)
+    out = {}
+
+    def go():
+        out["resp"] = link.request("work", {})[0]
+
+    t = threading.Thread(target=go)
+    t.start()
+    assert started.wait(2.0)           # request is in flight
+    srv.close(graceful=True)           # close must drain it first
+    t.join(5.0)
+    assert out.get("resp", {}).get("slept") is True
+    # and the server is really gone: next request errors, bounded
+    with pytest.raises(TransportError):
+        link.request("work", {})
+    link.close()
+
+
+def test_mid_request_close_is_transport_error_not_hang():
+    """A server that dies after reading the request (no response ever)
+    must surface as TransportError within the timeout — and a server
+    that sends HALF a frame must too (truncated-frame contract)."""
+    # half-a-frame server
+    lsock = socket.socket()
+    lsock.bind(("127.0.0.1", 0))
+    lsock.listen(1)
+    port = lsock.getsockname()[1]
+
+    def evil():
+        conn, _ = lsock.accept()
+        conn.recv(1 << 16)                       # read the request
+        half = frames.encode_frame({"ok": True})[:5]
+        conn.sendall(half)                       # truncate mid-frame
+        conn.close()
+
+    t = threading.Thread(target=evil, daemon=True)
+    t.start()
+    link = TCPPeerLink("evil", "127.0.0.1", port, timeout=2.0)
+    t0 = time.perf_counter()
+    with pytest.raises(TransportError):
+        link.request("get", {"key": b"k"})
+    assert time.perf_counter() - t0 < 5.0
+    link.close()
+    lsock.close()
+
+
+def test_wrong_protocol_garbage_is_transport_error():
+    """A server speaking a different protocol (garbage header) must be
+    rejected by the magic check, not interpreted as a length."""
+    lsock = socket.socket()
+    lsock.bind(("127.0.0.1", 0))
+    lsock.listen(1)
+    port = lsock.getsockname()[1]
+
+    def http():
+        conn, _ = lsock.accept()
+        conn.recv(1 << 16)
+        conn.sendall(b"HTTP/1.1 400 Bad Request\r\n\r\n")
+        conn.close()
+
+    threading.Thread(target=http, daemon=True).start()
+    link = TCPPeerLink("http", "127.0.0.1", port, timeout=2.0)
+    with pytest.raises(TransportError):
+        link.request("ping", {})
+    link.close()
+    lsock.close()
+
+
+# ---------------------------------------------------------------------------
+# link estimation
+# ---------------------------------------------------------------------------
+
+def test_estimator_seeded_matches_static_costs():
+    est = LinkEstimator()
+    est.seed("a", 21e6, 0.003)
+    nb = 1_000_000
+    assert est.est_fetch_s("a", nb) == pytest.approx(
+        0.003 + nb * 8 / 21e6)
+
+
+def test_estimator_adapts_to_congestion_and_recovers_rtt():
+    est = LinkEstimator(alpha=0.5)
+    est.seed("a", 40e6, 0.002)
+    # link degrades to 4 Mb/s: feed observed transfers at the true cost
+    nb = 500_000
+    for _ in range(8):
+        est.observe("a", nb, 0.002 + nb * 8 / 4e6)
+    bw, rtt, n_obs = est.snapshot("a")
+    assert n_obs == 8
+    assert bw == pytest.approx(4e6, rel=0.05)
+    # small round trips recover the RTT exactly (sim consistency)
+    for _ in range(8):
+        est.observe("a", 256, 0.002 + 256 * 8 / bw)
+    assert est.snapshot("a")[1] == pytest.approx(0.002, rel=0.05)
+
+
+def test_estimator_in_sim_stays_at_truth():
+    """On an unchanged simulated link, observations are exactly the
+    model's values, so the adaptive estimate never drifts from the
+    static one — the sim path stays comparable."""
+    est = LinkEstimator()
+    bw, rtt = 21e6, 0.003
+    est.seed("a", bw, rtt)
+    for nb in (2_000_000, 500_000, 100_000):
+        est.observe("a", nb, rtt + nb * 8 / bw)
+    for _ in range(3):
+        est.observe("a", 256, rtt + 256 * 8 / bw)
+    got_bw, got_rtt, _ = est.snapshot("a")
+    assert got_bw == pytest.approx(bw, rel=1e-6)
+    assert got_rtt == pytest.approx(rtt, rel=1e-6)
+
+
+def test_adaptive_planner_reroutes_off_congested_link(tiny_setup):
+    """Two peers hold the same key. peer0's link silently degrades; the
+    adaptive directory reprices it from observed fetches and the plan
+    flips to peer1, while a static directory keeps leading with stale
+    peer0. This is the congestion scenario of the cluster_sweep
+    benchmark in miniature."""
+    cfg, model, params = tiny_setup
+    engine = InferenceEngine(model, params, max_len=512)
+    gen = MMLUGenerator(WordHashTokenizer(cfg.vocab), n_shot=2)
+    from repro.core.perfmodel import PI_ZERO_2W
+
+    def build(adaptive):
+        cluster = CacheCluster([(40e6, 0.002), (20e6, 0.003)])
+        d = cluster.directory(clock=SimClock(), adaptive=adaptive)
+        c = EdgeClient("c", engine, d, cluster.cache_cfg,
+                       perf=PI_ZERO_2W)
+        return cluster, d, c
+
+    p = gen.prompt("anatomy", 0)
+    for adaptive in (True, False):
+        cluster, d, c = build(adaptive)
+        c.infer(p.segments, max_new_tokens=2)      # seed the fabric
+        cluster.gossip()
+        # place the blob everywhere so both peers are candidates
+        for key in p.segments.keys(c.meta):
+            blob = cluster.peers[0].server.get(key.digest)
+            if blob is not None:
+                for peer in cluster.peers:
+                    peer.server.put(key.digest, blob)
+        d.last_sync_t = -1e18
+        c.sync_catalog()
+        # congestion: peer0's real link collapses to 1 Mb/s
+        cluster.by_id["peer0"].net.bandwidth_bps = 1e6
+        for _ in range(6):                         # observe the pain
+            r = c.infer(p.segments, max_new_tokens=2)
+            assert r.matched_tokens > 0
+        keys = p.segments.keys(c.meta)
+        n = len(p.segments.token_ids)
+        plan = c.planner.plan(keys, n,
+                              min_match=c.cache_cfg.min_match_tokens)
+        leads = {a.peer_id for a in plan[:1]}
+        if adaptive:
+            assert leads == {"peer1"}, \
+                f"adaptive planner still leads with congested peer0: {plan[:3]}"
+        else:
+            assert leads == {"peer0"}   # static: stale nominal cost wins
+
+
+# ---------------------------------------------------------------------------
+# multiprocess integration: daemons + supervisor (slow)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_supervisor_spawns_heals_and_stops():
+    with PeerSupervisor.fleet(3, max_store_bytes=1_000_000) as sup:
+        assert all(sup.health().values())
+        # gossip over real sockets: a key PUT on peer0 becomes
+        # advertisable through the others without any client sync
+        sup.request("peer0", "put", {"key": b"g" * 32, "blob": b"b"})
+        assert sup.wait_converged([b"g" * 32], timeout_s=10.0)
+        # kill -9 one peer; supervisor notices and restarts it on the
+        # same port with an empty (cold, never wrong) store
+        sup.kill("peer1", hard=True)
+        assert sup.health()["peer1"] is False
+        assert sup.check_and_restart() == ["peer1"]
+        assert sup.health()["peer1"] is True
+        assert sup.request("peer1", "health", {})["stored_bytes"] == 0
+        assert sup.procs["peer1"].restarts == 1
+
+
+@pytest.mark.slow
+def test_tcp_fabric_token_identity_and_kill9_fallback(tiny_setup):
+    """The acceptance drill: the same MMLU-style prompt set through
+    (a) cache-off, (b) the in-proc fabric, (c) a real 3-process TCP
+    fabric — token-identical everywhere; then kill -9 a peer daemon
+    mid-run and the remaining prompts complete via bounded fast-fail +
+    local prefill."""
+    cfg, model, params = tiny_setup
+    engine = InferenceEngine(model, params, max_len=512)
+    gen = MMLUGenerator(WordHashTokenizer(cfg.vocab), n_shot=2)
+    prompts = [gen.prompt(d, q).segments
+               for d in ("anatomy", "virology") for q in range(2)]
+
+    # (a) cache-off anchor
+    cluster_off = CacheCluster([(21e6, 0.003)] * 3)
+    c_off = EdgeClient("off", engine,
+                       cluster_off.directory(clock=SimClock()),
+                       cluster_off.cache_cfg)
+    off = [c_off.infer(p, max_new_tokens=4,
+                       upload_on_miss=False).output_tokens
+           for p in prompts]
+
+    # (b) in-proc fabric
+    cluster = CacheCluster([(21e6, 0.003)] * 3)
+    c_sim = EdgeClient("sim", engine,
+                       cluster.directory(clock=SimClock()),
+                       cluster.cache_cfg)
+    sim = []
+    for p in prompts:
+        cluster.gossip()
+        c_sim.directory.last_sync_t = -1e18
+        c_sim.sync_catalog()
+        sim.append(c_sim.infer(p, max_new_tokens=4).output_tokens)
+    assert sim == off
+
+    # (c) real TCP fabric: 3 peer processes
+    with PeerSupervisor.fleet(3) as sup:
+        d = sup.directory(suspect_cooldown_s=120.0)
+        c_tcp = EdgeClient("tcp", engine, d, CacheConfig())
+        tcp, hits = [], 0
+        for p in prompts + prompts:    # second pass fetches real blobs
+            d.last_sync_t = -1e18
+            c_tcp.sync_catalog()
+            r = c_tcp.infer(p, max_new_tokens=4)
+            tcp.append(r.output_tokens)
+            hits += r.matched_tokens > 0
+        assert tcp == off + off
+        assert hits >= len(prompts)    # the repeat pass hit the cache
+        st = d.peer_stats()
+        assert sum(s.hits for s in st.values()) >= len(prompts)
+        # the estimator has moved off its prior from real transfers
+        assert sum(s.link_observations for s in st.values()) > 0
+
+        # kill -9 one daemon mid-run: bounded fast-fail, local prefill,
+        # token identity preserved
+        victim = next(pid for pid, s in st.items() if s.hits > 0)
+        sup.kill(victim, hard=True)
+        t0 = time.perf_counter()
+        post = []
+        for p in prompts:
+            r = c_tcp.infer(p, max_new_tokens=4)
+            post.append(r.output_tokens)
+        assert post == off
+        assert time.perf_counter() - t0 < 60.0   # bounded, no hang
+        assert d.links[victim].stats.transport_errors >= 1 or \
+            victim not in d.usable_ids() or \
+            all(x == y for x, y in zip(post, off))
+
+
+@pytest.mark.slow
+def test_session_pool_over_tcp_supervisor(tiny_setup):
+    """The whole serving stack over real peer processes: N sessions
+    share the supervisor's fabric, the broker dedups concurrent GETs
+    per (peer, key), and one shared LinkEstimator aggregates every
+    session's observations."""
+    cfg, model, params = tiny_setup
+    engine = InferenceEngine(model, params, max_len=512)
+    gen = MMLUGenerator(WordHashTokenizer(cfg.vocab), n_shot=2)
+    from repro.core.session_pool import SessionPool
+    p = gen.prompt("anatomy", 0)
+    with PeerSupervisor.fleet(2) as sup:
+        pool = SessionPool(None, engine, n_sessions=2, cluster=sup)
+        seed = pool.sessions[0].infer(p.segments, max_new_tokens=3)
+        pool.sync_catalogs()
+        results = pool.run([p.segments] * 4, max_new_tokens=3)
+        assert all(r.output_tokens == seed.output_tokens
+                   for r in results)
+        assert all(r.matched_tokens > 0 for r in results)
+        # dedup did its job: fewer real GETs than adoptions
+        assert pool.broker.stats["issued"] < 4
+        # the sessions share one estimator (observations aggregate)
+        assert pool.sessions[0].transport.estimator is \
+            pool.sessions[1].transport.estimator
+
+
+@pytest.mark.slow
+def test_daemon_graceful_shutdown_mid_stream():
+    """Ask a daemon to shut down while a client still talks to it: the
+    shutdown reply itself must arrive (drain), and the next request
+    must be a TransportError, not a hang or truncated frame."""
+    with PeerSupervisor.fleet(1) as sup:
+        (pid, (host, port)), = sup.addresses().items()
+        link = TCPPeerLink(pid, host, port, timeout=5.0)
+        assert link.request("put", {"key": b"k" * 32,
+                                    "blob": b"x"})[0]["ok"]
+        resp, _, _ = link.request("shutdown", {})
+        assert resp["ok"]
+        sup.procs[pid].proc.wait(timeout=10.0)
+        t0 = time.perf_counter()
+        with pytest.raises(TransportError):
+            link.request("get", {"key": b"k" * 32})
+        assert time.perf_counter() - t0 < 6.0
+        link.close()
+
+
+# ---------------------------------------------------------------------------
+# directory over TCP links uses WallClock semantics
+# ---------------------------------------------------------------------------
+
+def test_directory_over_tcp_links_marks_suspect_with_wall_clock():
+    peer = CachePeer("p0", CacheConfig())
+    srv = serve_peer_tcp(peer)
+    links = [TCPPeerLink("p0", "127.0.0.1", srv.port, timeout=1.0),
+             TCPPeerLink("ghost", "127.0.0.1", 1, timeout=0.3)]
+    d = PeerDirectory(links, clock=WallClock(), suspect_cooldown_s=30.0)
+    assert d.links["p0"].net is None   # no SimNetwork behind a socket
+    # live peer answers; dead peer fast-fails into suspect
+    assert d.request("p0", "ping", {})[0]["ok"]
+    with pytest.raises(TransportError):
+        d.request("ghost", "ping", {})
+    assert d.usable_ids() == ["p0"]
+    # estimator prices the unknown link from its prior
+    assert d.est_fetch_s("p0", 1_000_000) > 0
+    for link in links:
+        link.close()
+    srv.close()
