@@ -239,6 +239,91 @@ def main():
         f"killed=peer0@{n_prompts // 2};completed={len(fabric)}/"
         f"{n_prompts};dead_fastfails={dead};tokens_identical=True;"
         f"ttft_fabric={t_fab:.3f}s"))
+
+    # repair drill: a peer is killed DURING the upload burst and later
+    # revived. Client writes stay a single PUT (replication fan-out and
+    # hinted handoff are peer-to-peer, off the client's critical path);
+    # once the victim is back, every misplaced key must become readable
+    # via its true consistent-hash primary within a bounded number of
+    # repair rounds — and outputs stay token-identical to the
+    # single-server and cache-off anchors throughout.
+    name, setting, links, skew = sweep[0]
+    w, engine = world_engine(setting)
+    prompts = skewed_workload(w.gen, n_prompts, domains, skew, seed=11)
+    ccfg_repair = CacheConfig()         # unbounded: isolate repair from LRU
+    off, _ = run_single(engine, w, prompts, ccfg_repair, max_new,
+                        cache=False)
+    single, _ = run_single(engine, w, prompts, ccfg_repair, max_new,
+                           cache=True)
+    cluster = CacheCluster(links, ccfg_repair)
+    d = cluster.directory(clock=SimClock(), hot_threshold=1)
+    c = EdgeClient("repair", engine, d, ccfg_repair, perf=w.perf,
+                   perf_cfg=w.cfg)
+    kill_at, revive_at = n_prompts // 4, (3 * n_prompts) // 4
+    # an upload burst aimed at the victim: keys whose consistent-hash
+    # primary IS peer0, shipped while peer0 is down — the exact
+    # write-path misplacement scenario (client falls down the ring,
+    # fallback acceptor records a hinted handoff)
+    import hashlib
+    burst, i = [], 0
+    while len(burst) < 6:
+        dg = hashlib.blake2b(b"repair-%d" % i, digest_size=32).digest()
+        if d.placement.primary(dg) == "peer0":
+            burst.append(dg)
+        i += 1
+    results = []
+    for i, p in enumerate(prompts):
+        if i == kill_at:
+            cluster.kill("peer0")
+            for dg in burst:            # mid-outage upload burst
+                assert d.upload(dg, b"burst" + dg) > 0
+        if i == revive_at:
+            cluster.revive("peer0")
+        cluster.gossip()                # heartbeat: pumps repair pushes
+        d.last_sync_t = -1e18
+        c.sync_catalog()
+        results.append(c.infer(p, max_new_tokens=max_new))
+    outs = [r.output_tokens for r in off]
+    assert [r.output_tokens for r in single] == outs, \
+        "repair drill: single-server outputs diverged"
+    assert [r.output_tokens for r in results] == outs, \
+        "repair drill: fabric outputs diverged"
+    # bounded convergence: a handful of extra rounds must drain every
+    # pending push/handoff now that the whole fleet is alive
+    repair_rounds = 0
+    while cluster.repair_round() and repair_rounds < 8:
+        repair_rounds += 1
+    assert cluster.repair_round() == 0, \
+        "repair drill: replication did not converge"
+    # every key is now readable via its TRUE primary — the misplacement
+    # bug class (primary probe missing forever) is repaired
+    all_keys = {k for p in cluster.peers for k in p.server.store}
+    for key in all_keys:
+        prim = d.placement.primary(key)
+        assert key in cluster.by_id[prim].server.store, \
+            "repair drill: key not readable via its primary"
+    for dg in burst:                    # the misplaced burst in particular
+        assert dg in cluster.by_id["peer0"].server.store, \
+            "repair drill: burst key did not hand off to its primary"
+    rstats = cluster.replication_stats()
+    handoffs = sum(s["handoffs"] for s in rstats.values())
+    assert handoffs >= len(burst), \
+        "repair drill: hinted handoffs did not run"
+    leaks = sum(s["leaks_repaired"] for s in rstats.values())
+    client_up = sum(st.bytes_up for st in d.peer_stats().values())
+    p2p = cluster.p2p_bytes()
+    hints = sum(st.hints for st in d.peer_stats().values())
+    assert p2p > 0 and hints == d.replications, \
+        "repair drill: replication fan-out rode the client path"
+    t_fab = mean_ttft(results)
+    lines.append(csv_line(
+        "cluster_repair_drill", t_fab * 1e6,
+        f"killed=peer0@{kill_at};revived@{revive_at};"
+        f"repair_rounds={repair_rounds};handoffs={handoffs};"
+        f"leaks_repaired={leaks};client_up_bytes={client_up};"
+        f"p2p_bytes={p2p};hot_hints={hints};"
+        f"primary_readable=all;tokens_identical=True;"
+        f"ttft_fabric={t_fab:.3f}s"))
     return lines
 
 

@@ -336,11 +336,15 @@ class EdgeClient:
                 total += self.directory.upload(k.digest, blob)
                 continue
             try:
-                self.transport.request("put",
-                                       {"key": k.digest, "blob": blob},
-                                       advance_clock=False)
+                resp, _, _ = self.transport.request(
+                    "put", {"key": k.digest, "blob": blob},
+                    advance_clock=False)
             except TransportError:
                 continue             # best effort: server gone, skip
+            if not resp.get("stored", True):
+                continue             # budget rejected: registering the
+                # key anyway would be a phantom catalog entry (instant
+                # self-inflicted Bloom false positive)
             self.catalog.register(k.digest)
             total += len(blob)
         return total

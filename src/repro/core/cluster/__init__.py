@@ -33,6 +33,8 @@ from repro.core.cluster.placement import (  # noqa: F401
 from repro.core.cluster.planner import (  # noqa: F401
     FetchAttempt, FetchPlanner,
 )
+from repro.core.cluster.replication import Replicator  # noqa: F401
+from repro.core.transport import TransportError
 
 LinkSpec = Union[SimNetwork, tuple]
 
@@ -49,7 +51,8 @@ class CacheCluster:
 
     def __init__(self, links: Sequence[LinkSpec],
                  cache_cfg: CacheConfig = CacheConfig(),
-                 names: Optional[Sequence[str]] = None):
+                 names: Optional[Sequence[str]] = None,
+                 repl_factor: int = 2):
         self.cache_cfg = cache_cfg
         self.peers: List[CachePeer] = []
         for i, spec in enumerate(links):
@@ -60,6 +63,24 @@ class CacheCluster:
         self.by_id: Dict[str, CachePeer] = {
             p.peer_id: p for p in self.peers}
         self._gossip_rng = random.Random(0xC1)   # epidemic partner picks
+        # peer-side push replication: every peer learns the ring and a
+        # direct (alive-gated) send to each other peer. Pushes happen
+        # synchronously on enqueue (deterministic); a push to a dead
+        # peer stays pending and is retried each gossip()/repair_round.
+        ring = [p.peer_id for p in self.peers]
+        for p in self.peers:
+            p.wire_replication(ring, self._peer_send(p),
+                               repl_factor=repl_factor, immediate=True)
+
+    def _peer_send(self, src: CachePeer):
+        def send(peer_id: str, op: str, payload: dict) -> dict:
+            dst = self.by_id[peer_id]
+            if not (src.alive and dst.alive):
+                raise TransportError(
+                    f"peer {peer_id!r} is down (push from "
+                    f"{src.peer_id!r})")
+            return dst.handle(op, payload)
+        return send
 
     # ------------------------------------------------------------------
     def directory(self, clock: Optional[SimClock] = None,
@@ -69,9 +90,23 @@ class CacheCluster:
 
     def gossip(self, fanout: Optional[int] = None) -> int:
         """One anti-entropy round: full mesh by default, epidemic
-        random-``fanout`` pulls per peer when ``fanout`` is given."""
-        return gossip_round(self.peers, fanout=fanout,
-                            rng=self._gossip_rng)
+        random-``fanout`` pulls per peer when ``fanout`` is given.
+        Also pumps every peer's pending replication pushes — gossip is
+        the fabric's heartbeat, so a revived primary receives its
+        hinted handoffs within one round of coming back."""
+        n = gossip_round(self.peers, fanout=fanout,
+                         rng=self._gossip_rng)
+        self.repair_round()
+        return n
+
+    def repair_round(self) -> int:
+        """Pump every live peer's pending replication/handoff pushes
+        once; returns the number of pushes still pending fleet-wide
+        (0 = converged)."""
+        for p in self.peers:
+            if p.alive:
+                p.replication.pump()
+        return sum(p.replication.pending for p in self.peers)
 
     def kill(self, peer_id: str) -> None:
         self.by_id[peer_id].alive = False
@@ -85,3 +120,13 @@ class CacheCluster:
 
     def server_stats(self) -> Dict[str, dict]:
         return {p.peer_id: dict(p.server.stats) for p in self.peers}
+
+    def replication_stats(self) -> Dict[str, Dict[str, int]]:
+        return {p.peer_id: p.replication.snapshot() for p in self.peers}
+
+    def p2p_bytes(self) -> int:
+        """Total blob bytes moved peer-to-peer (push replication +
+        handoffs) — the fan-out traffic that used to ride the client's
+        critical path."""
+        return sum(s["repl_push_bytes"] + s["handoff_bytes"]
+                   for s in self.replication_stats().values())

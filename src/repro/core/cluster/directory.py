@@ -17,13 +17,23 @@ fetches and the planner reroutes (``adaptive=False`` pins the
 construction-time nominal costs for A/B comparison; see
 ``benchmarks/cluster_sweep.py``).
 
-Uploads follow the consistent-hash placement policy; keys observed hot
-at fetch time are replicated best-effort to the fastest other peer, so
-the skewed head of the workload migrates onto the best links. With a
-decaying :class:`HotKeyTracker` (``hot_decay_every``), keys that cool
-lose that extra replica again: the directory remembers which replicas
-it minted and garbage-collects them (``del`` op) once the key is no
-longer hot, returning the bytes to the peer's store budget.
+Writes are a single PUT: the client ships one copy to the first
+accepting peer in consistent-hash ring order and the *peer* fans out
+to the other ring owners itself (peer-side push replication + hinted
+handoff, :mod:`repro.core.cluster.replication`) — replication bytes
+never ride the client's critical path. A peer whose store budget
+rejects the blob acks ``stored: false`` and the client keeps falling
+down the ring instead of registering a phantom catalog entry.
+
+Keys observed hot at fetch time are replicated best-effort to the
+fastest other peer — also peer-to-peer: the client sends a tiny ``hot``
+hint to the peer that served the fetch and that peer pushes the blob.
+With a decaying :class:`HotKeyTracker` (``hot_decay_every``), keys that
+cool lose that extra replica again: the directory remembers which
+replicas it minted (pinning their hotness counts so a full tracker
+can't forget a live replica) and garbage-collects them (``del`` op)
+once the key is no longer hot, returning the bytes to the peer's store
+budget.
 """
 from __future__ import annotations
 
@@ -65,11 +75,15 @@ class PeerDirectory:
                  placement: Optional[PlacementPolicy] = None,
                  hot_threshold: int = 3,
                  hot_decay_every: int = 0,
+                 hot_max_entries: int = 4096,
                  replicate_hot: bool = True,
                  suspect_cooldown_s: float = 30.0,
                  sync_peers: Optional[Sequence[str]] = None,
                  estimator: Optional[LinkEstimator] = None,
-                 adaptive: bool = True):
+                 adaptive: bool = True,
+                 miss_sample_cap_s: float = 0.05,
+                 repl_factor: int = 2,
+                 replica_gc_grace_s: float = 1.0):
         """``peers`` mixes :class:`CachePeer` objects (in-proc fabric:
         the directory builds the simulated ``PeerTransport``) and
         transport-like objects carrying a ``peer_id`` and
@@ -86,10 +100,21 @@ class PeerDirectory:
                 link = PeerLink(p.peer_id, p, cache_cfg)
             self.links[link.peer_id] = link
         self.placement = placement or PlacementPolicy(list(self.links))
+        # replicas THIS directory minted: digest -> replica peer id
+        # (the GC set for cooled keys). Defined before the tracker so
+        # live replicas can pin their hotness counts against the
+        # tracker's max_entries eviction.
+        self._replicas: Dict[bytes, str] = {}
         self.hot = HotKeyTracker(hot_threshold,
-                                 decay_every=hot_decay_every)
+                                 max_entries=hot_max_entries,
+                                 decay_every=hot_decay_every,
+                                 pinned=self._replicas.__contains__)
         self.replicate_hot = replicate_hot
         self.suspect_cooldown_s = suspect_cooldown_s
+        # misses slower than this bound (server-side handling stalls,
+        # not wire time) are excluded from the RTT estimator — see
+        # record_get
+        self.miss_sample_cap_s = miss_sample_cap_s
         # restrict which peers this client syncs with (partial
         # connectivity: gossip keeps the other catalogs fresh anyway)
         self.sync_peers = list(sync_peers) if sync_peers else None
@@ -97,9 +122,18 @@ class PeerDirectory:
         self.sync_bytes = 0
         self.replications = 0
         self.replica_gcs = 0
-        # replicas THIS directory minted: digest -> replica peer id
-        # (the GC set for cooled keys)
-        self._replicas: Dict[bytes, str] = {}
+        # ring owners per key (mirrors the peers' repl_factor): hot
+        # replicas are only ever minted on NON-owners, so gc_replicas
+        # can never delete an owner's copy — least of all the primary's
+        self.repl_factor = repl_factor
+        # clock time of the first gc pass where the replica peer acked
+        # the del but had nothing to delete — on the TCP fabric the
+        # hint's push may still be queued behind the serving peer's
+        # gossip pump, so the entry is retried for a grace period (not
+        # a pass count: passes can burn in milliseconds) before it is
+        # considered gone
+        self.replica_gc_grace_s = replica_gc_grace_s
+        self._gc_misses: Dict[bytes, float] = {}
         # link costs: nominal snapshot at construction + adaptive EWMA
         # seeded from it. ``adaptive=False`` pins the nominal costs.
         self.adaptive = adaptive
@@ -198,19 +232,30 @@ class PeerDirectory:
 
     # -- placement -----------------------------------------------------
     def upload(self, digest: bytes, blob: bytes) -> int:
-        """PUT to the consistent-hash primary, falling down the ring on
-        dead peers (best effort; async in the paper's sense, so no sim
-        clock is advanced). Returns bytes shipped (0 = nowhere alive)."""
+        """ONE PUT to the first accepting peer in consistent-hash ring
+        order (best effort; async in the paper's sense, so no sim clock
+        is advanced). The accepting peer fans the blob out to the other
+        ring owners itself — and, if it is not the key's true primary,
+        records a hinted handoff that repairs the placement once the
+        primary is back. A ``stored: false`` ack (store budget rejected
+        the blob) keeps falling down the ring WITHOUT registering a
+        catalog entry: a registered-but-absent key would be an instant
+        self-inflicted Bloom false positive. Returns client-shipped
+        bytes (0 = nowhere accepted)."""
         now = self.clock.now()
         for pid in self.placement.ring_order(digest):
             ln = self.links[pid]
             if ln.suspect_until > now:
                 continue
             try:
-                self.request(pid, "put", {"key": digest, "blob": blob},
-                             advance_clock=False)
+                resp, _, _ = self.request(
+                    pid, "put", {"key": digest, "blob": blob},
+                    advance_clock=False)
             except TransportError:
                 continue
+            if not resp.get("stored", True):
+                ln.stats.store_rejects += 1
+                continue               # budget refused: try the next peer
             ln.catalog.register(digest)
             ln.stats.bytes_up += len(blob)
             return len(blob)
@@ -218,12 +263,14 @@ class PeerDirectory:
 
     def note_fetch(self, digest: bytes, blob: bytes,
                    src_peer: str) -> Optional[str]:
-        """Record a successful fetch; once the key is hot, replicate it
-        best-effort to the fastest usable peer that does not already
-        advertise it. Keys that have *cooled* (decaying tracker) lose
-        the replica this directory minted for them — see
-        :meth:`gc_replicas`. Returns the replica peer id when one was
-        made."""
+        """Record a successful fetch; once the key is hot, ask the peer
+        that served it to replicate it — a tiny ``hot`` hint, not a
+        blob upload: the serving peer pushes its copy peer-to-peer to
+        the fastest usable peer that does not already advertise it, so
+        hot-key fan-out costs the client ~one digest on the wire. Keys
+        that have *cooled* (decaying tracker) lose the replica this
+        directory minted for them — see :meth:`gc_replicas`. Returns
+        the replica target peer id when a hint was accepted."""
         self.hot.note(digest)
         if self.hot.decay_every > 0:
             self.gc_replicas()
@@ -232,18 +279,47 @@ class PeerDirectory:
         if digest in self._replicas:
             return None                # this directory already made one
         holders = set(self.lookup(digest)) | {src_peer}
-        cands = [pid for pid in self.usable_ids() if pid not in holders]
+        # never target a ring owner: owners get (or will get, via
+        # handoff) their copy from the peers' own fan-out, and a
+        # replica minted on an owner would later be gc'd — deleting
+        # the primary's only copy and re-creating the misplacement bug
+        owners = set(self.placement.ring_order(digest)[:self.repl_factor])
+        cands = [pid for pid in self.usable_ids()
+                 if pid not in holders and pid not in owners]
         if not cands:
             return None
         target = min(cands,
                      key=lambda pid: self.est_fetch_s(pid, len(blob)))
         try:
-            self.request(target, "put", {"key": digest, "blob": blob},
-                         advance_clock=False)
+            resp, _, _ = self.request(
+                src_peer, "hot", {"key": digest, "target": target},
+                advance_clock=False)
         except TransportError:
             return None
+        if resp.get("ok"):
+            self.links[src_peer].stats.hints += 1
+        else:
+            # the serving peer can't push (replication unwired — bare
+            # serve_peer_tcp peers — or it already evicted the blob):
+            # fall back to shipping the copy ourselves, as before this
+            # became peer-to-peer. Deliberately a `repl`, NOT a `put`:
+            # a wired target must store the replica as-is, not treat it
+            # as a misplaced client write, hand it off, and drop it.
+            try:
+                resp, _, _ = self.request(
+                    target, "repl",
+                    {"key": digest, "blob": blob, "origin": "client"},
+                    advance_clock=False)
+            except TransportError:
+                return None
+            if not (resp.get("ok") and resp.get("stored", True)):
+                self.links[target].stats.store_rejects += 1
+                return None
+            self.links[target].stats.bytes_up += len(blob)
+        # optimistic on the hint path: the push is in flight
+        # peer-to-peer; if the target drops it the catalog lie degrades
+        # into a §3.3 false positive
         self.links[target].catalog.register(digest)
-        self.links[target].stats.bytes_up += len(blob)
         self.replications += 1
         self._replicas[digest] = target
         return target
@@ -262,13 +338,27 @@ class PeerDirectory:
                        if not self.hot.is_hot(d)]:
             target = self._replicas[digest]
             try:
-                self.request(target, "del", {"key": digest},
-                             advance_clock=False)
+                resp, _, _ = self.request(target, "del",
+                                          {"key": digest},
+                                          advance_clock=False)
             except TransportError:
                 # transient failure: keep the entry so the next GC pass
                 # retries instead of leaking an untracked replica (and
                 # so a re-heated key can't mint a second copy)
                 continue
+            if not resp.get("ok"):
+                # the peer had nothing to delete — on the TCP fabric
+                # the hinted push may still be queued behind the
+                # serving peer's gossip pump (~a gossip interval), and
+                # dropping the entry now would leave that late-arriving
+                # copy untracked forever. Keep retrying for a grace
+                # PERIOD — gc passes can fire milliseconds apart, so a
+                # pass count would burn out before the push lands.
+                now = self.clock.now()
+                first = self._gc_misses.setdefault(digest, now)
+                if now - first < self.replica_gc_grace_s:
+                    continue
+            self._gc_misses.pop(digest, None)
             del self._replicas[digest]
             gone += 1
             self.replica_gcs += 1
@@ -293,8 +383,17 @@ class PeerDirectory:
                                    actual_s)
         else:
             st.misses += 1
-            # a failed GET is a near-empty round trip: an RTT sample
-            self.estimator.observe(peer_id, 256, actual_s)
+            # a failed GET is a near-empty round trip — *usually* an
+            # RTT sample. But a miss dominated by server-side handling
+            # (store lock contention, a GC pause) is NOT wire time:
+            # folding it in as a pure 256-byte RTT would inflate the
+            # EWMA and flip the planner away from a healthy link. Skip
+            # samples beyond a sanity bound of the current belief.
+            _, rtt_now, _ = self.estimator.snapshot(peer_id)
+            if actual_s <= max(self.miss_sample_cap_s, 8.0 * rtt_now):
+                self.estimator.observe(peer_id, 256, actual_s)
+            else:
+                st.miss_outliers += 1
 
     def peer_stats(self) -> Dict[str, PeerStats]:
         for pid, ln in self.links.items():

@@ -29,6 +29,7 @@ import threading
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.config import CacheConfig
+from repro.core.cluster.replication import Replicator
 from repro.core.netsim import SimClock, SimNetwork
 from repro.core.server import CacheServer
 from repro.core.transport import InProcTransport, TransportError
@@ -56,6 +57,20 @@ class CachePeer:
         self.remote_log: List[Tuple[bytes, str]] = []
         self._remote_seen: Set[Tuple[bytes, str]] = set()
         self.gossip_stats = {"rounds": 0, "keys_in": 0, "bytes": 0}
+        # peer-side push replication & ring repair: inert until the
+        # runtime (CacheCluster in-proc, the daemon's set_neighbors on
+        # TCP) wires the placement ring and a send function
+        self.replication = Replicator(peer_id)
+
+    def wire_replication(self, ring: Sequence[str], send,
+                         repl_factor: int = 2,
+                         immediate: bool = False) -> None:
+        """Teach this peer the placement ring and how to push blobs to
+        the other members (``send(peer_id, op, payload) -> dict``)."""
+        self.replication.wire(ring, send, self.server.peek,
+                              self.server.delete,
+                              repl_factor=repl_factor,
+                              immediate=immediate)
 
     # ------------------------------------------------------------------
     def gossip_cursors(self, src_id: str) -> Tuple[int, int]:
@@ -117,12 +132,36 @@ class CachePeer:
 
     # ------------------------------------------------------------------
     def handle(self, op: str, payload: dict) -> dict:
-        """Transport entry point: the server's ops plus cluster sync.
+        """Transport entry point: the server's ops plus cluster sync
+        and peer-side replication.
 
         ``csync`` is the cluster-aware catalog sync: like ``sync`` it
         returns this peer's new key digests, but it also returns the
         gossiped ``remote`` (digest, owner-peer) entries so one sync
-        round refreshes the client's catalogs for *every* peer."""
+        round refreshes the client's catalogs for *every* peer.
+
+        ``put`` (a client write) additionally schedules the peer-side
+        fan-out to the key's other ring owners; ``repl``/``handoff``
+        are the peer-to-peer pushes themselves (stored without further
+        fan-out — pushes never cascade); ``hot`` is the client's tiny
+        hotness hint asking this peer to ship its copy to a target."""
+        if op == "put":
+            resp = self.server.handle("put", payload)
+            if resp.get("stored"):
+                self.replication.on_client_put(bytes(payload["key"]))
+            return resp
+        if op in ("repl", "handoff"):
+            key, blob = bytes(payload["key"]), payload["blob"]
+            _, stored = self.server.put(key, blob)
+            self.replication.on_accept(op, len(blob), stored)
+            return {"ok": True, "stored": stored, "peer": self.peer_id}
+        if op == "hot":
+            ok = self.replication.on_hot_hint(bytes(payload["key"]),
+                                              payload["target"])
+            return {"ok": ok, "peer": self.peer_id}
+        if op == "rstats":
+            return {"ok": True, "peer": self.peer_id,
+                    "repl": self.replication.snapshot()}
         if op == "csync":
             keys, v = self.server.sync(payload.get("since", 0))
             with self._glock:

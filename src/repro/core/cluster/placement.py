@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import bisect
 import hashlib
-from typing import Dict, List, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 
 def _ring_hash(data: bytes) -> int:
@@ -67,13 +67,24 @@ class HotKeyTracker:
     workload: a key that stops being fetched cools below the threshold
     within a few decay periods (exponential forgetting), which is what
     lets the directory garbage-collect its extra replica and hand the
-    bytes back to the store budget."""
+    bytes back to the store budget.
+
+    ``pinned`` marks digests that must never lose their count to the
+    ``max_entries`` eviction: the directory pins every digest it holds
+    a live replica for. Without the pin, a full tracker could evict a
+    replicated key's count, ``is_hot`` would flip false, and the next
+    ``gc_replicas()`` would delete a *genuinely hot* replica — losing
+    count means losing the replica. Pinned digests may let the table
+    temporarily exceed ``max_entries`` (bounded by the number of live
+    replicas, itself bounded by the peers' store budgets)."""
 
     def __init__(self, threshold: int = 3, max_entries: int = 4096,
-                 decay_every: int = 0):
+                 decay_every: int = 0,
+                 pinned: Optional[Callable[[bytes], bool]] = None):
         self.threshold = threshold
         self.max_entries = max_entries
         self.decay_every = decay_every
+        self.pinned = pinned or (lambda digest: False)
         self.counts: Dict[bytes, int] = {}
         self._notes_since_decay = 0
         self.decays = 0
@@ -81,9 +92,14 @@ class HotKeyTracker:
     def note(self, digest: bytes) -> int:
         if digest not in self.counts and \
                 len(self.counts) >= self.max_entries:
-            # drop the coldest entry; approximate but bounded
-            coldest = min(self.counts, key=self.counts.get)
-            del self.counts[coldest]
+            # drop the coldest unpinned entry; approximate but bounded.
+            # Pinned digests (live replicas) keep their counts — if
+            # everything is pinned, grow past the cap instead of
+            # breaking a replica's hotness.
+            evictable = [d for d in self.counts if not self.pinned(d)]
+            if evictable:
+                coldest = min(evictable, key=self.counts.get)
+                del self.counts[coldest]
         self.counts[digest] = self.counts.get(digest, 0) + 1
         if self.decay_every > 0:
             self._notes_since_decay += 1

@@ -40,6 +40,13 @@ class FetchAttempt:
     key: PromptKey
     est_fetch_s: float = 0.0
     est_total_s: float = 0.0       # fetch + estimated suffix prefill
+    # position of peer_id in the key's consistent-hash ring order
+    # (0 = true primary). With peer-side push replication a key
+    # legitimately lives on several peers; ties between equal-cost
+    # links break toward the ring primary, so reads re-converge onto
+    # the repaired placement and plan order is deterministic across
+    # PYTHONHASHSEED / peer enumeration order.
+    ring_rank: int = 0
 
 
 class FetchPlanner:
@@ -71,14 +78,21 @@ class FetchPlanner:
                              with_logits=k.n_tokens == n_tokens)
             suffix_s = (perf.time_prefill(cfg, n_tokens - k.n_tokens)
                         if perf else 0.0)
+            placement = getattr(d, "placement", None)
+            rank = ({pid: i for i, pid
+                     in enumerate(placement.ring_order(k.digest))}
+                    if placement is not None else {})
             for pid in pids:
                 est = d.est_fetch_s(pid, nb)
-                attempts.append(FetchAttempt(pid, k, est, est + suffix_s))
+                attempts.append(FetchAttempt(pid, k, est, est + suffix_s,
+                                             rank.get(pid, 0)))
         if perf is not None:
             local_s = perf.time_prefill(cfg, n_tokens)
             attempts = [a for a in attempts if a.est_total_s < local_s]
-            attempts.sort(key=lambda a: (a.est_total_s, a.est_fetch_s))
+            attempts.sort(key=lambda a: (a.est_total_s, a.est_fetch_s,
+                                         a.ring_rank))
         else:
             attempts.sort(
-                key=lambda a: (-a.key.n_tokens, a.est_fetch_s))
+                key=lambda a: (-a.key.n_tokens, a.est_fetch_s,
+                               a.ring_rank))
         return attempts

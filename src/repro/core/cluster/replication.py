@@ -1,0 +1,291 @@
+"""Peer-side push replication and ring repair.
+
+Before this module the write path was entirely *client*-driven:
+``PeerDirectory.upload`` fell down the consistent-hash ring when the
+primary was suspect and never looked back — the blob stayed wherever it
+landed, every other client's ``placement.primary(digest)`` probe missed
+forever (a permanent self-inflicted Bloom-FP fallback), and hot-key
+replication shipped whole blobs from the client on its critical path.
+
+:class:`Replicator` moves the write fan-out onto the peers themselves
+(TPI-LLM, arXiv:2410.00531: peer-to-peer state movement is the right
+primitive for edge fleets; SparKV, arXiv:2604.21231: keep overhead off
+the device's critical path):
+
+* **Push replication** — a peer that accepts a client ``put`` pushes
+  the blob itself to the other ring owners (the first ``repl_factor``
+  peers in ``ring_order(digest)``) via the ``repl`` op. The client
+  ships exactly one copy; durability fan-out is peer-to-peer.
+* **Hinted handoff** — a peer that accepted a blob it does not *own*
+  (it is not among the key's ring owners, or not the primary) records a
+  hint and re-pushes the blob to the true primary (``handoff`` op)
+  until the primary acks it — which is exactly when the primary has
+  revived. Misplacement is repaired at the root instead of lingering.
+* **Leak repair** — once the handoff lands and no pushes remain
+  pending, a non-owner drops its own stray copy (tombstoned, §3.3),
+  returning the bytes to its store budget instead of leaking a replica
+  forever.
+* **Hot hints** — the client no longer ships hot blobs to new peers;
+  it sends a tiny ``hot`` op to the peer that served the fetch, and
+  *that peer* pushes the blob to the requested target.
+
+The transport is whatever ``send(peer_id, op, payload)`` the runtime
+wires in — a direct ``handle`` call on the in-proc fabric
+(:class:`~repro.core.cluster.CacheCluster` wires it, pumping pending
+pushes each gossip round), a pooled
+:class:`~repro.core.net.link.TCPPeerLink` on the daemon (the gossip
+background thread pumps). Every push is one bounded request; a dead
+target costs a :class:`TransportError` and the task is retried on the
+next pump — the hinted-handoff queue IS the retry queue.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.cluster.placement import PlacementPolicy
+from repro.core.transport import TransportError
+
+
+class Replicator:
+    """One peer's replication state: ring knowledge, pending pushes,
+    hinted handoffs, and push/accept accounting.
+
+    Unwired (no ring), every entry point is a cheap no-op, so a bare
+    :class:`~repro.core.cluster.CachePeer` behind ``serve_peer_tcp``
+    keeps working exactly as before.
+    """
+
+    def __init__(self, peer_id: str):
+        self.peer_id = peer_id
+        self.placement: Optional[PlacementPolicy] = None
+        self.repl_factor = 1
+        self.immediate = False
+        self._send: Optional[Callable[[str, str, dict], dict]] = None
+        self._peek: Optional[Callable[[bytes], Optional[bytes]]] = None
+        self._drop: Optional[Callable[[bytes], bool]] = None
+        self._lock = threading.Lock()
+        # single-flight pump: concurrent immediate pumps (several
+        # client sessions landing puts on one peer) must not snapshot
+        # the same batch and double-send / double-count pushes
+        self._pump_lock = threading.Lock()
+        # (digest, target) -> op kind ("repl" | "handoff"); insertion
+        # order makes pump order deterministic
+        self._tasks: "OrderedDict[Tuple[bytes, str], str]" = OrderedDict()
+        # pending pushes per digest, kept in lockstep with _tasks so
+        # the post-push leak check is O(1) instead of a scan (a
+        # backlog-draining pump would otherwise go quadratic)
+        self._per_digest: Dict[bytes, int] = {}
+        # digests this peer accepted but does not own (leak candidates)
+        self._misplaced: set = set()
+        # digests whose handoff to the true primary has been acked
+        self._handoff_ok: set = set()
+        self.stats: Dict[str, int] = {
+            # push side
+            "repl_pushed": 0, "repl_push_bytes": 0,
+            "handoffs": 0, "handoff_bytes": 0,
+            "hot_hints": 0, "retries": 0, "rejected": 0, "dropped": 0,
+            "rounds": 0, "leaks_repaired": 0,
+            # accept side
+            "repl_in": 0, "repl_in_bytes": 0,
+            "handoff_in": 0, "handoff_in_bytes": 0,
+        }
+
+    # ------------------------------------------------------------------
+    @property
+    def wired(self) -> bool:
+        return self.placement is not None and self._send is not None
+
+    @property
+    def pending(self) -> int:
+        with self._lock:
+            return len(self._tasks)
+
+    def wire(self, ring: Sequence[str],
+             send: Callable[[str, str, dict], dict],
+             peek: Callable[[bytes], Optional[bytes]],
+             drop: Callable[[bytes], bool],
+             repl_factor: int = 2, vnodes: int = 32,
+             immediate: bool = False) -> None:
+        """Teach this peer the placement ring and how to reach the other
+        members. ``immediate=True`` pumps synchronously on enqueue (the
+        deterministic in-proc fabric); daemons leave it False and pump
+        from their gossip thread. Re-wiring (a daemon's
+        ``set_neighbors`` after a fleet change) keeps pending tasks."""
+        with self._lock:
+            self.placement = PlacementPolicy(sorted(ring), vnodes)
+            self._send = send
+            self._peek = peek
+            self._drop = drop
+            self.repl_factor = max(1, min(repl_factor, len(ring)))
+            self.immediate = immediate
+
+    # ------------------------------------------------------------------
+    def _add_task(self, digest: bytes, target: str, kind: str) -> bool:
+        """Insert one push task (caller holds ``_lock``). Returns True
+        when it was new."""
+        if (digest, target) in self._tasks:
+            return False
+        self._tasks[(digest, target)] = kind
+        self._per_digest[digest] = self._per_digest.get(digest, 0) + 1
+        return True
+
+    def _pop_task(self, digest: bytes, target: str) -> None:
+        """Remove one push task (caller holds ``_lock``)."""
+        if self._tasks.pop((digest, target), None) is None:
+            return
+        left = self._per_digest.get(digest, 0) - 1
+        if left > 0:
+            self._per_digest[digest] = left
+        else:
+            self._per_digest.pop(digest, None)
+
+    # ------------------------------------------------------------------
+    def owners(self, digest: bytes) -> List[str]:
+        """The ``repl_factor`` ring owners of ``digest`` (primary
+        first); empty when unwired."""
+        if self.placement is None:
+            return []
+        return self.placement.ring_order(digest)[:self.repl_factor]
+
+    def on_client_put(self, digest: bytes) -> int:
+        """A client ``put`` landed here: schedule the peer-side fan-out.
+
+        Pushes ``repl`` to every other ring owner; if this peer is not
+        the primary, the push *to* the primary is a hinted ``handoff``
+        (it retries until the primary is back and acks — the ring
+        repair). Returns the number of pushes scheduled."""
+        if not self.wired:
+            return 0
+        owners = self.owners(digest)
+        if not owners:
+            return 0
+        primary = owners[0]
+        scheduled = 0
+        with self._lock:
+            for target in owners:
+                if target == self.peer_id:
+                    continue
+                kind = "handoff" if (target == primary
+                                     and self.peer_id != primary) else "repl"
+                if self._add_task(digest, target, kind):
+                    scheduled += 1
+            if self.peer_id not in owners:
+                # accepted a blob we don't own (client fell down the
+                # ring past every owner): a stray replica until the
+                # handoff lands, then dropped
+                self._misplaced.add(digest)
+        if scheduled and self.immediate:
+            self.pump()
+        return scheduled
+
+    def on_hot_hint(self, digest: bytes, target: str) -> bool:
+        """Client-observed hotness: push our copy of ``digest`` to
+        ``target`` peer-to-peer (the client ships ~32 bytes, not the
+        blob)."""
+        if not self.wired or self._peek(digest) is None:
+            return False
+        if self.placement is not None and \
+                target not in self.placement.peer_ids:
+            return False
+        with self._lock:
+            self._add_task(digest, target, "repl")
+            self.stats["hot_hints"] += 1
+        if self.immediate:
+            self.pump()
+        return True
+
+    def on_accept(self, kind: str, nbytes: int, stored: bool) -> None:
+        """Account an incoming ``repl``/``handoff`` push (no further
+        fan-out — pushes never cascade)."""
+        with self._lock:
+            if stored:
+                self.stats[f"{kind}_in"] += 1
+                self.stats[f"{kind}_in_bytes"] += nbytes
+
+    # ------------------------------------------------------------------
+    def pump(self) -> int:
+        """Attempt every pending push once. A dead target costs one
+        bounded :class:`TransportError` and keeps its task (the next
+        pump retries — hinted handoff converges when the target
+        revives). Returns the number of pushes delivered this round.
+        Serialized: one pump at a time per peer (pushes to a peer never
+        nest back into its own pump, so blocking here cannot deadlock
+        — it just makes concurrent enqueuers take turns)."""
+        with self._pump_lock:
+            return self._pump_once()
+
+    def _pump_once(self) -> int:
+        with self._lock:
+            batch = list(self._tasks.items())
+            if batch:
+                self.stats["rounds"] += 1
+        delivered = 0
+        for (digest, target), kind in batch:
+            blob = self._peek(digest)
+            if blob is None:
+                # our copy is gone (evicted/GC'd): nothing to push
+                with self._lock:
+                    self._pop_task(digest, target)
+                    self.stats["dropped"] += 1
+                self._maybe_repair_leak(digest)
+                continue
+            try:
+                resp = self._send(target, kind,
+                                  {"key": digest, "blob": blob,
+                                   "origin": self.peer_id})
+            except TransportError:
+                with self._lock:
+                    self.stats["retries"] += 1
+                continue
+            with self._lock:
+                self._pop_task(digest, target)
+                if resp.get("ok") and resp.get("stored", True):
+                    delivered += 1
+                    if kind == "handoff":
+                        self.stats["handoffs"] += 1
+                        self.stats["handoff_bytes"] += len(blob)
+                        if digest in self._misplaced:
+                            # only a non-owner acceptor waits to drop
+                            # its stray copy; owners must not accrete
+                            # bookkeeping per delivered handoff
+                            self._handoff_ok.add(digest)
+                    else:
+                        self.stats["repl_pushed"] += 1
+                        self.stats["repl_push_bytes"] += len(blob)
+                else:
+                    # target's store budget refused the blob: give up on
+                    # this copy rather than minting a phantom entry
+                    self.stats["rejected"] += 1
+            self._maybe_repair_leak(digest)
+        return delivered
+
+    def _maybe_repair_leak(self, digest: bytes) -> None:
+        """Drop our stray copy of ``digest`` once (a) the true primary
+        acked the handoff and (b) no pushes of it remain pending. The
+        key lingers in Bloom catalogs as a tombstone (§3.3 latency-only
+        false positive); its bytes return to the store budget.
+
+        Whenever a digest has no pushes left — delivered, rejected, or
+        locally evicted — its bookkeeping is cleared either way, so the
+        misplaced/handoff sets never grow with write volume."""
+        with self._lock:
+            if self._per_digest.get(digest, 0):
+                return                 # still pushing: keep the hints
+            do_drop = digest in self._misplaced and \
+                digest in self._handoff_ok
+            self._misplaced.discard(digest)
+            self._handoff_ok.discard(digest)
+            drop = self._drop if do_drop else None
+        if drop is not None and drop(digest):
+            with self._lock:
+                self.stats["leaks_repaired"] += 1
+
+    # ------------------------------------------------------------------
+    def snapshot(self) -> Dict[str, int]:
+        with self._lock:
+            out = dict(self.stats)
+            out["pending"] = len(self._tasks)
+            out["misplaced"] = len(self._misplaced)
+        return out

@@ -59,9 +59,16 @@ class PeerStats:
     gets: int = 0
     hits: int = 0
     misses: int = 0                # failed GETs (Bloom FP / eviction)
+    miss_outliers: int = 0         # slow misses excluded from the RTT EWMA
     transport_errors: int = 0      # dead-peer fast-fails
     bytes_down: int = 0
-    bytes_up: int = 0
+    bytes_up: int = 0              # client-shipped upload bytes (one copy
+    #                                per key: replication fan-out moves
+    #                                peer-to-peer, not through the client)
+    store_rejects: int = 0         # puts the peer's byte budget refused
+    #                                (acked stored:false, never cataloged)
+    hints: int = 0                 # tiny `hot` replication hints sent to
+    #                                this peer in place of blob uploads
     est_fetch_s: float = 0.0       # sum of planner estimates on hits
     actual_fetch_s: float = 0.0    # sum of realized fetch times on hits
     tombstones: int = 0            # stale keys the peer advertised at sync

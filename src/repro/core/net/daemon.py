@@ -16,11 +16,18 @@ milliseconds.
 
 On top of the peer's ops the daemon speaks three control ops:
 
-* ``health``        — liveness + store occupancy + pid
-* ``set_neighbors`` — ``{peers: {peer_id: [host, port], ...}}``; arms
-  the epidemic gossip thread, which every ``--gossip-interval`` seconds
-  pulls ``csync`` deltas from ``--gossip-fanout`` random neighbors over
-  TCP and folds them in (random-k rounds, not a full mesh)
+* ``health``        — liveness + store occupancy + pid + replication
+  stats (pending pushes, handoffs delivered, repaired leaks)
+* ``set_neighbors`` — ``{peers: {peer_id: [host, port], ...},
+  ring: [...], repl_factor: R}``; arms the epidemic gossip thread,
+  which every ``--gossip-interval`` seconds pulls ``csync`` deltas from
+  ``--gossip-fanout`` random neighbors over TCP and folds them in
+  (random-k rounds, not a full mesh) — and wires peer-side push
+  replication: accepted client PUTs fan out to the key's other ring
+  owners from here, and hinted handoffs re-push misplaced blobs to
+  their true primary once it answers again. The same background thread
+  that gossips also pumps the pending pushes, so repair converges at
+  gossip cadence without touching any client's critical path.
 * ``shutdown``      — replies ``{"ok": True}`` then exits through the
   server's graceful drain, so concurrent in-flight requests still get
   their responses before the sockets close
@@ -47,11 +54,37 @@ from repro.core.transport import TransportError
 class DaemonHandler:
     """Wraps a peer's ``handle`` with the daemon control ops."""
 
-    def __init__(self, peer: CachePeer, stop_event: threading.Event):
+    def __init__(self, peer: CachePeer, stop_event: threading.Event,
+                 repl_factor: int = 2):
         self.peer = peer
         self.stop_event = stop_event
+        self.repl_factor = repl_factor
         self.neighbors: Dict[str, Tuple[str, int]] = {}
+        # every peer id this daemon has ever been told about: the ring
+        # fallback must stay a superset across re-wires, because a
+        # currently-dead primary has to keep owning its keys for
+        # hinted handoff to repair them when it revives
+        self._known_ring: set = {peer.peer_id}
         self._nlock = threading.Lock()
+        # replication push links, lazily (re)built from the neighbor map
+        self._repl_links: Dict[str, TCPPeerLink] = {}
+
+    def _repl_send(self, peer_id: str, op: str, payload: dict) -> dict:
+        """Bounded peer-to-peer push used by the replicator: one
+        request over a pooled lazy link; any failure is a
+        :class:`TransportError` and the replicator retries on a later
+        pump."""
+        with self._nlock:
+            addr = self.neighbors.get(peer_id)
+            link = self._repl_links.get(peer_id)
+        if addr is None:
+            raise TransportError(f"no address for peer {peer_id!r}")
+        if link is None or link.addr != addr:
+            link = TCPPeerLink(peer_id, *addr, timeout=2.0)
+            with self._nlock:
+                self._repl_links[peer_id] = link
+        resp, _, _ = link.request(op, payload)
+        return resp
 
     def handle(self, op: str, payload: dict) -> dict:
         if op == "health":
@@ -59,14 +92,36 @@ class DaemonHandler:
                     "pid": os.getpid(),
                     "stored_bytes": self.peer.server.stored_bytes,
                     "n_entries": len(self.peer.server.store),
-                    "gossip": dict(self.peer.gossip_stats)}
+                    "gossip": dict(self.peer.gossip_stats),
+                    "repl": self.peer.replication.snapshot()}
         if op == "set_neighbors":
             with self._nlock:
                 self.neighbors = {
                     pid: (host, int(port))
                     for pid, (host, port) in payload["peers"].items()
                     if pid != self.peer.peer_id}
-            return {"ok": True, "n_neighbors": len(self.neighbors)}
+            # wire (or re-wire after fleet changes) the placement ring:
+            # from here on this peer fans accepted PUTs out itself and
+            # repairs misplaced blobs via hinted handoff. An explicit
+            # `ring` is authoritative (the supervisor sends one naming
+            # every spec'd peer, dead ones included); without one, the
+            # fallback accumulates every peer ever seen — deriving the
+            # ring from the currently-alive map alone would shift
+            # placement while the primary is down and re-introduce
+            # the misplacement-forever bug on the operator path.
+            if payload.get("ring"):
+                ring = list(payload["ring"])
+                self._known_ring = set(ring)
+            else:
+                self._known_ring |= set(payload["peers"])
+                ring = sorted(self._known_ring)
+            self.peer.wire_replication(
+                ring, self._repl_send,
+                repl_factor=int(payload.get("repl_factor",
+                                            self.repl_factor)),
+                immediate=False)
+            return {"ok": True, "n_neighbors": len(self.neighbors),
+                    "ring": ring}
         if op == "shutdown":
             self.stop_event.set()
             return {"ok": True, "bye": self.peer.peer_id}
@@ -81,11 +136,18 @@ def gossip_loop(handler: DaemonHandler, interval_s: float, fanout: int,
                 stop_event: threading.Event) -> None:
     """Epidemic pull gossip over TCP: each round, ``csync`` against
     ``fanout`` random neighbors and fold the deltas in. A dead neighbor
-    costs one bounded :class:`TransportError`, nothing more."""
+    costs one bounded :class:`TransportError`, nothing more.
+
+    The same thread pumps the peer's pending replication pushes and
+    hinted handoffs each round (csync-style background traffic): a
+    revived primary starts receiving its misplaced blobs within one
+    gossip interval, entirely off any client's critical path."""
     peer = handler.peer
     rng = random.Random(hash(peer.peer_id) & 0xFFFF)
     links: Dict[str, TCPPeerLink] = {}
     while not stop_event.wait(interval_s):
+        if peer.replication.wired:
+            peer.replication.pump()
         neighbors = handler.snapshot_neighbors()
         if not neighbors:
             continue
@@ -112,13 +174,17 @@ def main(argv=None) -> int:
     ap.add_argument("--max-store-bytes", type=int, default=0)
     ap.add_argument("--gossip-interval", type=float, default=0.25)
     ap.add_argument("--gossip-fanout", type=int, default=2)
+    ap.add_argument("--repl-factor", type=int, default=2,
+                    help="ring owners per key (used when set_neighbors "
+                         "does not carry its own repl_factor)")
     ap.add_argument("--drain-timeout", type=float, default=5.0)
     args = ap.parse_args(argv)
 
     stop_event = threading.Event()
     peer = CachePeer(args.peer_id, CacheConfig(
         max_store_bytes=args.max_store_bytes))
-    handler = DaemonHandler(peer, stop_event)
+    handler = DaemonHandler(peer, stop_event,
+                            repl_factor=args.repl_factor)
     server = serve_peer_tcp(handler, args.host, args.port,
                             drain_timeout_s=args.drain_timeout)
 

@@ -74,12 +74,14 @@ class PeerSupervisor:
     def __init__(self, specs: Sequence[PeerSpec],
                  python: str = sys.executable,
                  start_timeout_s: float = 30.0,
-                 request_timeout_s: float = 5.0):
+                 request_timeout_s: float = 5.0,
+                 repl_factor: int = 2):
         if not specs:
             raise ValueError("need at least one PeerSpec")
         self.python = python
         self.start_timeout_s = start_timeout_s
         self.request_timeout_s = request_timeout_s
+        self.repl_factor = repl_factor
         self.procs: Dict[str, PeerProc] = {
             s.peer_id: PeerProc(s) for s in specs}
         self._env = dict(os.environ, PYTHONPATH=_src_pythonpath())
@@ -146,12 +148,19 @@ class PeerSupervisor:
 
     def wire_gossip(self) -> None:
         """Tell every live daemon the full peer address map (arms the
-        epidemic gossip threads)."""
+        epidemic gossip threads) plus the placement ring and
+        replication factor (arms peer-side push replication + hinted
+        handoff). The ring always names EVERY spec'd peer — dead ones
+        included, since a pending handoff must keep targeting a
+        primary that will be restarted on the same address."""
+        ring = sorted(self.procs)
         addrs = {pid: [pp.spec.host, pp.port]
                  for pid, pp in self.procs.items() if pp.alive}
         for pid in addrs:
             try:
-                self.request(pid, "set_neighbors", {"peers": addrs})
+                self.request(pid, "set_neighbors",
+                             {"peers": addrs, "ring": ring,
+                              "repl_factor": self.repl_factor})
             except TransportError:
                 pass                   # it will be re-wired on restart
 
@@ -286,6 +295,32 @@ class PeerSupervisor:
                     ok = False
                     break
             if ok:
+                return True
+            time.sleep(0.05)
+        return False
+
+    def wait_repaired(self, digests: Sequence[bytes],
+                      timeout_s: float = 15.0) -> bool:
+        """Poll until every digest is GETtable from its consistent-hash
+        *primary* — the ring-repair convergence probe: after a primary
+        is killed mid-upload and revived (cold store), hinted handoffs
+        from the fallback acceptors must land the blobs back on it
+        within gossip cadence, not eventually-never."""
+        from repro.core.cluster.placement import PlacementPolicy
+        placement = PlacementPolicy(sorted(self.procs))
+        deadline = time.monotonic() + timeout_s
+        todo = {bytes(d) for d in digests}
+        while time.monotonic() < deadline:
+            for d in list(todo):
+                pid = placement.primary(d)
+                try:
+                    resp = self.request(pid, "get", {"key": d},
+                                        timeout=2.0)
+                except TransportError:
+                    continue
+                if resp.get("ok") and resp.get("blob") is not None:
+                    todo.discard(d)
+            if not todo:
                 return True
             time.sleep(0.05)
         return False

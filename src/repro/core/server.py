@@ -34,11 +34,24 @@ class CacheServer:
         self.lock = threading.Lock()
         self.stats = {"puts": 0, "gets": 0, "hits": 0, "misses": 0,
                       "bytes_in": 0, "bytes_out": 0, "syncs": 0,
-                      "evictions": 0, "tombstones": 0, "deletes": 0}
+                      "evictions": 0, "tombstones": 0, "deletes": 0,
+                      "rejects": 0}
 
     # ------------------------------------------------------------------
-    def put(self, key: bytes, blob: bytes) -> int:
+    def put(self, key: bytes, blob: bytes) -> Tuple[int, bool]:
+        """Store one blob. Returns ``(catalog_version, stored)``.
+
+        ``stored=False`` means the byte budget *rejected* the blob (it
+        is larger than the whole budget, so accepting it would evict
+        everything else and still overshoot): nothing is stored, the
+        key enters no catalog, and callers must NOT register it — a
+        silently-dropped put that clients still advertise is an instant
+        self-inflicted Bloom false positive."""
         with self.lock:
+            budget = self.cfg.max_store_bytes
+            if budget and len(blob) > budget:
+                self.stats["rejects"] += 1
+                return len(self.key_log), False
             fresh = key not in self.store
             if not fresh:
                 self.stored_bytes -= len(self.store[key])
@@ -53,7 +66,6 @@ class CacheServer:
             self.stats["bytes_in"] += len(blob)
             # LRU eviction under a byte budget: evicted keys stay in the
             # Bloom catalogs and degrade into §3.3 false positives.
-            budget = self.cfg.max_store_bytes
             while budget and self.stored_bytes > budget \
                     and len(self.store) > 1:
                 old_key, old_blob = self.store.popitem(last=False)
@@ -61,7 +73,13 @@ class CacheServer:
                 self.stats["evictions"] += 1
                 self.tombstones.add(old_key)
             self.stats["tombstones"] = len(self.tombstones)
-            return len(self.key_log)
+            return len(self.key_log), True
+
+    def peek(self, key: bytes) -> Optional[bytes]:
+        """Raw blob lookup without GET accounting or an LRU touch —
+        used by the replicator to read its own store for pushes."""
+        with self.lock:
+            return self.store.get(key)
 
     def get(self, key: bytes) -> Optional[bytes]:
         with self.lock:
@@ -99,8 +117,8 @@ class CacheServer:
     # ------------------------------------------------------------------
     def handle(self, op: str, payload: dict) -> dict:
         if op == "put":
-            v = self.put(payload["key"], payload["blob"])
-            return {"ok": True, "version": v}
+            v, stored = self.put(payload["key"], payload["blob"])
+            return {"ok": True, "stored": stored, "version": v}
         if op == "get":
             blob = self.get(payload["key"])
             return {"ok": blob is not None, "blob": blob}

@@ -178,6 +178,32 @@ class SessionPool:
         for s in self.sessions:
             s.sync_catalog()
 
+    def merged_peer_stats(self):
+        """Fleet view across every session's directory: per-peer
+        counters summed (gets/hits/bytes/hints/rejects — the
+        replication-aware accounting), estimator beliefs taken from the
+        shared :class:`LinkEstimator`. Empty outside cluster mode."""
+        from repro.core.metrics import PeerStats
+        merged = {}
+        for s in self.sessions:
+            if s.directory is None:
+                continue
+            for pid, st in s.directory.peer_stats().items():
+                agg = merged.setdefault(pid, PeerStats(pid))
+                for f in ("gets", "hits", "misses", "miss_outliers",
+                          "transport_errors", "bytes_down", "bytes_up",
+                          "store_rejects", "hints",
+                          "est_fetch_s", "actual_fetch_s"):
+                    setattr(agg, f, getattr(agg, f) + getattr(st, f))
+                # tombstones is a gauge (latest sync'd count), not a
+                # counter: take the freshest belief, don't sum
+                agg.tombstones = max(agg.tombstones, st.tombstones)
+        for pid, agg in merged.items():
+            bw, rtt, n_obs = self.estimator.snapshot(pid)
+            agg.est_bw_bps, agg.est_rtt_s = bw, rtt
+            agg.link_observations = n_obs
+        return merged
+
     def run(self, jobs: Sequence, max_new_tokens: int = 8,
             **infer_kw) -> List[InferResult]:
         """jobs: PromptSegments (or (session_idx, PromptSegments) pairs

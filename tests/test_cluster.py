@@ -97,16 +97,20 @@ def test_blob_via_peer_a_discoverable_syncing_only_peer_b(fabric_world):
     r1 = c1.infer(seg, max_new_tokens=4)
     assert r1.case == 1 and r1.blob_bytes_up > 0
     key = seg.keys(c1.meta)[0].digest
-    owner = next(pid for pid, peer in cluster.by_id.items()
-                 if key in peer.server.store)
-    other = next(pid for pid in cluster.by_id if pid != owner)
+    holders = {pid for pid, peer in cluster.by_id.items()
+               if key in peer.server.store}
+    # the client shipped ONE copy; the accepting peer pushed the rest
+    # to the other ring owners itself, primary included
+    assert len(holders) >= 2
+    assert c1.directory.placement.primary(key) in holders
+    other = next(pid for pid in cluster.by_id if pid not in holders)
 
     cluster.gossip()
     c2 = client("syncer", dir_kw={"sync_peers": [other]})
     c2.sync_catalog()
     r2 = c2.infer(seg, max_new_tokens=4)
     assert r2.matched_tokens == len(tokens)
-    assert r2.served_by == owner               # fetched from the owner
+    assert r2.served_by in holders             # fetched from a holder
     assert r2.output_tokens == r1.output_tokens
 
 
@@ -321,6 +325,220 @@ def test_hot_key_tracker_decay_cools_keys():
 
 
 # ---------------------------------------------------------------------------
+# peer-side push replication, hinted handoff, and ring repair
+# ---------------------------------------------------------------------------
+
+def _digest_with_primary(placement, pid: str, tag: bytes = b"k") -> bytes:
+    """A deterministic digest whose consistent-hash primary is ``pid``."""
+    import hashlib
+    for i in range(10_000):
+        d = hashlib.blake2b(tag + b"%d" % i, digest_size=32).digest()
+        if placement.primary(d) == pid:
+            return d
+    raise AssertionError(f"no digest maps to {pid!r}")
+
+
+def test_put_fans_out_peer_to_peer_one_client_copy():
+    cluster = CacheCluster([(21e6, 0.003)] * 3)
+    d = cluster.directory(clock=SimClock())
+    digest, blob = b"\x5a" * 32, b"x" * 1000
+    assert d.upload(digest, blob) == len(blob)   # ONE client copy
+    owners = cluster.peers[0].replication.owners(digest)
+    assert len(owners) == 2                      # repl_factor default
+    for pid in owners:                           # peer pushed the rest
+        assert digest in cluster.by_id[pid].server.store
+    # client-side accounting: exactly one blob's worth of upload bytes
+    assert sum(ln.stats.bytes_up for ln in d.links.values()) == len(blob)
+    assert cluster.p2p_bytes() == len(blob) * (len(owners) - 1)
+
+
+def test_hinted_handoff_repairs_misplacement_and_drops_leak():
+    """The write-path misplacement bug at its root: every owner of a
+    key is dead, the client's single PUT falls to a non-owner, and —
+    once the owners revive — the non-owner hands the blob off to the
+    true primary, fills the other owner, and drops its own stray copy
+    (the replica leak) in ONE repair round."""
+    cluster = CacheCluster([(21e6, 0.003)] * 3)
+    d = cluster.directory(clock=SimClock())
+    order = d.placement.ring_order(b"\x11" * 32)
+    primary, second, third = order
+    cluster.kill(primary)
+    cluster.kill(second)
+    digest, blob = b"\x11" * 32, b"y" * 500
+    assert d.upload(digest, blob) == len(blob)   # lands on the non-owner
+    assert digest in cluster.by_id[third].server.store
+    repl = cluster.by_id[third].replication
+    assert repl.pending == 2                     # handoff + repl queued
+    assert cluster.repair_round() == 2           # owners dead: retried
+    cluster.revive(primary)
+    cluster.revive(second)
+    assert cluster.repair_round() == 0           # converged in one round
+    assert digest in cluster.by_id[primary].server.store
+    assert digest in cluster.by_id[second].server.store
+    assert digest not in cluster.by_id[third].server.store  # leak dropped
+    snap = repl.snapshot()
+    assert snap["handoffs"] == 1 and snap["repl_pushed"] == 1
+    assert snap["leaks_repaired"] == 1 and snap["pending"] == 0
+    # a fresh client's primary probe now HITS (no Bloom-FP fallback)
+    d2 = cluster.directory(clock=SimClock())
+    d2.maybe_sync(d2.clock.now())
+    assert primary in d2.lookup(digest)
+
+
+def test_hot_hint_ships_blob_peer_to_peer_not_from_client():
+    cluster = CacheCluster([(30e6, 0.002), (21e6, 0.003), (8e6, 0.008)])
+    d = cluster.directory(clock=SimClock(), hot_threshold=2)
+    digest, blob = b"\x07" * 32, b"z" * 2000
+    d.upload(digest, blob)
+    owners = cluster.peers[0].replication.owners(digest)
+    d.maybe_sync(d.clock.now())                  # catalogs see the owners
+    assert d.note_fetch(digest, blob, owners[0]) is None   # not hot yet
+    target = d.note_fetch(digest, blob, owners[0])         # hot now
+    assert target is not None and target not in owners
+    assert digest in cluster.by_id[target].server.store    # peer pushed
+    assert d.links[target].stats.bytes_up == 0   # client shipped nothing
+    assert d.links[owners[0]].stats.hints == 1   # ...but a tiny hint
+    assert d._replicas[digest] == target
+    assert d.hot.pinned(digest)                  # replica pins its count
+
+
+def test_hot_replication_falls_back_to_client_push_when_unwired():
+    """Peers that never learned the ring (bare serve_peer_tcp, no
+    CacheCluster/supervisor wiring) refuse `hot` hints — the client
+    must then ship the hot copy itself (the pre-peer-push behavior)
+    rather than silently never replicating."""
+    from repro.core import PeerDirectory
+    from repro.core.cluster.peer import CachePeer
+    peers = [CachePeer(f"p{i}") for i in range(3)]
+    d = PeerDirectory(peers, clock=SimClock(), hot_threshold=2)
+    digest, blob = b"\x44" * 32, b"q" * 900
+    d.upload(digest, blob)
+    # unwired: exactly one copy, no peer-side fan-out happened
+    assert sum(digest in p.server.store for p in peers) == 1
+    src = d.placement.ring_order(digest)[0]
+    d.maybe_sync(d.clock.now())
+    d.note_fetch(digest, blob, src)
+    target = d.note_fetch(digest, blob, src)         # hot -> replicate
+    assert target is not None
+    tp = next(p for p in peers if p.peer_id == target)
+    assert digest in tp.server.store                 # replica exists
+    assert d.links[target].stats.bytes_up == len(blob)  # client-shipped
+    assert d.links[src].stats.hints == 0             # hint was refused
+    assert d._replicas[digest] == target
+
+
+def test_budget_rejected_put_acks_stored_false_and_walks_ring():
+    """A peer whose store budget rejects a blob must say so — the
+    client continues down the ring and never registers the phantom
+    catalog entry that would be an instant self-inflicted Bloom FP."""
+    from repro.config import CacheConfig as CC
+    cluster = CacheCluster([(21e6, 0.003)] * 3)
+    d = cluster.directory(clock=SimClock())
+    digest = _digest_with_primary(d.placement, "peer0", b"rej")
+    cluster.by_id["peer0"].server.cfg = CC(max_store_bytes=100)
+    blob = b"b" * 500                            # larger than peer0's budget
+    assert d.upload(digest, blob) == len(blob)   # accepted further down
+    assert digest not in cluster.by_id["peer0"].server.store
+    assert d.links["peer0"].stats.store_rejects == 1
+    assert "peer0" not in d.lookup(digest)       # no phantom entry
+    assert cluster.by_id["peer0"].server.stats["rejects"] >= 1
+    fallback = d.placement.ring_order(digest)[1]
+    assert digest in cluster.by_id[fallback].server.store
+    assert fallback in d.lookup(digest)
+
+
+def test_gc_replicas_transient_failure_keeps_entry_and_retries():
+    """A TransportError during replica GC must keep the tracking entry
+    (retry next pass) — dropping it would leak an untracked replica and
+    let a re-heated key mint a second copy."""
+    cluster = CacheCluster([(30e6, 0.002), (21e6, 0.003), (8e6, 0.008)])
+    d = cluster.directory(clock=SimClock(), hot_threshold=2)
+    digest, blob = b"\x2f" * 32, b"w" * 800
+    d.upload(digest, blob)
+    owners = cluster.peers[0].replication.owners(digest)
+    d.maybe_sync(d.clock.now())
+    d.note_fetch(digest, blob, owners[0])
+    target = d.note_fetch(digest, blob, owners[0])
+    assert target is not None and digest in d._replicas
+
+    d.hot.counts.clear()                         # the key has cooled
+    cluster.kill(target)
+    assert d.gc_replicas() == 0                  # transient failure
+    assert d._replicas.get(digest) == target     # entry kept for retry
+    cluster.revive(target)
+    assert d.gc_replicas() == 1                  # retried and collected
+    assert digest not in d._replicas
+    assert digest not in cluster.by_id[target].server.store
+    assert d.replica_gcs == 1
+
+
+def test_hot_tracker_never_evicts_live_replica_digest():
+    """Regression: a full tracker used to evict the coldest entry even
+    when that digest still had a live replica — the lost count flipped
+    ``is_hot`` false and the next ``gc_replicas`` deleted a genuinely
+    hot replica. Pinned digests must survive any amount of hammering."""
+    from repro.core.cluster import HotKeyTracker
+    pinned = set()
+    t = HotKeyTracker(threshold=3, max_entries=16,
+                      pinned=pinned.__contains__)
+    replica = b"\xaa" * 32
+    pinned.add(replica)
+    t.note(replica)                    # count 1: coldest, first-inserted
+    for i in range(500):               # hammer way past max_entries
+        t.note(b"cold-%027d" % i)
+    assert t.counts[replica] == 1      # survived every eviction sweep
+    assert len(t.counts) <= 16         # bound still holds
+    t.note(replica)
+    t.note(replica)
+    assert t.is_hot(replica)           # count was never lost
+
+
+def test_directory_hammered_tracker_keeps_replica(fabric_world):
+    """Same regression end-to-end: mint a replica, then blow through
+    the tracker's max_entries with other keys — the replica's hotness
+    must survive and gc_replicas must NOT collect it."""
+    gen, engine, make_cluster = fabric_world
+    cluster, client = make_cluster()
+    c = client("c", dir_kw={"hot_threshold": 2, "hot_max_entries": 8})
+    d = c.directory
+    p = gen.prompt("marketing", 0)
+    c.infer(p.segments, max_new_tokens=2)
+    c.sync_catalog()
+    for _ in range(3):
+        assert c.infer(p.segments, max_new_tokens=2).matched_tokens > 0
+    assert d._replicas
+    digest = next(iter(d._replicas))
+    for i in range(64):                # 8x the tracker bound
+        d.hot.note(b"noise-%026d" % i)
+    assert d.hot.is_hot(digest)        # pinned: count survived
+    assert d.gc_replicas() == 0        # still hot -> replica NOT deleted
+    assert digest in d._replicas
+
+
+def test_slow_miss_does_not_pollute_rtt_estimator_or_flip_plan():
+    """One miss whose latency was server-side stall, not wire time,
+    must not inflate the RTT EWMA and reroute the planner away from a
+    healthy link."""
+    cluster = CacheCluster([(30e6, 0.002), (21e6, 0.003)])
+    d = cluster.directory(clock=SimClock())
+    digest = b"\x3c" * 32
+    for pid in cluster.by_id:
+        d.register(pid, digest)
+    nb = 500_000
+    fast = d.est_fetch_s("peer0", nb)
+    assert fast < d.est_fetch_s("peer1", nb)     # peer0 leads the plan
+    # a 5-second miss on peer0 (GC pause on the peer, not the link)
+    d.record_get("peer0", hit=False, est_s=0.0, actual_s=5.0, nbytes=0)
+    assert d.links["peer0"].stats.miss_outliers == 1
+    assert d.est_fetch_s("peer0", nb) == pytest.approx(fast)
+    assert d.est_fetch_s("peer0", nb) < d.est_fetch_s("peer1", nb)
+    # sane misses still feed the estimator (RTT samples)
+    d.record_get("peer0", hit=False, est_s=0.0, actual_s=0.002, nbytes=0)
+    assert d.links["peer0"].stats.misses == 2
+    assert d.estimator.snapshot("peer0")[2] == 1  # one accepted sample
+
+
+# ---------------------------------------------------------------------------
 # epidemic gossip: random-k rounds converge like the full mesh
 # ---------------------------------------------------------------------------
 
@@ -393,6 +611,17 @@ def test_session_pool_over_cluster(fabric_world):
 # ---------------------------------------------------------------------------
 # eviction tombstones through the sync op
 # ---------------------------------------------------------------------------
+
+def test_put_larger_than_budget_is_rejected_not_silently_dropped():
+    server = CacheServer(CacheConfig(max_store_bytes=250))
+    v, stored = server.put(b"g" * 32, b"x" * 1000)   # > whole budget
+    assert not stored and not server.store
+    assert server.stats["rejects"] == 1
+    keys, _ = server.sync(0)
+    assert keys == []                  # never entered the catalog log
+    resp = server.handle("put", {"key": b"k" * 32, "blob": b"y" * 100})
+    assert resp["ok"] and resp["stored"]             # normal puts ack
+
 
 def test_eviction_tombstones_exposed_via_sync():
     server = CacheServer(CacheConfig(max_store_bytes=250))
