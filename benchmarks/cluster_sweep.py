@@ -74,14 +74,15 @@ def run_fabric(engine, w, prompts, ccfg, max_new: int, links,
                kill_at: int = -1, kill_peer: str = "",
                adaptive: bool = True, gossip_fanout=None,
                congest_at: int = -1, congest_peer: str = "",
-               congest_bw: float = 1e6):
+               congest_bw: float = 1e6, overlap: bool = False):
     cluster = CacheCluster(links, ccfg)
     # replicate on first fetch: at most one GET per key ever pays a slow
     # link, then the planner routes over the fastest replica (the store
     # budget is charged identically to the single-server baseline)
     d = cluster.directory(clock=SimClock(), hot_threshold=1,
                           adaptive=adaptive)
-    c = EdgeClient("fabric", engine, d, ccfg, perf=w.perf, perf_cfg=w.cfg)
+    c = EdgeClient("fabric", engine, d, ccfg, perf=w.perf, perf_cfg=w.cfg,
+                   overlap=overlap)
     results = []
     for i, p in enumerate(prompts):
         cluster.gossip(fanout=gossip_fanout)
@@ -217,6 +218,50 @@ def main():
         f"post_ttft_adaptive={t_adapt_post:.3f}s;"
         f"est_bw_peer0={p0.est_bw_bps / 1e6:.1f}Mb/s;"
         f"obs_peer0={p0.link_observations};tokens_identical=True"))
+
+    # overlap drill: a partial-hit-heavy workload (one domain, distinct
+    # questions — every prompt after the first shares the
+    # instruction+examples prefix) through the layer-streamed client
+    # (v3 chunk pipeline) vs the blocking one. The streamed client's
+    # chunks arrive through real get_chunks streams, the suffix prefill
+    # pipelines against them, and the hidden transfer time comes off
+    # the TTFT path — tokens identical throughout.
+    name, setting, links, skew = sweep[0]
+    w, engine = world_engine(setting)
+    ov_prompts = [w.gen.prompt(domains[0], q).segments
+                  for q in range(min(n_prompts, 16))]
+    ccfg_peer = CacheConfig(max_store_bytes=budget_total // len(links))
+    off, _ = run_single(engine, w, ov_prompts,
+                        CacheConfig(max_store_bytes=budget_total),
+                        max_new, cache=False)
+    plain, _, _ = run_fabric(engine, w, ov_prompts, ccfg_peer, max_new,
+                             links, overlap=False)
+    stream, _, d_ov = run_fabric(engine, w, ov_prompts, ccfg_peer,
+                                 max_new, links, overlap=True)
+    outs = [r.output_tokens for r in off]
+    assert [r.output_tokens for r in plain] == outs, \
+        "overlap drill: blocking-client outputs diverged"
+    assert [r.output_tokens for r in stream] == outs, \
+        "overlap drill: streamed-client outputs diverged"
+    hidden = sum(r.extra.get("overlap_hidden_s", 0.0) for r in stream)
+    chunks = sum(int(r.extra.get("chunks_down", 0)) for r in stream)
+    partials = sum(0 < r.matched_tokens < r.prompt_tokens
+                   for r in stream)
+    assert partials > 0 and chunks > 0 and hidden > 0, \
+        "overlap drill: no layer-streamed partial hits happened"
+    t_plain, t_stream = mean_ttft(plain), mean_ttft(stream)
+    assert t_stream < t_plain, (
+        f"streamed TTFT {t_stream:.3f}s did not beat blocking "
+        f"{t_plain:.3f}s")
+    peer_hidden = sum(st.overlap_hidden_s
+                      for st in d_ov.peer_stats().values())
+    lines.append(csv_line(
+        "cluster_overlap_drill", t_stream * 1e6,
+        f"partial_hits={partials}/{len(ov_prompts)};"
+        f"ttft_blocking={t_plain:.3f}s;ttft_streamed={t_stream:.3f}s;"
+        f"streamed_vs_blocking={100 * (1 - t_stream / t_plain):.1f}%;"
+        f"hidden_s={hidden:.3f};chunks={chunks};"
+        f"peer_hidden_s={peer_hidden:.3f};tokens_identical=True"))
 
     # fault drill: kill the fastest peer halfway through the skewed run,
     # right after a catalog sync — the next GET discovers the death

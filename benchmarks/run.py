@@ -20,6 +20,7 @@ MODULES = [
     "benchmarks.quantized_blobs",      # beyond-paper: int8 KV blobs
     "benchmarks.range_stride",         # beyond-paper: dense range regs
     "benchmarks.workload_sim",         # full 6434-prompt workload (§5.1)
+    "benchmarks.blob_pipeline",        # v3 chunk pipeline: overlap + 1-pass
     "benchmarks.cluster_sweep",        # multi-peer fabric vs single box
     "benchmarks.gossip_convergence",   # epidemic fanout vs full mesh, N=16
     "benchmarks.engine_micro",         # substrate microbenchmarks

@@ -251,6 +251,11 @@ class CacheConfig:
     # installed and falls back to stdlib zlib otherwise
     compress_codec: str = "auto"
     quantize: bool = False            # int8 KV blobs (beyond-paper)
+    # v3 chunked blobs: layers per stream chunk (smaller = finer
+    # download/compute pipelining, more per-chunk framing+codec
+    # overhead). Uploads always write chunked containers; v2 blobs
+    # remain readable.
+    chunk_layers: int = 1
     max_ranges: int = 4               # prompt ranges registered per upload
     range_stride: int = 0             # >0: also register every k tokens
     min_match_tokens: int = 4         # minimum prefix worth fetching

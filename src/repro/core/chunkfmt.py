@@ -1,0 +1,54 @@
+"""v3 chunked state-blob *container* format (transport-side, JAX-free).
+
+A v3 blob is a sequence of independent chunks: one header chunk
+(manifest + integrity digests) followed by per-layer-group data chunks.
+At rest — in a :class:`~repro.core.server.CacheServer` store, on a
+``put``/``get`` wire frame — the sequence travels as one opaque
+*container* so every blob-agnostic layer (stores, replication pushes,
+brokers) keeps working unchanged::
+
+    +-------+----------------------------------------+
+    | b"PC3"| msgpack [header, chunk_1, ... chunk_K] |
+    +-------+----------------------------------------+
+
+This module deliberately imports nothing heavy: the peer daemon
+(``repro.core.net.daemon``) splits containers for the streaming
+``get_chunks`` op and must stay free of JAX/numpy imports. The chunk
+*contents* (leaf manifests, compression, quantization) are owned by
+:mod:`repro.core.state_io`.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import msgpack
+
+CHUNK_MAGIC = b"PC3"
+
+
+def is_chunked(blob: bytes) -> bool:
+    """True if ``blob`` is a v3 chunked container (vs a v2 single-frame
+    blob, whose first 3 bytes are a codec tag: ZST/ZLB/RAW)."""
+    return bytes(blob[:3]) == CHUNK_MAGIC
+
+
+def pack_container(chunks: Sequence[bytes]) -> bytes:
+    """One storable/shippable blob from a chunk sequence."""
+    return CHUNK_MAGIC + msgpack.packb(
+        [bytes(c) if isinstance(c, memoryview) else c for c in chunks],
+        use_bin_type=True)
+
+
+def split_container(blob: bytes) -> List[bytes]:
+    """The chunk sequence back out of a container. A v2 blob is its own
+    single chunk — the streaming ``get_chunks`` op serves old blobs as
+    a one-chunk stream, which is the mixed-version-fleet compat path."""
+    if not is_chunked(blob):
+        return [bytes(blob)]
+    try:
+        chunks = msgpack.unpackb(bytes(blob[3:]), raw=False)
+    except Exception as e:
+        raise ValueError(f"corrupt chunk container: {e!r}") from e
+    if not isinstance(chunks, list) or not chunks:
+        raise ValueError("corrupt chunk container: empty/non-list body")
+    return [bytes(c) for c in chunks]

@@ -25,6 +25,8 @@ Both a *wall* breakdown (real times in this process) and a *sim* breakdown
 """
 from __future__ import annotations
 
+import queue
+import threading
 import time
 from typing import Callable, List, Optional
 
@@ -38,7 +40,7 @@ from repro.core.keys import PromptKey, model_meta
 from repro.core.metrics import Breakdown, InferResult
 from repro.core.perfmodel import DevicePerfModel
 from repro.core.segments import PromptSegments
-from repro.core import state_io
+from repro.core import sizing, state_io
 from repro.core.transport import TransportError
 from repro.serving.engine import InferenceEngine
 from repro.serving.sampler import greedy
@@ -71,13 +73,17 @@ class EdgeClient:
             dtype_bytes = 2 if emulated else \
                 np.dtype(engine.cache_dtype).itemsize
             self.planner = FetchPlanner(self.directory, self.perf_cfg,
-                                        perf, dtype_bytes=dtype_bytes)
+                                        perf, dtype_bytes=dtype_bytes,
+                                        overlap=overlap,
+                                        chunk_layers=cache_cfg.chunk_layers)
         else:
             self.planner = None
         # cross-session fetch dedup + shared blob adoption (SessionPool)
         self.broker = broker
-        # model the blob transfer as layer-streamed so the partial-hit
-        # suffix prefill overlaps the download (sim accounting only)
+        # layer-streamed partial hits: fetch the blob as v3 chunks
+        # (``get_chunks``) and run the suffix prefill one layer group
+        # at a time as they land — real wall-clock download/compute
+        # pipelining, plus the matching sim-accounting overlap
         self.overlap = overlap
         self.meta = model_meta(engine.model.cfg,
                                np.dtype(engine.cache_dtype).name
@@ -140,12 +146,24 @@ class EdgeClient:
         state, shared, hit_dl_sim, extra_overlap = None, False, 0.0, 0.0
         served_by, est_fetch, actual_fetch, n_attempts, dead = \
             "", 0.0, 0.0, 0, 0
+        streamed, chunks_down = None, 0
         emulated = self.perf_cfg is not self.engine.model.cfg
         for att in plan:                # best estimated total time first
             cand = att.key
             n_attempts += 1
-            resp, dt, nb, was_shared, template = self._fetch(
-                cand, att.peer_id)
+            fetched = None
+            if self.overlap and cand.n_tokens < n \
+                    and self.engine.supports_layer_stream:
+                fetched = self._fetch_streamed(att, prompt)
+            if fetched is None:
+                fetched = self._fetch(cand, att.peer_id)
+            resp, dt, nb, was_shared, template = fetched
+            chunks_down += int(resp.get("_chunks", 0) or 0)
+            # on a streamed wall-link hit, dt is the transfer-VISIBLE
+            # time (wall minus overlapped compute) — right for the TTFT
+            # breakdown, wrong as a bandwidth sample. The estimator and
+            # the est-vs-actual stats must see the true transfer time.
+            transfer_s = (resp.get("_streamed") or {}).get("transfer")
             net = self._link_net(att.peer_id)
             # a link with a SimNetwork behind it charges modeled time;
             # a real TCP link (net is None) charges measured wall time
@@ -158,11 +176,10 @@ class EdgeClient:
                 elif resp.get("dead"):
                     dl = net.rtt_s   # connection refused: one fast-fail
                 elif emulated:
-                    from repro.core.sizing import state_bytes
                     # only the full-prompt range's blob carries logits
-                    nb_full = state_bytes(cfg, cand.n_tokens,
-                                          with_logits=hit and
-                                          cand.n_tokens == n)
+                    nb_full = sizing.state_bytes(cfg, cand.n_tokens,
+                                                 with_logits=hit and
+                                                 cand.n_tokens == n)
                     if hit:
                         basis_bytes = nb_full
                     dl = net.transfer_time(nb_full if hit else 256)
@@ -172,7 +189,7 @@ class EdgeClient:
                 actual_cost = dl
             else:
                 wall.redis += dt
-                actual_cost = dt
+                actual_cost = transfer_s if transfer_s is not None else dt
             if resp.get("dead"):
                 # peer unreachable (already marked suspect) — fall to the
                 # next attempt, then to local prefill; never a hang
@@ -194,13 +211,20 @@ class EdgeClient:
                 shared = was_shared
                 hit_dl_sim = dl
                 down_bytes = 0 if was_shared else len(blob)
-                payload = state_io.parse_state(blob, self.meta)
-                if template is None:
-                    template = self.engine.new_cache()
-                cache, n_eff, logits = state_io.restore_state(payload,
-                                                              template)
+                if resp.get("_streamed") is not None:
+                    # layer-streamed fetch: restore (and, unless the
+                    # peer held a v2 blob, the suffix prefill too)
+                    # already happened while the chunks were landing
+                    streamed = resp["_streamed"]
+                    state = streamed.get("state")
+                else:
+                    payload = state_io.parse_state(blob, self.meta)
+                    if template is None:
+                        template = self.engine.new_cache()
+                    cache, n_eff, logits = state_io.restore_state(payload,
+                                                                  template)
+                    state = (cache, n_eff, logits)
                 matched = cand.n_tokens
-                state = (cache, n_eff, logits)
                 if att.peer_id is not None:
                     served_by = att.peer_id
                     est_fetch = att.est_fetch_s
@@ -216,29 +240,53 @@ class EdgeClient:
             else:
                 false_pos = True     # catalog said yes, server said no
 
-        # Step 3: prefill (full local / resumed / skipped)
+        # Step 3: prefill (full local / resumed / streamed / skipped)
         if matched == n and state is not None and state[2] is not None:
             cache, n_eff, logits = state
             st = self.engine.adopt(cache, n, logits)
-        elif matched > 0 and state is not None:
-            cache, n_eff, logits = state
-            resume_from = matched if state[2] is not None else matched - 1
-            suffix = np.asarray(prompt.token_ids[resume_from:],
-                                np.int32)[None]
-            st = self.engine.resume({"tokens": suffix}, cache, resume_from)
+        elif matched > 0 and (state is not None or streamed is not None):
+            if streamed is not None and streamed.get("st") is not None:
+                # the suffix prefill already ran, pipelined against the
+                # chunk stream; only charge its compute time
+                st = streamed["st"]
+                resume_from = matched - 1
+            else:
+                cache, n_eff, logits = state
+                resume_from = matched if state[2] is not None \
+                    else matched - 1
+                suffix = np.asarray(prompt.token_ids[resume_from:],
+                                    np.int32)[None]
+                st = self.engine.resume({"tokens": suffix}, cache,
+                                        resume_from)
             wall.p_decode += st.timings["prefill_wall"]
             if self.perf:
                 t_suffix = self.perf.time_prefill(cfg, n - resume_from)
                 sim.p_decode += t_suffix
                 if self.overlap and hit_dl_sim > 0:
-                    # layer-streamed transfer: the blob's leaves arrive
-                    # per layer, so layer l of the suffix prefill can run
-                    # once layers <= l are in — the download and the
-                    # suffix compute pipeline, and only the un-hidden
-                    # remainder of the transfer stays on the TTFT path.
-                    hidden = min(hit_dl_sim, t_suffix)
+                    # layer-streamed transfer: the blob's chunks arrive
+                    # per layer group, so group g of the suffix prefill
+                    # runs once chunks <= g are in — the download and
+                    # the suffix compute pipeline, and only the first
+                    # chunk plus the un-hidden transfer remainder stays
+                    # on the TTFT path.
+                    # chunk count: observed from the real stream, but
+                    # under perf emulation the analytic count of the
+                    # emulated full-size model (its blob has one chunk
+                    # set per layer group, not the reduced model's)
+                    k_chunks = max((streamed or {}).get("chunks", 0) - 1,
+                                   0)
+                    if emulated or not k_chunks:
+                        k_chunks = sizing.stream_chunk_count(
+                            cfg, self.cache_cfg.chunk_layers)
+                    hidden = min(hit_dl_sim * (1.0 - 1.0 / k_chunks)
+                                 if k_chunks > 1 else 0.0, t_suffix)
                     sim.redis -= hidden
                     extra_overlap = hidden
+            if streamed is not None and streamed.get("hidden_wall", 0) > 0 \
+                    and not extra_overlap:
+                extra_overlap = streamed["hidden_wall"]
+            if extra_overlap and served_by and self.directory is not None:
+                self.directory.record_overlap(served_by, extra_overlap)
         else:
             tokens = np.asarray(prompt.token_ids, np.int32)[None]
             st = self.engine.start({"tokens": tokens})
@@ -271,6 +319,8 @@ class EdgeClient:
             fetch_attempts=n_attempts)
         if extra_overlap:
             res.extra["overlap_hidden_s"] = extra_overlap
+        if chunks_down:
+            res.extra["chunks_down"] = float(chunks_down)
         if dead:
             res.extra["dead_peer_failures"] = float(dead)
         return res
@@ -312,26 +362,197 @@ class EdgeClient:
                                  prep=self.engine.new_cache)
 
     # ------------------------------------------------------------------
+    def _fetch_streamed(self, att: FetchAttempt, prompt: PromptSegments):
+        """Layer-streamed partial-hit fetch: GET the blob as v3 chunks
+        and run the suffix prefill one layer group at a time as they
+        land — the download/compute pipelining the sim's ``overlap``
+        accounting models, measured on the wall clock.
+
+        Returns a ``(resp, dt, nb, shared, template)`` tuple shaped
+        like :meth:`_fetch` — so the caller's accounting is identical —
+        or ``None`` when streaming does not apply here (transport can't
+        stream, or another session already leads this transfer through
+        the broker). A hit's ``resp`` additionally carries
+        ``_streamed``: the finished :class:`EngineState` (or, for a
+        peer still holding a v2 single-frame blob, the restored state
+        tuple for the ordinary resume path), the chunk count, and the
+        wall seconds of transfer hidden behind compute. ``dt`` is the
+        transfer-visible time only — the suffix compute is charged to
+        p_decode by the caller, never double-counted. Any corrupt or
+        truncated chunk stream is abandoned with ONE bounded error and
+        reported as a miss, so the caller falls to the next attempt /
+        local prefill; a dead peer reports ``dead`` exactly like
+        :meth:`_fetch`."""
+        cand, peer_id = att.key, att.peer_id
+        if peer_id is not None:
+            tr = self.directory.links[peer_id].transport
+        else:
+            tr = self.transport
+        if not hasattr(tr, "request_stream"):
+            return None
+        broker_key = (peer_id, cand.digest) if peer_id is not None \
+            else cand.digest
+        lead = None
+        if self.broker is not None:
+            lead = self.broker.lead(broker_key)
+            if lead is None:
+                return None            # follower/cached: share via _fetch
+        net = self._link_net(peer_id)
+        sim_link = self.clock is not None and net is not None
+        restorer = state_io.ChunkedRestorer(self.meta)
+        groups_q: "queue.Queue" = queue.Queue()
+        info = {"chunks": 0, "bytes": 0, "dt": 0.0, "nb": 0,
+                "hdr": None, "err": None}
+
+        def on_chunk(chunk, dt, nb):
+            info["chunks"] += 1
+            if peer_id is not None:
+                self.directory.record_chunk(peer_id, nb, dt,
+                                            observe=not sim_link)
+            for gid in restorer.feed(chunk):
+                groups_q.put(gid)
+
+        def pump():
+            try:
+                if peer_id is not None:
+                    hdr, dt, nb = self.directory.request_stream(
+                        peer_id, "get_chunks", {"key": cand.digest},
+                        on_chunk)
+                else:
+                    hdr, dt, nb = tr.request_stream(
+                        "get_chunks", {"key": cand.digest}, on_chunk)
+                info["hdr"], info["dt"], info["nb"] = hdr, dt, nb
+            except TransportError as e:
+                info["err"] = ("dead", e)
+            except (state_io.ChunkError, ValueError) as e:
+                info["err"] = ("corrupt", e)
+            finally:
+                groups_q.put(None)     # always unblock the consumer
+
+        t0 = time.perf_counter()
+        worker = threading.Thread(target=pump, daemon=True)
+        worker.start()
+        # restore-template allocation overlaps the first chunks
+        template = self.engine.new_cache()
+        resume_from = cand.n_tokens - 1   # partial blobs carry no logits
+        suffix = np.asarray(prompt.token_ids[resume_from:],
+                            np.int32)[None]
+
+        class _StreamEnded(Exception):
+            pass
+
+        def groups():
+            while True:
+                gid = groups_q.get()
+                if gid is None:
+                    if restorer.complete and restorer.v2_payload is None:
+                        return         # clean end of stream
+                    raise _StreamEnded()   # miss / v2 blob / abort
+                seg, lo, hi = gid
+                si = int(seg.split("/")[1]) if "/" in seg else 0
+                yield si, lo, hi, restorer.group_tree(gid, template)
+
+        st, state = None, None
+        try:
+            st = self.engine.resume_streamed({"tokens": suffix},
+                                             resume_from, groups())
+        except _StreamEnded:
+            pass                       # miss / v2 blob / aborted stream
+        except (state_io.ChunkError, ValueError, NotImplementedError):
+            st = None                  # manifest/template mismatch
+        worker.join()
+        wall = time.perf_counter() - t0
+
+        try:
+            if st is None and info["err"] is None and restorer.v2_payload \
+                    is not None:
+                # mixed-version fleet: the peer still holds a v2
+                # single-frame blob — restore it whole, resume normally
+                try:
+                    state = restorer.result(template)
+                except (state_io.ChunkError, ValueError):
+                    state = None
+            if st is not None or state is not None:
+                container = state_io.pack_container(restorer.raw_chunks())
+                resp = {"ok": True, "blob": container}
+                if lead is not None:
+                    self.broker.publish(broker_key, dict(resp),
+                                        info["dt"], info["nb"])
+                    lead = None
+                compute = st.timings["prefill_wall"] \
+                    if st is not None else 0.0
+                transfer = info["dt"]
+                if sim_link:
+                    dt_out = transfer      # sim seconds from the link
+                    hidden_wall = 0.0
+                else:
+                    # transfer-visible wall time; the overlap is
+                    # whatever the two phases double-booked
+                    dt_out = max(wall - compute, 0.0)
+                    hidden_wall = max(transfer + compute - wall, 0.0)
+                resp["_streamed"] = {"st": st, "state": state,
+                                     "chunks": info["chunks"],
+                                     "hidden_wall": hidden_wall,
+                                     "compute": compute,
+                                     "transfer": transfer}
+                resp["_chunks"] = info["chunks"]
+                return resp, dt_out, info["nb"], False, template
+            # miss / dead / corrupt: resolve followers, report like
+            # _fetch so the caller walks down the plan — never a hang
+            kind = info["err"][0] if info["err"] else "miss"
+            resp = {"ok": False, "blob": None, "_chunks": info["chunks"]}
+            if kind == "dead":
+                resp["dead"] = True
+                resp["error"] = repr(info["err"][1])
+            elif kind == "corrupt":
+                resp["error"] = repr(info["err"][1])
+            if lead is not None:
+                pub = {k: v for k, v in resp.items() if k != "_chunks"}
+                self.broker.publish(broker_key, pub)
+                lead = None
+            if sim_link:
+                # simulated breakdowns must never absorb wall seconds:
+                # a stream that died before the header reported its sim
+                # cost is charged one modeled fast-fail round trip
+                dt_out = info["dt"] if info["hdr"] is not None \
+                    else net.rtt_s
+            else:
+                dt_out = time.perf_counter() - t0
+            return resp, dt_out, info["nb"], False, template
+        finally:
+            if lead is not None:       # never leave followers hanging
+                self.broker.publish(broker_key, {"ok": False,
+                                                 "error": "stream aborted"})
+
+    # ------------------------------------------------------------------
     def _upload_ranges(self, prompt: PromptSegments,
                        keys: List[PromptKey], st) -> int:
         """Register every prefix range of this prompt (paper Fig. 3).
 
-        Upload is asynchronous in the paper (off the latency path); we
-        track bytes but do not charge request time (advance_clock=False).
-        In fabric mode each range goes to its consistent-hash primary
-        peer (ring fallback on dead peers)."""
+        ONE serialization pass: the longest range is chunked at the
+        range boundaries (``extract_state_ranges``) and every shorter
+        range is a header rewrite over a prefix of the already-encoded
+        chunks — a miss costs one extract, not ``max_ranges`` (the old
+        path re-serialized the whole prefix per range, O(ranges x
+        prefix)). Upload is asynchronous in the paper (off the latency
+        path); we track bytes but do not charge request time
+        (advance_clock=False). In fabric mode each range goes to its
+        consistent-hash primary peer (ring fallback on dead peers)."""
         model = self.engine.model
+        n = len(prompt.token_ids)
+        per_key = {k.digest: model.cache_len(k.n_tokens) for k in keys}
+        chunk_lists = state_io.extract_state_ranges(
+            st.cache, sorted(set(per_key.values())), self.meta,
+            logits=(st.last_logits
+                    if any(k.n_tokens == n for k in keys) else None),
+            compress=self.cache_cfg.compress,
+            level=self.cache_cfg.compress_level,
+            quantize=self.cache_cfg.quantize,
+            codec=self.cache_cfg.compress_codec,
+            chunk_layers=self.cache_cfg.chunk_layers)
         total = 0
         for k in keys:
-            n_eff = model.cache_len(k.n_tokens)
-            logits = (st.last_logits
-                      if k.n_tokens == len(prompt.token_ids) else None)
-            blob = state_io.extract_state(
-                st.cache, n_eff, self.meta, logits=logits,
-                compress=self.cache_cfg.compress,
-                level=self.cache_cfg.compress_level,
-                quantize=self.cache_cfg.quantize,
-                codec=self.cache_cfg.compress_codec)
+            blob = state_io.pack_container(chunk_lists[per_key[k.digest]])
             if self.directory is not None:
                 total += self.directory.upload(k.digest, blob)
                 continue

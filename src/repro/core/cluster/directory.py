@@ -220,6 +220,23 @@ class PeerDirectory:
             self.mark_suspect(peer_id)
             raise
 
+    def request_stream(self, peer_id: str, op: str, payload: dict,
+                       on_chunk, advance_clock: bool = True):
+        """Streamed request (one frame per chunk) to a peer; the same
+        suspect-marking failure contract as :meth:`request`. Raises
+        :class:`TransportError` for dead peers and transports without
+        streaming support."""
+        tr = self.links[peer_id].transport
+        if not hasattr(tr, "request_stream"):
+            raise TransportError(
+                f"peer {peer_id!r} transport does not stream")
+        try:
+            return tr.request_stream(op, payload, on_chunk,
+                                     advance_clock=advance_clock)
+        except TransportError:
+            self.mark_suspect(peer_id)
+            raise
+
     def est_fetch_s(self, peer_id: str, nbytes: int) -> float:
         """Estimated seconds to move ``nbytes`` from ``peer_id`` — what
         the :class:`~repro.core.cluster.FetchPlanner` consumes. Adaptive
@@ -394,6 +411,28 @@ class PeerDirectory:
                 self.estimator.observe(peer_id, 256, actual_s)
             else:
                 st.miss_outliers += 1
+
+    def record_chunk(self, peer_id: str, nbytes: int, seconds: float,
+                     observe: bool = True) -> None:
+        """Account one received stream chunk. ``observe=True`` feeds
+        the chunk as a bandwidth/RTT sample into the link estimator —
+        chunk-level samples converge on a congested link within ONE
+        partial fetch instead of one fetch per EWMA step. Sim links
+        pass ``observe=False``: their single whole-transfer sample
+        already equals the model exactly, and per-chunk byte counts of
+        the *executed* (reduced) blob would corrupt an emulated
+        full-size estimate."""
+        st = self.links[peer_id].stats
+        st.chunks_down += 1
+        if observe and seconds > 0:
+            self.estimator.observe(peer_id, nbytes, seconds)
+
+    def record_overlap(self, peer_id: str, hidden_s: float) -> None:
+        """Transfer seconds hidden behind the layer-streamed suffix
+        prefill on a fetch served by ``peer_id`` (observability for the
+        pipeline's claimed win — aggregated fleet-wide by
+        ``SessionPool.merged_peer_stats``)."""
+        self.links[peer_id].stats.overlap_hidden_s += hidden_s
 
     def peer_stats(self) -> Dict[str, PeerStats]:
         for pid, ln in self.links.items():

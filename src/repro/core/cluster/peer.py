@@ -190,10 +190,11 @@ class PeerTransport(InProcTransport):
         self.peer = peer
         self.peer_id = peer.peer_id
 
-    def request(self, op: str, payload: dict, advance_clock: bool = True):
+    def _serve(self, op: str, payload: dict) -> dict:
+        # one liveness gate for request AND request_stream
         if not self.peer.alive:
             raise TransportError(f"peer {self.peer.peer_id!r} is down")
-        return super().request(op, payload, advance_clock)
+        return super()._serve(op, payload)
 
 
 def gossip_round(peers: Sequence[CachePeer], fanout: Optional[int] = None,

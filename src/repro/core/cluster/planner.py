@@ -31,7 +31,7 @@ from dataclasses import dataclass
 from typing import List, Optional, Sequence
 
 from repro.core.keys import PromptKey
-from repro.core.sizing import state_bytes
+from repro.core.sizing import state_bytes, stream_chunk_count
 
 
 @dataclass(frozen=True)
@@ -51,13 +51,25 @@ class FetchAttempt:
 
 class FetchPlanner:
     def __init__(self, directory, perf_cfg, perf=None,
-                 dtype_bytes: int = 2):
+                 dtype_bytes: int = 2, overlap: bool = False,
+                 chunk_layers: int = 1):
         self.directory = directory
         self.perf_cfg = perf_cfg   # sizing/compute config (may be emulated)
         self.perf = perf           # DevicePerfModel or None
         # bytes/element of the serialized cache states (2 when emulating
         # the paper's bf16 blobs; the engine's real dtype otherwise)
         self.dtype_bytes = dtype_bytes
+        # layer-streamed client (v3 chunk pipeline): price a partial
+        # hit as max(fetch, suffix + first-chunk) instead of
+        # fetch + suffix — the client will hide the suffix prefill
+        # behind the chunked transfer, so a candidate that loses
+        # serially can still win pipelined. This mirrors EdgeClient's
+        # sim overlap accounting exactly, INCLUDING families whose
+        # engine cannot layer-stream yet (encdec): there the sim still
+        # models the overlap (pre-v3 behavior), so pricing must too or
+        # plans and charged TTFTs would disagree.
+        self.overlap = overlap
+        self.chunk_layers = chunk_layers
 
     # ------------------------------------------------------------------
     def plan(self, keys: Sequence[PromptKey], n_tokens: int,
@@ -82,9 +94,18 @@ class FetchPlanner:
             rank = ({pid: i for i, pid
                      in enumerate(placement.ring_order(k.digest))}
                     if placement is not None else {})
+            if self.overlap and suffix_s > 0:
+                kk = stream_chunk_count(cfg, self.chunk_layers)
+
+                def total(est):
+                    # pipelined: compute trails the stream by one chunk
+                    return max(est, suffix_s + est / kk)
+            else:
+                def total(est):
+                    return est + suffix_s
             for pid in pids:
                 est = d.est_fetch_s(pid, nb)
-                attempts.append(FetchAttempt(pid, k, est, est + suffix_s,
+                attempts.append(FetchAttempt(pid, k, est, total(est),
                                              rank.get(pid, 0)))
         if perf is not None:
             local_s = perf.time_prefill(cfg, n_tokens)

@@ -69,6 +69,11 @@ class PeerStats:
     #                                (acked stored:false, never cataloged)
     hints: int = 0                 # tiny `hot` replication hints sent to
     #                                this peer in place of blob uploads
+    chunks_down: int = 0           # v3 stream chunks received from this peer
+    overlap_hidden_s: float = 0.0  # transfer time hidden behind the
+    #                                layer-streamed suffix prefill on
+    #                                fetches served by this peer (sim
+    #                                seconds on sim links, wall on TCP)
     est_fetch_s: float = 0.0       # sum of planner estimates on hits
     actual_fetch_s: float = 0.0    # sum of realized fetch times on hits
     tombstones: int = 0            # stale keys the peer advertised at sync
@@ -151,10 +156,15 @@ class ServingReport:
     # cluster fabric: per-peer hit/miss/bytes and est-vs-actual fetch
     # time (empty outside multi-peer runs)
     per_peer: Dict[str, PeerStats] = field(default_factory=dict)
+    # v3 blob pipeline: total transfer time hidden behind layer-streamed
+    # suffix prefill, and stream chunks consumed, across the batch
+    overlap_hidden_s: float = 0.0
+    chunks_down: int = 0
 
     @classmethod
     def _build(cls, ttfts, lats, queue_waits, total_tokens: int,
-               wall_s: float, per_peer) -> "ServingReport":
+               wall_s: float, per_peer, overlap_hidden_s: float = 0.0,
+               chunks_down: int = 0) -> "ServingReport":
         return cls(
             n_requests=len(ttfts),
             total_output_tokens=total_tokens,
@@ -165,7 +175,9 @@ class ServingReport:
             latency_p50=percentile(lats, 50),
             latency_p99=percentile(lats, 99),
             queue_wait_p50=percentile(queue_waits, 50),
-            per_peer=dict(per_peer or {}))
+            per_peer=dict(per_peer or {}),
+            overlap_hidden_s=overlap_hidden_s,
+            chunks_down=chunks_down)
 
     @classmethod
     def from_requests(cls, reqs: Sequence[RequestStats],
@@ -189,7 +201,13 @@ class ServingReport:
         bds = [(r.sim if sim else r.wall) for r in results]
         return cls._build([b.ttft for b in bds], [b.ttlt for b in bds],
                           [], sum(len(r.output_tokens) for r in results),
-                          wall_s, per_peer)
+                          wall_s, per_peer,
+                          overlap_hidden_s=sum(
+                              r.extra.get("overlap_hidden_s", 0.0)
+                              for r in results),
+                          chunks_down=sum(
+                              int(r.extra.get("chunks_down", 0))
+                              for r in results))
 
     def as_dict(self) -> Dict[str, float]:
         d = dict(self.__dict__)

@@ -46,6 +46,7 @@ from typing import Dict, Tuple
 
 from repro.config import CacheConfig
 from repro.core.cluster.peer import CachePeer
+from repro.core.net.estimator import LinkEstimator
 from repro.core.net.link import TCPPeerLink
 from repro.core.net.server import serve_peer_tcp
 from repro.core.transport import TransportError
@@ -55,10 +56,19 @@ class DaemonHandler:
     """Wraps a peer's ``handle`` with the daemon control ops."""
 
     def __init__(self, peer: CachePeer, stop_event: threading.Event,
-                 repl_factor: int = 2):
+                 repl_factor: int = 2,
+                 state_dir: "str | None" = None):
         self.peer = peer
         self.stop_event = stop_event
         self.repl_factor = repl_factor
+        # peer-to-peer link beliefs (EWMA over gossip pulls and
+        # replication pushes), persisted beside the blob store when a
+        # state dir is configured: a restarted daemon reports learned
+        # bw/RTT (``health`` -> ``links``) instead of the nominal prior
+        self.state_dir = state_dir
+        self.estimator = LinkEstimator()
+        if state_dir:
+            self.estimator.warm_start(self._links_path)
         self.neighbors: Dict[str, Tuple[str, int]] = {}
         # every peer id this daemon has ever been told about: the ring
         # fallback must stay a superset across re-wires, because a
@@ -83,8 +93,21 @@ class DaemonHandler:
             link = TCPPeerLink(peer_id, *addr, timeout=2.0)
             with self._nlock:
                 self._repl_links[peer_id] = link
-        resp, _, _ = link.request(op, payload)
+        resp, dt, nb = link.request(op, payload)
+        self.estimator.observe(peer_id, nb, dt)
         return resp
+
+    @property
+    def _links_path(self) -> str:
+        return os.path.join(self.state_dir,
+                            f"{self.peer.peer_id}-links.json")
+
+    def save_estimator(self) -> None:
+        if self.state_dir:
+            try:
+                self.estimator.save(self._links_path)
+            except OSError:
+                pass               # persistence is best-effort
 
     def handle(self, op: str, payload: dict) -> dict:
         if op == "health":
@@ -93,7 +116,9 @@ class DaemonHandler:
                     "stored_bytes": self.peer.server.stored_bytes,
                     "n_entries": len(self.peer.server.store),
                     "gossip": dict(self.peer.gossip_stats),
-                    "repl": self.peer.replication.snapshot()}
+                    "repl": self.peer.replication.snapshot(),
+                    "links": {pid: list(snap) for pid, snap in
+                              self.estimator.snapshot_all().items()}}
         if op == "set_neighbors":
             with self._nlock:
                 self.neighbors = {
@@ -159,11 +184,14 @@ def gossip_loop(handler: DaemonHandler, interval_s: float, fanout: int,
                     pid, *neighbors[pid], timeout=2.0)
             since, since_r = peer.gossip_cursors(pid)
             try:
-                resp, _, _ = link.request(
+                resp, dt, nb = link.request(
                     "csync", {"since": since, "since_remote": since_r})
             except TransportError:
                 continue
+            # every gossip pull is also a link-quality sample
+            handler.estimator.observe(pid, nb, dt)
             peer.fold_gossip(resp)
+        handler.save_estimator()       # cheap, small, atomic
 
 
 def main(argv=None) -> int:
@@ -177,6 +205,9 @@ def main(argv=None) -> int:
     ap.add_argument("--repl-factor", type=int, default=2,
                     help="ring owners per key (used when set_neighbors "
                          "does not carry its own repl_factor)")
+    ap.add_argument("--state-dir", default=None,
+                    help="directory for persistent daemon state "
+                         "(link-estimator snapshots survive restarts)")
     ap.add_argument("--drain-timeout", type=float, default=5.0)
     args = ap.parse_args(argv)
 
@@ -184,7 +215,8 @@ def main(argv=None) -> int:
     peer = CachePeer(args.peer_id, CacheConfig(
         max_store_bytes=args.max_store_bytes))
     handler = DaemonHandler(peer, stop_event,
-                            repl_factor=args.repl_factor)
+                            repl_factor=args.repl_factor,
+                            state_dir=args.state_dir)
     server = serve_peer_tcp(handler, args.host, args.port,
                             drain_timeout_s=args.drain_timeout)
 
@@ -198,6 +230,7 @@ def main(argv=None) -> int:
     print(f"PEER-READY {args.peer_id} {args.host} {server.port}",
           flush=True)
     stop_event.wait()
+    handler.save_estimator()           # learned links survive restarts
     server.close(graceful=True)        # drain in-flight, then exit
     return 0
 

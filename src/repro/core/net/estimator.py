@@ -23,6 +23,8 @@ in-proc sim fabric and the TCP fabric.
 """
 from __future__ import annotations
 
+import json
+import os
 import threading
 from dataclasses import dataclass
 from typing import Dict, Optional, Tuple
@@ -127,3 +129,54 @@ class LinkEstimator:
             if est is None:
                 return self.default_bw_bps, self.default_rtt_s, 0
             return est.bw_bps, est.rtt_s, est.n_obs
+
+    # ------------------------------------------------------------------
+    # persistence: warm-starting beliefs across process restarts
+    # ------------------------------------------------------------------
+    def snapshot_all(self) -> Dict[str, Tuple[float, float, int]]:
+        with self._lock:
+            return {pid: (e.bw_bps, e.rtt_s, e.n_obs)
+                    for pid, e in self._links.items()}
+
+    def save(self, path: str) -> None:
+        """Serialize every per-peer belief to ``path`` (atomic JSON
+        write). A restarted process warm-starts from this instead of
+        re-learning every link from the nominal prior."""
+        snap = {pid: {"bw_bps": bw, "rtt_s": rtt, "n_obs": n}
+                for pid, (bw, rtt, n) in self.snapshot_all().items()}
+        tmp = path + ".tmp"
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        with open(tmp, "w") as f:
+            json.dump({"version": 1, "links": snap}, f)
+        os.replace(tmp, path)
+
+    def warm_start(self, path: str) -> int:
+        """Fold a saved snapshot in as priors. Only peers WITHOUT an
+        existing estimate are touched — live learned state always wins
+        over a stale file. Missing/corrupt files are a no-op (a cold
+        start, never a crash). Returns the number of links restored."""
+        try:
+            with open(path) as f:
+                snap = json.load(f)
+        except (OSError, ValueError):
+            return 0
+        links = snap.get("links", {})
+        n = 0
+        with self._lock:
+            for pid, ent in links.items():
+                if pid in self._links:
+                    continue
+                try:
+                    self._links[pid] = LinkEstimate(
+                        float(ent["bw_bps"]), float(ent["rtt_s"]),
+                        int(ent.get("n_obs", 0)))
+                    n += 1
+                except (KeyError, TypeError, ValueError):
+                    continue
+        return n
+
+    @classmethod
+    def load(cls, path: str, **kw) -> "LinkEstimator":
+        est = cls(**kw)
+        est.warm_start(path)
+        return est

@@ -17,6 +17,15 @@ socket failures into ``TransportError`` handle it on the same path.
 Sync (blocking socket) and async (asyncio stream) helpers share the
 header so the threaded client transport and the asyncio peer server
 speak byte-identical frames.
+
+**Chunk streams** (wire format v3) ride the same frame protocol: a
+streamed response is a header frame whose payload carries
+``n_chunks``, followed by exactly that many frames of the form
+``{"chunk": <bytes>}`` — one per state-blob chunk, so the client can
+decode/restore chunk *i* while chunk *i+1* is in flight. No new frame
+type exists on the wire; a v1 reader sees ordinary frames, and the
+count in the header (not a sentinel) bounds the stream, so a truncated
+stream is a :class:`FrameError` at the next read, never a hang.
 """
 from __future__ import annotations
 

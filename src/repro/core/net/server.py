@@ -34,7 +34,8 @@ class PeerServer:
     """
 
     def __init__(self, handler, host: str = "127.0.0.1", port: int = 0,
-                 drain_timeout_s: float = 5.0):
+                 drain_timeout_s: float = 5.0,
+                 throttle_bps: Optional[float] = None):
         # ``handler`` is the object whose .handle(op, payload) we serve;
         # a plain callable is accepted too.
         self.handle = handler.handle if hasattr(handler, "handle") \
@@ -42,8 +43,12 @@ class PeerServer:
         self.host = host
         self.port = port               # actual port after start()
         self.drain_timeout_s = drain_timeout_s
+        # outbound pacing for chunk streams only (wall-clock emulation
+        # of a bandwidth-constrained link — the overlap benchmarks'
+        # knob); None = send at socket speed
+        self.throttle_bps = throttle_bps
         self.stats = {"connections": 0, "requests": 0, "frame_errors": 0,
-                      "bytes_in": 0, "bytes_out": 0}
+                      "bytes_in": 0, "bytes_out": 0, "chunks_out": 0}
         self._loop: Optional[asyncio.AbstractEventLoop] = None
         self._server: Optional[asyncio.AbstractServer] = None
         self._thread: Optional[threading.Thread] = None
@@ -112,13 +117,37 @@ class PeerServer:
                 try:
                     self.stats["requests"] += 1
                     op = msg.pop("op", None)
+                    # multi-frame streaming only happens when the CLIENT
+                    # asked for it (request_stream sets "stream"): a
+                    # plain request() reads exactly one frame, and
+                    # surprising it with chunk frames would desync every
+                    # later response on the connection
+                    want_stream = bool(msg.pop("stream", False))
                     try:
                         resp = await loop.run_in_executor(
                             None, self.handle, op, msg)
                     except Exception as e:   # handler bug -> error reply
                         resp = {"ok": False, "error": repr(e)}
-                    self.stats["bytes_out"] += await frames.send_frame_async(
-                        writer, resp)
+                    chunks = resp.pop("chunks", None) \
+                        if (want_stream and isinstance(resp, dict)) \
+                        else None
+                    pace = {"t": loop.time()}   # per-response pacer
+                    if chunks is None:
+                        self.stats["bytes_out"] += \
+                            await self._send(writer, resp, pace)
+                    else:
+                        # streamed response: header frame announcing the
+                        # chunk count, then one frame per chunk —
+                        # download/restore/compute pipeline on the other
+                        # side
+                        resp["n_chunks"] = len(chunks)
+                        self.stats["bytes_out"] += \
+                            await self._send(writer, resp, pace)
+                        for c in chunks:
+                            self.stats["bytes_out"] += \
+                                await self._send(writer, {"chunk": c},
+                                                 pace)
+                            self.stats["chunks_out"] += 1
                 finally:
                     self._inflight -= 1
         except (ConnectionError, asyncio.CancelledError):
@@ -129,6 +158,31 @@ class PeerServer:
                 writer.close()
             except Exception:
                 pass
+
+    async def _send(self, writer: asyncio.StreamWriter, obj,
+                    pace: Optional[dict] = None) -> int:
+        """Send one frame, paced by ``throttle_bps`` when set: each
+        frame goes out once the modeled link has had time to serialize
+        its bytes. ``pace`` carries the response's cumulative release
+        time, so a chunk stream is paced exactly like one big frame —
+        sleep overshoot on chunk i shortens the wait for chunk i+1
+        instead of compounding. This is the constrained-link emulation
+        the overlap drills measure against; unset (the default), frames
+        go out at socket speed."""
+        data = frames.encode_frame(obj)
+        if self.throttle_bps:
+            loop = asyncio.get_event_loop()
+            t0 = pace["t"] if pace is not None else loop.time()
+            due = max(t0, loop.time() - 0.2) \
+                + len(data) * 8.0 / self.throttle_bps
+            if pace is not None:
+                pace["t"] = due
+            delay = due - loop.time()
+            if delay > 0:
+                await asyncio.sleep(delay)
+        writer.write(data)
+        await writer.drain()
+        return len(data)
 
     # ------------------------------------------------------------------
     async def _shutdown(self, graceful: bool) -> None:
@@ -176,11 +230,15 @@ class PeerServer:
 
 
 def serve_peer_tcp(handler, host: str = "127.0.0.1", port: int = 0,
-                   drain_timeout_s: float = 5.0) -> PeerServer:
+                   drain_timeout_s: float = 5.0,
+                   throttle_bps: Optional[float] = None) -> PeerServer:
     """Serve ``handler.handle(op, payload)`` over TCP.
 
     Returns a started :class:`PeerServer`; read ``.port`` for the bound
     port (OS-assigned when ``port=0``), call ``.close()`` (or use it as
     a context manager) to shut down with an in-flight drain.
+    ``throttle_bps`` paces streamed chunk frames (constrained-link
+    emulation for the overlap drills).
     """
-    return PeerServer(handler, host, port, drain_timeout_s).start()
+    return PeerServer(handler, host, port, drain_timeout_s,
+                      throttle_bps=throttle_bps).start()

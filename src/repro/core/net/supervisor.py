@@ -75,16 +75,24 @@ class PeerSupervisor:
                  python: str = sys.executable,
                  start_timeout_s: float = 30.0,
                  request_timeout_s: float = 5.0,
-                 repl_factor: int = 2):
+                 repl_factor: int = 2,
+                 state_dir: Optional[str] = None):
         if not specs:
             raise ValueError("need at least one PeerSpec")
         self.python = python
         self.start_timeout_s = start_timeout_s
         self.request_timeout_s = request_timeout_s
         self.repl_factor = repl_factor
+        # fleet state directory (ROADMAP: estimator persistence).
+        # Daemons persist their gossip-link estimators under it across
+        # restarts, and every client directory minted here warm-starts
+        # its LinkEstimator from <state_dir>/client-links.json instead
+        # of the nominal prior — stop() writes the snapshot back.
+        self.state_dir = state_dir
         self.procs: Dict[str, PeerProc] = {
             s.peer_id: PeerProc(s) for s in specs}
         self._env = dict(os.environ, PYTHONPATH=_src_pythonpath())
+        self._estimators: List = []
 
     @classmethod
     def fleet(cls, n_peers: int, max_store_bytes: int = 0,
@@ -94,6 +102,12 @@ class PeerSupervisor:
         return cls([PeerSpec(f"peer{i}", host=host,
                              max_store_bytes=max_store_bytes)
                     for i in range(n_peers)], **kw)
+
+    @property
+    def _client_links_path(self) -> Optional[str]:
+        if self.state_dir is None:
+            return None
+        return os.path.join(self.state_dir, "client-links.json")
 
     # -- lifecycle -----------------------------------------------------
     def start(self) -> "PeerSupervisor":
@@ -110,6 +124,8 @@ class PeerSupervisor:
                "--max-store-bytes", str(s.max_store_bytes),
                "--gossip-interval", str(s.gossip_interval_s),
                "--gossip-fanout", str(s.gossip_fanout),
+               *(("--state-dir", self.state_dir)
+                 if self.state_dir else ()),
                *s.extra_args]
         pp.proc = subprocess.Popen(
             cmd, env=self._env, stdout=subprocess.PIPE,
@@ -178,11 +194,34 @@ class PeerSupervisor:
 
     def directory(self, clock=None, **kw):
         """Client-side PeerDirectory over TCP links (wall clock: real
-        time drives sync intervals and suspect cooldowns)."""
+        time drives sync intervals and suspect cooldowns). With a
+        ``state_dir``, the directory's LinkEstimator warm-starts from
+        the fleet's saved per-link beliefs — a restarted client plans
+        from learned bw/RTT, not the nominal prior."""
         from repro.core.cluster.directory import PeerDirectory
+        from repro.core.net.estimator import LinkEstimator
         from repro.core.netsim import WallClock
-        return PeerDirectory(self.links(), clock=clock or WallClock(),
-                             **kw)
+        path = self._client_links_path
+        if path is not None:
+            if "estimator" in kw and kw["estimator"] is not None:
+                # caller-shared estimator (e.g. a SessionPool's): fold
+                # the snapshot in as priors — warm_start never clobbers
+                # estimates the caller already learned live
+                kw["estimator"].warm_start(path)
+            else:
+                kw["estimator"] = LinkEstimator.load(path)
+        d = PeerDirectory(self.links(), clock=clock or WallClock(),
+                          **kw)
+        if path is not None:
+            self._estimators.append(d.estimator)
+        return d
+
+    def save_estimators(self) -> None:
+        """Persist the most recent client-side link beliefs beside the
+        fleet state (no-op without ``state_dir``)."""
+        path = self._client_links_path
+        if path is not None and self._estimators:
+            self._estimators[-1].save(path)
 
     def request(self, peer_id: str, op: str, payload: dict,
                 timeout: Optional[float] = None) -> dict:
@@ -256,7 +295,9 @@ class PeerSupervisor:
 
     def stop(self) -> None:
         """Graceful fleet teardown: shutdown op (drains in-flight
-        requests), then SIGTERM, then SIGKILL."""
+        requests), then SIGTERM, then SIGKILL. Client link beliefs are
+        persisted first when a ``state_dir`` is configured."""
+        self.save_estimators()
         for pid, pp in self.procs.items():
             if pp.alive:
                 self.kill(pid, hard=False)

@@ -16,6 +16,7 @@ from typing import List, Optional, Tuple
 
 from repro.config import CacheConfig
 from repro.core.bloom import BloomFilter
+from repro.core.chunkfmt import split_container
 
 
 class CacheServer:
@@ -122,6 +123,20 @@ class CacheServer:
         if op == "get":
             blob = self.get(payload["key"])
             return {"ok": blob is not None, "blob": blob}
+        if op == "get_chunks":
+            # streaming GET (wire format v3): the response's chunks go
+            # out one frame at a time, so the client can restore layer
+            # group i while group i+1 is still on the wire. A stored v2
+            # blob streams as a single chunk (mixed-version compat);
+            # a corrupt container degrades into a miss, never a crash.
+            blob = self.get(payload["key"])
+            if blob is None:
+                return {"ok": False, "chunks": []}
+            try:
+                chunks = split_container(blob)
+            except ValueError as e:
+                return {"ok": False, "chunks": [], "error": repr(e)}
+            return {"ok": True, "chunks": chunks}
         if op == "del":
             return {"ok": self.delete(payload["key"])}
         if op == "sync":

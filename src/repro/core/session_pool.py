@@ -108,6 +108,36 @@ class FetchBroker:
                     self.blob_cache.popitem(last=False)
         return resp, dt, nb, False, prepped
 
+    def lead(self, key):
+        """Claim leadership of ``key`` for an *externally driven*
+        transfer (the layer-streamed fetch path, where the download and
+        the suffix prefill interleave on the caller's threads instead
+        of inside :meth:`fetch`). Returns an in-flight entry the caller
+        MUST resolve via :meth:`publish`, or ``None`` if the blob is
+        already cached or another caller is leading — in which case the
+        caller should go through :meth:`fetch` and share."""
+        with self.lock:
+            if key in self.blob_cache or key in self.inflight:
+                return None
+            entry = self.inflight[key] = _Inflight()
+            self.stats["issued"] += 1
+            return entry
+
+    def publish(self, key, resp: dict, dt: float = 0.0,
+                nb: int = 0) -> None:
+        """Resolve a :meth:`lead` claim: wake every follower with
+        ``resp`` and cache successful blobs, exactly like the leader
+        path of :meth:`fetch`."""
+        with self.lock:
+            entry = self.inflight.pop(key, None)
+            if resp.get("ok") and resp.get("blob"):
+                self.blob_cache[key] = resp
+                while len(self.blob_cache) > self.cache_entries:
+                    self.blob_cache.popitem(last=False)
+        if entry is not None:
+            entry.result = (resp, dt, nb)
+            entry.event.set()
+
     @staticmethod
     def _issue(entry: _Inflight, issue) -> None:
         import time
@@ -192,7 +222,8 @@ class SessionPool:
                 agg = merged.setdefault(pid, PeerStats(pid))
                 for f in ("gets", "hits", "misses", "miss_outliers",
                           "transport_errors", "bytes_down", "bytes_up",
-                          "store_rejects", "hints",
+                          "store_rejects", "hints", "chunks_down",
+                          "overlap_hidden_s",
                           "est_fetch_s", "actual_fetch_s"):
                     setattr(agg, f, getattr(agg, f) + getattr(st, f))
                 # tombstones is a gauge (latest sync'd count), not a

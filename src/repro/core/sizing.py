@@ -48,3 +48,13 @@ def state_bytes(cfg, n_tokens: int, dtype_bytes: int = 2,
         n_eff = min(n_eff, cfg.window)
     return int(state_bytes_per_token(cfg, dtype_bytes) * n_eff
                + state_bytes_const(cfg, dtype_bytes, with_logits))
+
+
+def stream_chunk_count(cfg, chunk_layers: int = 1) -> int:
+    """Data chunks of a layer-streamed (v3) blob: one per layer group.
+
+    The pipelining model behind the planner and the sim overlap
+    accounting: with K chunks, suffix-prefill layer group g can start
+    once chunk g has landed, so only ~1/K of the transfer (the first
+    chunk) is inherently serial with the compute."""
+    return max(1, -(-cfg.n_layers // max(int(chunk_layers), 1)))

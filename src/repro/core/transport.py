@@ -43,17 +43,53 @@ class InProcTransport:
         self.net = net
         self.clock = clock or SimClock()
 
+    def _serve(self, op: str, payload: dict) -> dict:
+        """The in-proc 'wire': subclasses hook liveness checks here so
+        request and request_stream share one failure contract."""
+        return self.server.handle(op, payload)
+
     def request(self, op: str, payload: dict,
                 advance_clock: bool = True) -> Tuple[dict, float, int]:
         from repro.core.net import frames
         req = frames.pack_payload({"op": op, **payload})
-        resp = self.server.handle(op, payload)
+        resp = self._serve(op, payload)
         wire = frames.pack_payload(resp)
         nbytes = len(req) + len(wire)
         dt = self.net.transfer_time(nbytes)
         if advance_clock:
             self.clock.advance(dt)
         return resp, dt, nbytes
+
+    def request_stream(self, op: str, payload: dict, on_chunk,
+                       advance_clock: bool = True
+                       ) -> Tuple[dict, float, int]:
+        """Streamed request: the response's ``chunks`` are delivered one
+        at a time through ``on_chunk(chunk_bytes, sim_dt, nbytes)``.
+        Per-chunk sim time is the link's serialized transfer (RTT is
+        paid once, on the header), so the total matches the equivalent
+        single-frame transfer — only the *arrival pattern* changes,
+        which is exactly what download/compute pipelining consumes.
+        Returns (header_response, total_sim_seconds, total_bytes)."""
+        from repro.core.net import frames
+        req = frames.pack_payload({"op": op, **payload})
+        resp = self._serve(op, payload)
+        chunks = resp.get("chunks") or []
+        header = {k: v for k, v in resp.items() if k != "chunks"}
+        header["n_chunks"] = len(chunks)
+        nbytes = len(req) + len(frames.pack_payload(header))
+        dt = self.net.transfer_time(nbytes)
+        if advance_clock:
+            self.clock.advance(dt)
+        total_dt, total_nb = dt, nbytes
+        for c in chunks:
+            nb = len(c) + 16               # chunk frame overhead
+            cdt = nb * 8.0 / self.net.bandwidth_bps
+            if advance_clock:
+                self.clock.advance(cdt)
+            total_dt += cdt
+            total_nb += nb
+            on_chunk(bytes(c), cdt, nb)
+        return header, total_dt, total_nb
 
 
 class TCPTransport:
@@ -117,6 +153,61 @@ class TCPTransport:
                     f"request {op!r} to {self.addr} failed: {e}") from e
         dt = time.perf_counter() - t0
         return resp, dt, n_up + n_down
+
+    def request_stream(self, op: str, payload: dict, on_chunk,
+                       advance_clock: bool = True
+                       ) -> Tuple[dict, float, int]:
+        """Streamed request over the socket: the server answers with a
+        header frame carrying ``n_chunks`` and then one frame per
+        chunk; each is handed to ``on_chunk(chunk_bytes, wall_dt,
+        wire_bytes)`` as it lands (``wall_dt`` = seconds since the
+        previous frame — a chunk-level bandwidth sample). Any socket,
+        framing, or ``on_chunk`` failure poisons the connection (frames
+        of a half-read stream must never mis-pair with a later request)
+        and surfaces as :class:`TransportError` / the original error.
+        Returns (header_response, total_wall_seconds, total_bytes)."""
+        import time
+
+        from repro.core.net import frames
+        t0 = time.perf_counter()
+        with self.lock:
+            if self.sock is None:
+                self._connect()
+            try:
+                n_up = frames.send_frame(
+                    self.sock, {"op": op, "stream": True, **payload})
+                header, n_down = frames.recv_frame_with_size(self.sock)
+                total = n_up + n_down
+                n_chunks = int(header.get("n_chunks", 0)) \
+                    if isinstance(header, dict) else 0
+                t_prev = time.perf_counter()
+                for i in range(n_chunks):
+                    msg, nb = frames.recv_frame_with_size(self.sock)
+                    now = time.perf_counter()
+                    total += nb
+                    chunk = msg.get("chunk") if isinstance(msg, dict) \
+                        else None
+                    if chunk is None:
+                        raise frames.FrameError(
+                            f"stream frame {i} carries no chunk")
+                    on_chunk(bytes(chunk), now - t_prev, nb)
+                    t_prev = now
+            except (OSError, frames.FrameError) as e:
+                try:
+                    self.sock.close()
+                finally:
+                    self.sock = None
+                raise TransportError(
+                    f"stream {op!r} to {self.addr} failed: {e}") from e
+            except Exception:
+                # on_chunk rejected the stream (e.g. integrity failure):
+                # unread frames make the socket unusable — poison it
+                try:
+                    self.sock.close()
+                finally:
+                    self.sock = None
+                raise
+        return header, time.perf_counter() - t0, total
 
     def close(self):
         with self.lock:

@@ -348,6 +348,46 @@ class Model:
         logits = self._head(p, _pick_last(x, last_index))[:, 0]
         return logits, {"dec": new_cache}
 
+    # -- layer-streamed prefill (chunked state-blob pipeline) ----------
+    # The resume path split into jit-able pieces so the engine can run
+    # layers [lo:hi) of the suffix the moment that layer group's cache
+    # chunk has landed (download/compute pipelining). Equivalent to
+    # ``prefill(..., resume=True)``: scan(f, x, layers[0:L]) ==
+    # scan(f, scan(f, x, layers[0:k]), layers[k:L]).
+
+    @property
+    def supports_layer_stream(self) -> bool:
+        return self.cfg.family != "encdec"
+
+    def prefill_stream_embed(self, p, inputs, start_pos):
+        """Embed the suffix for a streamed resume. Returns
+        (x, positions, eff_start) exactly as the monolithic resume path
+        computes them."""
+        x, positions = self._embed_inputs(p, inputs, start_pos)
+        R = self.cfg.n_meta_tokens
+        if R:
+            positions = positions + R
+        return x, positions, start_pos + R
+
+    def prefill_stream_group(self, p, x, positions, cache_group,
+                             eff_start, *, si: int, lo: int, hi: int):
+        """Run layers [lo:hi) of segment ``si`` on hidden states ``x``
+        against that group's (restored) cache slice. Returns
+        (x', new_cache_group)."""
+        cfg = self.cfg
+        seg = self.segments[si]
+        sp = jax.tree.map(lambda a: a[lo:hi], p["segments"][si])
+        x = self._constrain(x)
+        x, nc, _ = tf.stack_prefill(sp, cfg, seg, x, positions,
+                                    cache_group, eff_start,
+                                    mesh=self.mesh, unroll=self.unroll,
+                                    cfn=self._constrain)
+        return x, nc
+
+    def prefill_stream_head(self, p, x, last_index=None):
+        """Last-token logits [B, V] from the streamed hidden states."""
+        return self._head(p, _pick_last(x, last_index))[:, 0]
+
     def decode_step(self, p, cache, tokens, pos):
         """tokens: [B,1] int32; pos: scalar int (token position, pre-offset).
         Returns (logits [B,V], cache')."""

@@ -56,6 +56,15 @@ class InferenceEngine:
         self._prefill_fn = {}
         self._decode = jax.jit(
             lambda p, c, t, pos: model.decode_step(p, c, t, pos))
+        # layer-streamed resume: jitted pieces, keyed per layer group
+        self._stream_embed = jax.jit(model.prefill_stream_embed) \
+            if model.supports_layer_stream else None
+        self._stream_head = jax.jit(model.prefill_stream_head)
+        self._stream_group = {}
+
+    @property
+    def supports_layer_stream(self) -> bool:
+        return self.model.supports_layer_stream
 
     # ------------------------------------------------------------------
     def new_cache(self):
@@ -99,6 +108,78 @@ class InferenceEngine:
     def adopt(self, cache, n_tokens: int, logits: np.ndarray) -> EngineState:
         """Full hit: adopt a downloaded state with no model execution."""
         return EngineState(cache=cache, pos=n_tokens, last_logits=logits)
+
+    def resume_streamed(self, inputs, n_prefix: int, groups) -> EngineState:
+        """Layer-streamed resume: run the suffix prefill one layer group
+        at a time, as the downloaded cache chunks land.
+
+        ``groups`` yields ``(si, lo, hi, cache_group)`` in compute order
+        (segment-major, ascending layer ranges, jointly covering every
+        layer) — typically a generator blocking on a
+        :class:`~repro.core.state_io.ChunkedRestorer`'s completed
+        groups, so layers [lo:hi) of the suffix execute while the
+        chunks for layers >= hi are still on the wire. Numerically the
+        monolithic resume: scanning layers [0:L) equals scanning [0:k)
+        then [k:L). The returned state's ``timings['prefill_wall']`` is
+        the *compute* time only (transfer stalls excluded), which is
+        what the client charges as p_decode on the wall breakdown."""
+        if not self.supports_layer_stream:
+            raise NotImplementedError(
+                f"layer-streamed resume unsupported for family "
+                f"{self.model.cfg.family!r}")
+        t0 = time.perf_counter()
+        padded, true_n = self._pad_inputs(inputs)
+        if self.model.cfg.window:      # ring caches cannot take padding
+            padded, true_n = inputs, inputs[
+                "embeds" if "embeds" in inputs else "tokens"].shape[1]
+        compute = 0.0
+        tc = time.perf_counter()
+        x, positions, eff_start = self._stream_embed(
+            self.params, padded, n_prefix)
+        jax.block_until_ready(x)
+        compute += time.perf_counter() - tc
+        n_segs = len(self.model.segments)
+        new_segs = [[] for _ in range(n_segs)]
+        next_layer = [0] * n_segs
+        for si, lo, hi, cache_group in groups:
+            if not (0 <= si < n_segs) or lo != next_layer[si]:
+                raise ValueError(
+                    f"stream group (seg {si}, layers {lo}:{hi}) out of "
+                    f"order (expected layer {next_layer[si] if 0 <= si < n_segs else '?'})")
+            tc = time.perf_counter()
+            x, nc = self._group_fn(si, lo, hi)(
+                self.params, x, positions, cache_group, eff_start)
+            jax.block_until_ready(x)
+            compute += time.perf_counter() - tc
+            new_segs[si].append(nc)
+            next_layer[si] = hi
+        for si, seg in enumerate(self.model.segments):
+            if next_layer[si] != seg.n_layers:
+                raise ValueError(
+                    f"stream ended with segment {si} at layer "
+                    f"{next_layer[si]}/{seg.n_layers}")
+        tc = time.perf_counter()
+        logits = self._stream_head(self.params, x, true_n - 1)
+        logits = np.asarray(jax.block_until_ready(logits))
+        compute += time.perf_counter() - tc
+        cache = {"segments": [
+            jax.tree.map(lambda *parts: jnp.concatenate(parts, axis=0),
+                         *parts_list) if len(parts_list) > 1
+            else parts_list[0]
+            for parts_list in new_segs]}
+        st = EngineState(cache=cache, pos=n_prefix + true_n,
+                         last_logits=logits)
+        st.timings["prefill_wall"] = compute
+        st.timings["prefill_tokens"] = true_n
+        st.timings["stream_wall"] = time.perf_counter() - t0
+        return st
+
+    def _group_fn(self, si: int, lo: int, hi: int):
+        key = (si, lo, hi)
+        if key not in self._stream_group:
+            self._stream_group[key] = jax.jit(partial(
+                self.model.prefill_stream_group, si=si, lo=lo, hi=hi))
+        return self._stream_group[key]
 
     def _run_prefill(self, inputs, cache, start_pos, *, resume):
         t0 = time.perf_counter()

@@ -1,0 +1,374 @@
+"""Chunked state-blob pipeline (wire format v3): range-shared single-pass
+serialization, incremental restore, corruption bounds, v2 compat, and the
+layer-streamed client on both fabrics."""
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import make_batch, prefill_inputs
+from repro.config import CacheConfig
+from repro.configs import get_config
+from repro.core import (CacheCluster, CacheServer, EdgeClient, FetchBroker,
+                        SimClock, SimNetwork, state_io)
+from repro.core.keys import model_meta
+from repro.core.net.server import serve_peer_tcp
+from repro.core.transport import InProcTransport, TCPTransport
+from repro.data import MMLUGenerator, WordHashTokenizer
+from repro.models import Model
+from repro.serving.engine import InferenceEngine
+
+
+def _restore_equal(cache_a, cache_b):
+    for a, b in zip(jax.tree_util.tree_leaves(cache_a),
+                    jax.tree_util.tree_leaves(cache_b)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# format: single-pass range sharing, quantization, ring caches, v2 compat
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch,quantize", [
+    ("gemma3-270m", False),
+    ("gemma3-270m", True),          # int8 chunks share prefix slices
+    ("mamba2-780m", False),         # constant-size SSM state leaves
+])
+def test_chunked_ranges_restore_identical_to_v2(arch, quantize):
+    """Every range emitted by the single serialization pass restores
+    byte-identically to a dedicated v2 extract of that range."""
+    cfg = get_config(arch).reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    meta = model_meta(cfg, "float32")
+    batch = make_batch(cfg, B=1, S=24)
+    c = model.init_cache(1, model.cache_len(24))
+    _, c = model.prefill(params, prefill_inputs(cfg, batch), c)
+
+    n_effs = [model.cache_len(n) for n in (8, 16, 24)]
+    state_io.STATS["serialize_passes"] = 0
+    lists = state_io.extract_state_ranges(c, n_effs, meta,
+                                          quantize=quantize)
+    assert state_io.STATS["serialize_passes"] == 1
+    for n_eff in n_effs:
+        v3 = state_io.pack_container(lists[n_eff])
+        v2 = state_io.extract_state(c, n_eff, meta, quantize=quantize)
+        t1 = model.init_cache(1, model.cache_len(24))
+        t2 = model.init_cache(1, model.cache_len(24))
+        c3, ne3, _ = state_io.restore_state(
+            state_io.parse_state(v3, meta), t1)
+        c2, ne2, _ = state_io.restore_state(
+            state_io.parse_state(v2, meta), t2)
+        assert ne3 == ne2 == n_eff
+        _restore_equal(c3, c2)
+
+
+def test_chunked_ring_wrapped_roundtrip():
+    """Quantized + ring-wrapped (sliding window) leaves round-trip
+    chunked: window caches ship whole and land at the right offsets."""
+    cfg = get_config("llama3.2-1b").reduced().replace(window=8)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    meta = model_meta(cfg, "float32")
+    batch = make_batch(cfg, B=1, S=12)   # 12 > window: wrapped ring
+    c = model.init_cache(1, 24)
+    _, c = model.prefill(params, prefill_inputs(cfg, batch), c)
+    for quantize in (False, True):
+        v3 = state_io.pack_container(state_io.extract_state_chunks(
+            c, model.cache_len(12), meta, quantize=quantize))
+        v2 = state_io.extract_state(c, model.cache_len(12), meta,
+                                    quantize=quantize)
+        c3, _, _ = state_io.restore_state(
+            state_io.parse_state(v3, meta), model.init_cache(1, 24))
+        c2, _, _ = state_io.restore_state(
+            state_io.parse_state(v2, meta), model.init_cache(1, 24))
+        _restore_equal(c3, c2)
+
+
+def test_v2_blob_feeds_through_chunked_restorer():
+    """A v2 single-frame blob fed as a 1-chunk stream (what get_chunks
+    serves for old blobs) restores byte-identically to the v2 path."""
+    cfg = get_config("gemma3-270m").reduced()
+    model = Model(cfg)
+    meta = model_meta(cfg, "float32")
+    c = model.init_cache(1, 8)
+    v2 = state_io.extract_state(c, 4, meta)
+    r = state_io.ChunkedRestorer(meta)
+    assert r.feed(v2) == []
+    assert r.complete and r.v2_payload is not None
+    got, n_eff, _ = r.result(model.init_cache(1, 8))
+    ref, n_ref, _ = state_io.restore_state(
+        state_io.parse_state(v2, meta), model.init_cache(1, 8))
+    assert n_eff == n_ref
+    _restore_equal(got, ref)
+
+
+def test_wrong_model_meta_rejected_chunked():
+    cfg = get_config("gemma3-270m").reduced()
+    model = Model(cfg)
+    c = model.init_cache(1, 8)
+    blob = state_io.pack_container(
+        state_io.extract_state_chunks(c, 4, b"model-A"))
+    with pytest.raises(ValueError, match="different model"):
+        state_io.parse_state(blob, b"model-B")
+
+
+# ---------------------------------------------------------------------------
+# corruption: bounded errors, never a hang, never silently wrong
+# ---------------------------------------------------------------------------
+
+def _chunks_for_test():
+    cfg = get_config("gemma3-270m").reduced()
+    model = Model(cfg)
+    meta = model_meta(cfg, "float32")
+    c = model.init_cache(1, 16)
+    return model, meta, state_io.extract_state_chunks(c, 8, meta)
+
+
+def test_corrupt_data_chunk_raises_chunk_error():
+    model, meta, chunks = _chunks_for_test()
+    bad = bytearray(chunks[1])
+    bad[len(bad) // 2] ^= 0xFF              # integrity digest must catch
+    r = state_io.ChunkedRestorer(meta)
+    r.feed(chunks[0])
+    with pytest.raises(state_io.ChunkError):
+        r.feed(bytes(bad))
+
+
+def test_truncated_stream_is_incomplete_not_wrong():
+    model, meta, chunks = _chunks_for_test()
+    r = state_io.ChunkedRestorer(meta)
+    for ch in chunks[:-1]:
+        r.feed(ch)
+    assert not r.complete
+    with pytest.raises(state_io.ChunkError, match="incomplete"):
+        r.result(model.init_cache(1, 16))
+    # truncated chunk (wrong size vs manifest) also raises
+    r2 = state_io.ChunkedRestorer(meta)
+    r2.feed(chunks[0])
+    with pytest.raises(state_io.ChunkError):
+        r2.feed(chunks[1][:-3])
+
+
+def test_garbage_header_raises_chunk_error():
+    _, meta, _ = _chunks_for_test()
+    r = state_io.ChunkedRestorer(meta)
+    with pytest.raises((state_io.ChunkError, ValueError)):
+        r.feed(b"RAW\x01\x02\x03not-msgpack")
+
+
+def test_client_falls_back_to_local_prefill_on_corrupt_stream(tiny_setup):
+    """A peer serving corrupted chunk containers costs one bounded
+    error per attempt; the request completes via local prefill with
+    unchanged tokens — correctness is never affected (paper §3.3)."""
+    cfg, model, params = tiny_setup
+    engine = InferenceEngine(model, params, max_len=512)
+    gen = MMLUGenerator(WordHashTokenizer(cfg.vocab), n_shot=2)
+    server = CacheServer(CacheConfig())
+    clock, net = SimClock(), SimNetwork()
+
+    def client(name, overlap=False):
+        return EdgeClient(name, engine,
+                          InProcTransport(server, net, clock),
+                          CacheConfig(), overlap=overlap)
+
+    p = gen.prompt("virology", 0)
+    ref = client("ref").infer(p.segments, max_new_tokens=4)   # seeds
+    p2 = gen.prompt("virology", 1)
+    off = client("off").infer(p2.segments, max_new_tokens=4,
+                              upload_on_miss=False)
+    # corrupt every stored container mid-chunk
+    for key, blob in list(server.store.items()):
+        chunks = state_io.split_container(blob)
+        bad = bytearray(chunks[-1])
+        bad[len(bad) // 2] ^= 0xFF
+        chunks[-1] = bytes(bad)
+        server.store[key] = state_io.pack_container(chunks)
+    c = client("stream", overlap=True)
+    c.sync_catalog()
+    r = c.infer(p2.segments, max_new_tokens=4, upload_on_miss=False)
+    assert r.matched_tokens == 0            # every attempt degraded
+    assert r.output_tokens == off.output_tokens
+    assert ref.output_tokens is not None
+
+
+# ---------------------------------------------------------------------------
+# upload path: one serialization pass per miss
+# ---------------------------------------------------------------------------
+
+def test_miss_upload_is_one_serialization_pass(tiny_setup):
+    cfg, model, params = tiny_setup
+    engine = InferenceEngine(model, params, max_len=512)
+    gen = MMLUGenerator(WordHashTokenizer(cfg.vocab), n_shot=2)
+    server = CacheServer(CacheConfig())
+    ccfg = CacheConfig(max_ranges=4)
+    c = EdgeClient("up", engine,
+                   InProcTransport(server, SimNetwork(), SimClock()),
+                   ccfg)
+    p = gen.prompt("marketing", 0)
+    n_keys = len(p.segments.keys(c.meta, ccfg.max_ranges))
+    assert n_keys > 1
+    state_io.STATS["serialize_passes"] = 0
+    r = c.infer(p.segments, max_new_tokens=2)
+    assert r.blob_bytes_up > 0
+    assert state_io.STATS["serialize_passes"] == 1, \
+        "a miss upload must serialize the cache exactly once"
+    assert len(server.store) == n_keys      # every range still registered
+
+
+# ---------------------------------------------------------------------------
+# layer-streamed client: in-proc fabric, TCP, mixed-version, dead peers
+# ---------------------------------------------------------------------------
+
+def test_streamed_partial_hit_token_identity_inproc(tiny_setup):
+    cfg, model, params = tiny_setup
+    engine = InferenceEngine(model, params, max_len=512)
+    gen = MMLUGenerator(WordHashTokenizer(cfg.vocab), n_shot=2)
+    server = CacheServer(CacheConfig())
+    clock, net = SimClock(), SimNetwork()
+
+    def client(name, overlap):
+        return EdgeClient(name, engine,
+                          InProcTransport(server, net, clock),
+                          CacheConfig(), overlap=overlap)
+
+    client("seed", False).infer(gen.prompt("nutrition", 0).segments,
+                                max_new_tokens=2)
+    p = gen.prompt("nutrition", 1).segments
+    plain = client("plain", False)
+    plain.sync_catalog()
+    r_plain = plain.infer(p, max_new_tokens=4, upload_on_miss=False)
+    stream = client("stream", True)
+    stream.sync_catalog()
+    r_stream = stream.infer(p, max_new_tokens=4, upload_on_miss=False)
+    assert r_stream.matched_tokens == r_plain.matched_tokens > 0
+    assert r_stream.output_tokens == r_plain.output_tokens
+    assert r_stream.extra.get("chunks_down", 0) > 2
+
+
+def test_streamed_partial_hit_over_tcp(tiny_setup):
+    """Real sockets: the v3 client consumes get_chunks frames and the
+    suffix prefill runs while later chunks are still on the wire."""
+    cfg, model, params = tiny_setup
+    engine = InferenceEngine(model, params, max_len=512)
+    gen = MMLUGenerator(WordHashTokenizer(cfg.vocab), n_shot=2)
+    server = CacheServer(CacheConfig())
+    with serve_peer_tcp(server) as srv:
+        def client(name, overlap):
+            tr = TCPTransport("127.0.0.1", srv.port, timeout=30.0)
+            return EdgeClient(name, engine, tr, CacheConfig(),
+                              overlap=overlap)
+
+        client("seed", False).infer(gen.prompt("anatomy", 0).segments,
+                                    max_new_tokens=2)
+        p = gen.prompt("anatomy", 1).segments
+        plain = client("plain", False)
+        plain.sync_catalog()
+        r_plain = plain.infer(p, max_new_tokens=4, upload_on_miss=False)
+        stream = client("stream", True)
+        stream.sync_catalog()
+        r_stream = stream.infer(p, max_new_tokens=4,
+                                upload_on_miss=False)
+        assert r_stream.matched_tokens == r_plain.matched_tokens > 0
+        assert r_stream.output_tokens == r_plain.output_tokens
+        assert r_stream.extra.get("chunks_down", 0) > 2
+        assert srv.stats["chunks_out"] > 2
+        # a NON-streaming request of the same op must get exactly one
+        # frame (chunks inline) and leave the connection in sync —
+        # multi-frame mode only engages when the client asked for it
+        tr = TCPTransport("127.0.0.1", srv.port, timeout=10.0)
+        key = next(iter(server.store))
+        resp, _, _ = tr.request("get_chunks", {"key": key})
+        assert resp["ok"] and len(resp["chunks"]) > 2
+        assert tr.request("ping", {})[0]["ok"]   # no desync
+        tr.close()
+
+
+def test_mixed_version_fleet_v2_blob_v3_client(tiny_setup):
+    """A peer that still holds v2 single-frame blobs serves a v3
+    streaming client: one-chunk stream, whole-blob restore, identical
+    tokens — the upgrade never strands stored state."""
+    cfg, model, params = tiny_setup
+    engine = InferenceEngine(model, params, max_len=512)
+    gen = MMLUGenerator(WordHashTokenizer(cfg.vocab), n_shot=2)
+    server = CacheServer(CacheConfig())
+    clock, net = SimClock(), SimNetwork()
+
+    def client(name, overlap):
+        return EdgeClient(name, engine,
+                          InProcTransport(server, net, clock),
+                          CacheConfig(), overlap=overlap)
+
+    seed = client("seed", False)
+    seed.infer(gen.prompt("astronomy", 0).segments, max_new_tokens=2)
+    # rewrite every stored blob as v2 (what a pre-upgrade peer holds)
+    for key, blob in list(server.store.items()):
+        payload = state_io.parse_state(blob, seed.meta)
+        cache, n_eff, logits = state_io.restore_state(
+            payload, engine.new_cache())
+        server.store[key] = state_io.extract_state(
+            cache, n_eff, seed.meta, logits=logits)
+    p = gen.prompt("astronomy", 1).segments
+    plain = client("plain", False)
+    plain.sync_catalog()
+    r_plain = plain.infer(p, max_new_tokens=4, upload_on_miss=False)
+    stream = client("stream", True)
+    stream.sync_catalog()
+    r_stream = stream.infer(p, max_new_tokens=4, upload_on_miss=False)
+    assert r_stream.matched_tokens == r_plain.matched_tokens > 0
+    assert r_stream.output_tokens == r_plain.output_tokens
+
+
+def test_streamed_client_on_cluster_with_dead_peer(tiny_setup):
+    """Streaming + fabric + kill: a dead peer's stream fast-fails, the
+    plan falls through, outputs unchanged — never a hang."""
+    cfg, model, params = tiny_setup
+    engine = InferenceEngine(model, params, max_len=512)
+    gen = MMLUGenerator(WordHashTokenizer(cfg.vocab), n_shot=2)
+    prompts = [gen.prompt("virology", q).segments for q in range(3)]
+
+    cluster_off = CacheCluster([(21e6, 0.003)] * 2)
+    c_off = EdgeClient("off", engine,
+                       cluster_off.directory(clock=SimClock()),
+                       cluster_off.cache_cfg)
+    off = [c_off.infer(p, max_new_tokens=3,
+                       upload_on_miss=False).output_tokens
+           for p in prompts]
+
+    cluster = CacheCluster([(21e6, 0.003)] * 2)
+    d = cluster.directory(clock=SimClock())
+    c = EdgeClient("stream", engine, d, cluster.cache_cfg, overlap=True)
+    out = []
+    for i, p in enumerate(prompts):
+        cluster.gossip()
+        d.last_sync_t = -1e18
+        c.sync_catalog()
+        if i == 2:
+            for peer in cluster.peers:
+                cluster.kill(peer.peer_id)   # everything dies
+        out.append(c.infer(p, max_new_tokens=3).output_tokens)
+    assert out == off
+
+
+def test_broker_lead_publish_dedups_streamed_fetch():
+    broker = FetchBroker()
+    entry = broker.lead(b"k")
+    assert entry is not None
+    assert broker.lead(b"k") is None        # second leader denied
+    got = {}
+
+    def follower():
+        got["r"] = broker.fetch(b"k", lambda: (_ for _ in ()).throw(
+            AssertionError("follower must not issue")))
+
+    t = threading.Thread(target=follower)
+    t.start()
+    broker.publish(b"k", {"ok": True, "blob": b"payload"}, 0.1, 7)
+    t.join(5.0)
+    resp, dt, nb, shared, _ = got["r"]
+    assert resp["blob"] == b"payload" and shared
+    # published blobs enter the LRU: later fetches are cache hits
+    resp2, *_ = broker.fetch(b"k", lambda: (_ for _ in ()).throw(
+        AssertionError("cached")))
+    assert resp2["blob"] == b"payload"

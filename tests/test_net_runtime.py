@@ -264,6 +264,95 @@ def test_adaptive_planner_reroutes_off_congested_link(tiny_setup):
             assert leads == {"peer0"}   # static: stale nominal cost wins
 
 
+def test_estimator_persistence_roundtrip(tmp_path):
+    """Snapshots survive a save/load cycle; live learned state always
+    wins over the file; corrupt/missing files are a cold start."""
+    path = str(tmp_path / "links.json")
+    est = LinkEstimator(alpha=0.5)
+    est.seed("a", 40e6, 0.002)
+    nb = 500_000
+    for _ in range(8):
+        est.observe("a", nb, 0.002 + nb * 8 / 4e6)   # congested truth
+    bw_learned = est.snapshot("a")[0]
+    est.save(path)
+
+    est2 = LinkEstimator.load(path)
+    bw2, rtt2, n2 = est2.snapshot("a")
+    assert bw2 == pytest.approx(bw_learned) and n2 == 8
+    # warm_start never clobbers an existing estimate
+    est3 = LinkEstimator()
+    est3.seed("a", 99e6, 0.001)
+    assert est3.warm_start(path) == 0
+    assert est3.snapshot("a")[0] == pytest.approx(99e6)
+    # corrupt file: cold start, not a crash
+    (tmp_path / "bad.json").write_text("{not json")
+    assert LinkEstimator.load(str(tmp_path / "bad.json")) \
+        .snapshot("x")[2] == 0
+
+
+def test_supervisor_directory_warm_starts_planner_costs(tmp_path):
+    """ROADMAP estimator persistence: after a restart, a directory
+    minted by the supervisor prices links from the LEARNED bw/RTT in
+    the state dir, not the nominal prior. (No processes spawned: the
+    directory's links connect lazily.)"""
+    import os
+    state_dir = str(tmp_path)
+    sup = PeerSupervisor.fleet(2, state_dir=state_dir)
+    for pp, port in zip(sup.procs.values(), (50001, 50002)):
+        pp.port = port                 # as if learned from PEER-READY
+    d = sup.directory()
+    # a congestion event observed through real fetches
+    nb = 1_000_000
+    for _ in range(10):
+        d.estimator.observe("peer0", nb, nb * 8 / 2e6)
+    slow_est = d.est_fetch_s("peer0", nb)
+    sup.save_estimators()
+    assert os.path.exists(os.path.join(state_dir, "client-links.json"))
+
+    # "restart": a fresh supervisor + directory over the same state dir
+    sup2 = PeerSupervisor.fleet(2, state_dir=state_dir)
+    for pp, port in zip(sup2.procs.values(), (50001, 50002)):
+        pp.port = port
+    d2 = sup2.directory()
+    warm = d2.est_fetch_s("peer0", nb)
+    assert warm == pytest.approx(slow_est, rel=1e-6), \
+        "restarted planner fell back to the nominal prior"
+    # the SessionPool path passes a shared estimator: the snapshot must
+    # fold into it as priors, not be skipped
+    shared = LinkEstimator()
+    d_shared = sup2.directory(estimator=shared)
+    assert d_shared.est_fetch_s("peer0", nb) == \
+        pytest.approx(slow_est, rel=1e-6)
+    # and a supervisor WITHOUT the state dir starts nominal
+    sup3 = PeerSupervisor.fleet(2)
+    for pp, port in zip(sup3.procs.values(), (50001, 50002)):
+        pp.port = port
+    cold = sup3.directory().est_fetch_s("peer0", nb)
+    assert cold < warm / 5             # learned slow link priced slow
+
+
+def test_daemon_handler_persists_link_estimator(tmp_path):
+    """The daemon side of estimator persistence: a DaemonHandler with a
+    state dir reloads its learned peer-to-peer link beliefs across a
+    restart (what a supervisor-respawned daemon does)."""
+    from repro.core.net.daemon import DaemonHandler
+    peer = CachePeer("p0", CacheConfig())
+    h = DaemonHandler(peer, threading.Event(), state_dir=str(tmp_path))
+    nb = 200_000
+    for _ in range(6):
+        h.estimator.observe("p1", nb, nb * 8 / 3e6)
+    learned = h.estimator.snapshot("p1")
+    h.save_estimator()
+
+    peer2 = CachePeer("p0", CacheConfig())
+    h2 = DaemonHandler(peer2, threading.Event(),
+                       state_dir=str(tmp_path))
+    bw, rtt, n_obs = h2.estimator.snapshot("p1")
+    assert bw == pytest.approx(learned[0]) and n_obs == learned[2]
+    assert h2.handle("health", {})["links"]["p1"][0] == \
+        pytest.approx(learned[0])
+
+
 # ---------------------------------------------------------------------------
 # multiprocess integration: daemons + supervisor (slow)
 # ---------------------------------------------------------------------------
