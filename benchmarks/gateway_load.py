@@ -1,0 +1,267 @@
+"""Gateway load replay: three production mixes over a real TCP fabric.
+
+End-to-end through every layer this repo has: seeded workload
+generators (``repro.workloads``) -> HTTP/SSE against the OpenAI-style
+gateway -> continuous-batching scheduler -> blocking prompt-cache
+resolve/upload against a ``Fabric.tcp`` fleet of real
+``PeerSupervisor`` daemon processes.
+
+Per mix it reports client-observed TTFT/TTLT p50/p95, shed rate,
+cache traffic, and a nominal cost-per-1K-requests (device-hours +
+egress). Two acceptance checks run inline:
+
+* **token identity** — every gateway completion must match a direct
+  in-process ``Scheduler`` run of the same prompt (greedy, same
+  model/params/max_len), cache hits included;
+* **bounded shedding** — a burst against a 1-slot gateway must shed
+  with 429/503 + ``Retry-After`` instead of queueing unboundedly.
+
+Emits ``BENCH_gateway_load.json``. Usage::
+
+    PYTHONPATH=src python -m benchmarks.gateway_load [--quick] [--mix m]
+"""
+from __future__ import annotations
+
+import argparse
+import http.client
+import json
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_line
+from repro.config import CacheConfig
+from repro.configs import get_config
+from repro.core import Fabric
+from repro.data import WordHashTokenizer
+from repro.gateway import Gateway, TenantQuota, protocol
+from repro.models import Model
+from repro.serving import BatchedEngine, Request, Scheduler
+from repro.workloads import MIXES
+
+MAX_LEN = 384
+MAX_NEW = 8
+# nominal fleet economics: edge device $/hr per box, LAN egress $/GB
+DEVICE_USD_PER_HR = 0.12
+EGRESS_USD_PER_GB = 0.02
+
+
+# ---------------------------------------------------------------------------
+# HTTP replay client (stdlib only; SSE readline gives client-side TTFT)
+# ---------------------------------------------------------------------------
+
+def _stream_one(host: str, port: int, wl, out: dict) -> None:
+    t0 = time.perf_counter()
+    try:
+        conn = http.client.HTTPConnection(host, port, timeout=120)
+        conn.request("POST", "/v1/chat/completions",
+                     json.dumps(wl.body(stream=True)),
+                     {"Content-Type": "application/json"})
+        resp = conn.getresponse()
+        out["status"] = resp.status
+        if resp.status != 200:
+            out["retry_after"] = resp.getheader("Retry-After")
+            resp.read()
+            return
+        tokens = []
+        while True:
+            line = resp.readline()
+            if not line:
+                break
+            if not line.startswith(b"data: "):
+                continue
+            payload = line[6:].strip()
+            if payload == b"[DONE]":
+                break
+            chunk = json.loads(payload)
+            choice = chunk["choices"][0]
+            if "token_id" in choice:
+                if not tokens:
+                    out["ttft_s"] = time.perf_counter() - t0
+                tokens.append(choice["token_id"])
+        out["ttlt_s"] = time.perf_counter() - t0
+        out["tokens"] = tokens
+    except Exception as e:            # noqa: BLE001 — record, don't hang
+        out["error"] = repr(e)
+    finally:
+        try:
+            conn.close()
+        except Exception:
+            pass
+
+
+def replay(gw, requests, time_scale: float = 1.0):
+    """Fire each request at its (scaled) arrival offset, concurrently."""
+    results = [dict() for _ in requests]
+    t0 = time.perf_counter()
+
+    def worker(i, wl):
+        delay = wl.arrival_s * time_scale - (time.perf_counter() - t0)
+        if delay > 0:
+            time.sleep(delay)
+        _stream_one(gw.server.host, gw.port, wl, results[i])
+
+    threads = [threading.Thread(target=worker, args=(i, wl), daemon=True)
+               for i, wl in enumerate(requests)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(180)
+    wall = time.perf_counter() - t0
+    return results, wall
+
+
+# ---------------------------------------------------------------------------
+# acceptance: token identity vs a direct in-process scheduler run
+# ---------------------------------------------------------------------------
+
+def direct_tokens(model, params, tok, requests):
+    """Greedy reference completions, no gateway, no cache."""
+    eng = BatchedEngine(model, params, max_len=MAX_LEN, batch_size=2)
+    sched = Scheduler(eng)
+    reqs = []
+    for wl in requests:
+        segs = protocol.tokenize_messages(tok, wl.messages)
+        reqs.append(Request(tokens=np.asarray(segs.token_ids, np.int32),
+                            max_new_tokens=wl.max_new_tokens))
+    sched.run(reqs)
+    return [r.stats.output_tokens for r in reqs]
+
+
+# ---------------------------------------------------------------------------
+# acceptance: bounded shedding under slot exhaustion
+# ---------------------------------------------------------------------------
+
+def shed_drill(model, params, burst: int = 6) -> dict:
+    """Burst a 1-slot gateway (queue_depth=1): extras must shed with
+    429/503 + Retry-After, never queue unboundedly."""
+    gw = Gateway(model, params, fabric=None, batch_size=1,
+                 max_len=MAX_LEN, max_inflight=1, queue_depth=1,
+                 default_quota=TenantQuota(max_concurrent=burst),
+                 model_name="shed-drill").start()
+    try:
+        wls = MIXES["support"](burst, seed=7, rate_per_s=0.0,
+                               max_new_tokens=48)
+        results, wall = replay(gw, wls)
+    finally:
+        gw.stop()
+    statuses = [r.get("status") for r in results]
+    shed = [r for r in results if r.get("status") in (429, 503)]
+    ok = [r for r in results if r.get("status") == 200]
+    assert not any("error" in r for r in results), \
+        f"shed drill had transport errors: {results}"
+    assert all(s in (200, 429, 503) for s in statuses), \
+        f"unexpected statuses under overload: {statuses}"
+    assert shed, "slot exhaustion did not shed any requests"
+    assert all(r.get("retry_after") for r in shed), \
+        "shed responses missing Retry-After"
+    assert ok, "overloaded gateway served nothing at all"
+    return {"burst": burst, "served": len(ok), "shed": len(shed),
+            "statuses": sorted(set(statuses)), "wall_s": wall}
+
+
+# ---------------------------------------------------------------------------
+
+def _pct(vals, q):
+    return float(np.percentile(vals, q)) if vals else 0.0
+
+
+def run_mix(gw, model, params, tok, name: str, n: int, rate: float,
+            seed: int = 0) -> dict:
+    wls = MIXES[name](n, seed=seed, rate_per_s=rate,
+                      max_new_tokens=MAX_NEW)
+    # warmup: one request per distinct prefill bucket, off the clock
+    # (compile stalls would otherwise land in the first TTFTs)
+    seen, warm = set(), []
+    for wl in wls:
+        b = len(protocol.tokenize_messages(tok, wl.messages).token_ids)
+        b = 1 << (b - 1).bit_length()
+        if b not in seen:
+            seen.add(b)
+            warm.append(wl)
+    replay(gw, warm, time_scale=0.0)
+
+    results, wall = replay(gw, wls)
+    errors = [r for r in results if "error" in r or "tokens" not in r]
+    assert not errors, f"{name}: replay failures: {errors[:3]}"
+
+    ref = direct_tokens(model, params, tok, wls)
+    for i, (r, expect) in enumerate(zip(results, ref)):
+        assert r["tokens"] == list(expect), (
+            f"{name}: request {i} diverged from the direct scheduler "
+            f"run: gateway={r['tokens']} direct={list(expect)}")
+
+    ttfts = [r["ttft_s"] for r in results]
+    ttlts = [r["ttlt_s"] for r in results]
+    shed_n = sum(1 for r in results if r.get("status") in (429, 503))
+    fleet = len(gw.engine.fabric.peer_ids()) + 1    # peers + gateway box
+    fstats = dict(gw.engine.fetcher.stats)
+    gb = (fstats["bytes_down"] + fstats["bytes_up"]) / 1e9
+    cost_1k = (wall / 3600 * fleet * DEVICE_USD_PER_HR
+               + gb * EGRESS_USD_PER_GB) / max(n, 1) * 1000
+    return {
+        "n_requests": n, "wall_s": wall,
+        "ttft_p50_s": _pct(ttfts, 50), "ttft_p95_s": _pct(ttfts, 95),
+        "ttlt_p50_s": _pct(ttlts, 50), "ttlt_p95_s": _pct(ttlts, 95),
+        "shed_rate": shed_n / max(n, 1),
+        "cost_per_1k_usd": cost_1k,
+        "cache": fstats,
+        "token_identity": "ok",
+    }
+
+
+def main(quick: bool = False, only_mix: str = ""):
+    cfg = get_config("gemma3-270m").reduced()
+    model = Model(cfg)
+    import jax
+    params = model.init(jax.random.PRNGKey(0))
+    tok = WordHashTokenizer(cfg.vocab)
+
+    n = 6 if quick else 16
+    rate = 12.0
+    report = {"config": {"model": cfg.name, "max_len": MAX_LEN,
+                         "max_new": MAX_NEW, "n_per_mix": n,
+                         "rate_per_s": rate}, "mixes": {}}
+    lines = []
+    mixes = [only_mix] if only_mix else list(MIXES)
+    for name in mixes:
+        # fresh fleet per mix so cache stats and cost are per-mix
+        with Fabric.tcp(n_peers=2, cache_cfg=CacheConfig()) as fabric:
+            gw = Gateway(model, params, fabric=fabric, batch_size=4,
+                         max_len=MAX_LEN, max_inflight=64,
+                         queue_depth=64,
+                         default_quota=TenantQuota(max_concurrent=64),
+                         model_name=f"gateway-{name}").start()
+            try:
+                res = run_mix(gw, model, params, tok, name, n, rate)
+            finally:
+                gw.stop()
+        report["mixes"][name] = res
+        lines.append(csv_line(
+            f"gateway_{name}", res["ttft_p50_s"] * 1e6,
+            f"ttft_p95_ms={res['ttft_p95_s'] * 1e3:.1f};"
+            f"ttlt_p95_ms={res['ttlt_p95_s'] * 1e3:.1f};"
+            f"shed_rate={res['shed_rate']:.2f};"
+            f"hits={res['cache']['hits']}/{res['cache']['resolves']};"
+            f"cost_1k=${res['cost_per_1k_usd']:.4f}"))
+
+    report["shed_drill"] = shed_drill(model, params)
+    lines.append(csv_line(
+        "gateway_shed_drill", report["shed_drill"]["wall_s"] * 1e6,
+        f"served={report['shed_drill']['served']};"
+        f"shed={report['shed_drill']['shed']};"
+        f"statuses={report['shed_drill']['statuses']}"))
+
+    with open("BENCH_gateway_load.json", "w") as f:
+        json.dump(report, f, indent=2)
+    return lines
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="CI smoke sizes")
+    ap.add_argument("--mix", default="", choices=["", *MIXES],
+                    help="run a single mix")
+    args = ap.parse_args()
+    main(quick=args.quick, only_mix=args.mix)

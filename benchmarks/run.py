@@ -25,6 +25,7 @@ MODULES = [
     "benchmarks.gossip_convergence",   # epidemic fanout vs full mesh, N=16
     "benchmarks.engine_micro",         # substrate microbenchmarks
     "benchmarks.serving_throughput",   # continuous batching + sessions
+    "benchmarks.gateway_load",         # HTTP front door: 3 replay mixes
     "benchmarks.roofline_table",       # §Roofline (from dry-run records)
 ]
 

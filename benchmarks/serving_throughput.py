@@ -22,7 +22,7 @@ import numpy as np
 
 from benchmarks.common import csv_line, make_world
 from repro.config import CacheConfig
-from repro.core import SessionPool
+from repro.core import Fabric, SessionPool
 from repro.serving import BatchedEngine, Request, Scheduler
 
 
@@ -64,8 +64,10 @@ def bench_hit_rate_sweep(w, hit_rates, n_requests, max_new, lines):
         seeder = w2.client("seeder")
         for d in domains:
             seeder.infer(w2.gen.prompt(d, 0).segments, max_new_tokens=1)
-        pool = SessionPool(w2.server, seeder.engine, n_sessions=4,
-                           cache_cfg=CacheConfig(), net=w2.net,
+        fabric = Fabric.local(CacheConfig(), net=w2.net,
+                              server=w2.server)
+        pool = SessionPool(engine=seeder.engine, fabric=fabric,
+                           n_sessions=4, cache_cfg=CacheConfig(),
                            perf=w2.perf, perf_cfg=w2.cfg)
         pool.sync_catalogs()
         rng = np.random.default_rng(1)

@@ -26,7 +26,7 @@ import numpy as np
 
 from repro.config import CacheConfig
 from repro.configs import get_config
-from repro.core import CacheCluster, EdgeClient, PeerSupervisor, SimClock
+from repro.core import EdgeClient, Fabric, SimClock
 from repro.core.perfmodel import PI_ZERO_2W
 from repro.data import MMLUGenerator, WordHashTokenizer, MMLU_DOMAINS
 from repro.models import Model
@@ -55,21 +55,21 @@ def main():
 
     ccfg = CacheConfig()
     if args.tcp:
-        sup = PeerSupervisor.fleet(args.peers).start()
-        fabric = sup
+        fabric = Fabric.tcp(n_peers=args.peers, cache_cfg=ccfg).start()
+        sup = fabric.supervisor
         print("fabric (real processes):", ", ".join(
             f"{pid}@{host}:{port} pid={sup.procs[pid].proc.pid}"
             for pid, (host, port) in sup.addresses().items()))
-        mk_dir = lambda: sup.directory(hot_threshold=2)
+        mk_dir = lambda: fabric.directory(hot_threshold=2)
         perf, perf_cfg = None, None          # wall clock is the metric
     else:
-        cluster = CacheCluster(LINKS[:args.peers], ccfg)
-        fabric = cluster
+        fabric = Fabric.sim(LINKS[:args.peers], cache_cfg=ccfg)
+        cluster = fabric.cluster
         print("fabric:", ", ".join(
             f"{p.peer_id}({p.net.bandwidth_bps / 1e6:.0f}Mb/s,"
             f"{p.net.rtt_s * 1e3:.0f}ms)" for p in cluster.peers))
-        mk_dir = lambda: cluster.directory(clock=SimClock(),
-                                           hot_threshold=2)
+        mk_dir = lambda: fabric.directory(clock=SimClock(),
+                                          hot_threshold=2)
         perf, perf_cfg = PI_ZERO_2W, full_cfg
 
     clients = [EdgeClient(f"edge-{i}", engine, mk_dir(), ccfg,
@@ -82,19 +82,19 @@ def main():
     for i in range(args.prompts):
         if i == kill_at:
             if args.tcp:
-                victim = next(iter(sup.procs))
-                sup.kill(victim, hard=True)       # a real kill -9
-                print(f"--- kill -9 {victim} "
-                      f"(pid {sup.procs[victim].proc.pid}) ---")
+                victim = fabric.peer_ids()[0]
+                pid_no = sup.procs[victim].proc.pid
+                fabric.kill(victim, hard=True)    # a real kill -9
+                print(f"--- kill -9 {victim} (pid {pid_no}) ---")
             else:
                 victim = max(cluster.peers,
                              key=lambda p: p.net.bandwidth_bps).peer_id
-                cluster.kill(victim)
+                fabric.kill(victim)
                 print(f"--- killed {victim} ---")
         p = gen.prompt(MMLU_DOMAINS[i % 2], int(rng.integers(3)))
         c = clients[int(rng.integers(len(clients)))]
-        if not args.tcp:
-            cluster.gossip()          # peers exchange key-log deltas
+        fabric.gossip()               # sim: peers exchange key-log
+        # deltas (the TCP daemons gossip on their own)
         c.directory.last_sync_t = -1e18
         c.sync_catalog()              # client refreshes per-peer catalogs
         r = c.infer(p.segments, max_new_tokens=6)
@@ -132,7 +132,7 @@ def main():
     print("replications (hot keys -> fastest link):",
           sum(c.directory.replications for c in clients))
     if args.tcp:
-        print("fleet health:", fabric.health())
+        print("fleet health:", fabric.supervisor.health())
         fabric.stop()
         print("fleet stopped (graceful drain)")
     else:

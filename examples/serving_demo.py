@@ -18,9 +18,7 @@ import numpy as np
 
 from repro.config import CacheConfig
 from repro.configs import get_config
-from repro.core import CacheServer, EdgeClient, SessionPool, SimClock, \
-    SimNetwork
-from repro.core.transport import InProcTransport
+from repro.core import EdgeClient, Fabric, SessionPool
 from repro.data import MMLUGenerator, WordHashTokenizer
 from repro.models import Model
 from repro.serving import BatchedEngine, Request, Scheduler
@@ -58,17 +56,17 @@ for i, p in enumerate(prompts):
 print("batched outputs token-identical to sequential runs")
 
 # --- part 2: concurrent cache-sharing sessions --------------------------
-server = CacheServer(CacheConfig())
+fabric = Fabric.local(CacheConfig())
+server = fabric.server
 share_engine = InferenceEngine(model, params, max_len=512)
 tokzr = WordHashTokenizer(cfg.vocab)
 gen = MMLUGenerator(tokzr, n_shot=2)
 
-seeder = EdgeClient("seeder", share_engine,
-                    InProcTransport(server, SimNetwork(), SimClock()))
+seeder = EdgeClient("seeder", share_engine, fabric.directory())
 p0 = gen.prompt("astronomy", 0)
 seeder.infer(p0.segments, max_new_tokens=2)      # miss -> upload prefix
 
-pool = SessionPool(server, share_engine, n_sessions=3)
+pool = SessionPool(engine=share_engine, fabric=fabric, n_sessions=3)
 pool.sync_catalogs()
 gets0 = server.handle("stats", {})["stats"]["gets"]
 results = pool.run([gen.prompt("astronomy", q).segments

@@ -2,7 +2,8 @@
 
 Public API:
     BloomFilter, Catalog, PromptKey, PromptSegments,
-    CacheServer, EdgeClient, SimNetwork, SimClock, WallClock,
+    CacheServer, EdgeClient, FetchPolicy, Fabric,
+    SimNetwork, SimClock, WallClock,
     DevicePerfModel, SessionPool, FetchBroker, TransportError,
     CacheCluster, CachePeer, PeerDirectory, FetchPlanner, PlacementPolicy,
     LinkEstimator, TCPPeerLink, PeerSupervisor, serve_peer_tcp
@@ -14,6 +15,8 @@ from repro.core.segments import PromptSegments  # noqa: F401
 from repro.core.netsim import SimClock, SimNetwork, WallClock  # noqa: F401
 from repro.core.server import CacheServer  # noqa: F401
 from repro.core.transport import TransportError  # noqa: F401
+from repro.core.fabric import Fabric  # noqa: F401
+from repro.core.fetch_policy import FetchPolicy  # noqa: F401
 from repro.core.client import EdgeClient  # noqa: F401
 from repro.core.perfmodel import DevicePerfModel  # noqa: F401
 from repro.core.session_pool import FetchBroker, SessionPool  # noqa: F401

@@ -36,6 +36,7 @@ from repro.config import CacheConfig
 from repro.core.catalog import Catalog
 from repro.core.cluster.directory import PeerDirectory
 from repro.core.cluster.planner import FetchAttempt, FetchPlanner
+from repro.core.fetch_policy import FetchPolicy
 from repro.core.keys import PromptKey, model_meta
 from repro.core.metrics import Breakdown, InferResult
 from repro.core.perfmodel import DevicePerfModel
@@ -52,17 +53,28 @@ class EdgeClient:
                  perf: Optional[DevicePerfModel] = None,
                  catalog: Optional[Catalog] = None,
                  use_catalog: bool = True, perf_cfg=None,
-                 broker=None, overlap: bool = False):
+                 broker=None, overlap: bool = False,
+                 policy: Optional[FetchPolicy] = None):
         self.name = name
         self.engine = engine
         self.transport = transport
         self.cache_cfg = cache_cfg
         self.perf = perf
+        # one validated knob-set for the fetch path; the legacy
+        # ``overlap``/``use_catalog`` flags fold into it (passing both a
+        # policy AND non-default legacy flags is ambiguous — refuse)
+        if policy is None:
+            policy = FetchPolicy(overlap=overlap, use_catalog=use_catalog)
+        elif overlap or not use_catalog:
+            raise ValueError(
+                "pass either policy=FetchPolicy(...) or the legacy "
+                "overlap=/use_catalog= flags, not both")
+        self.policy = policy
         # emulate a FULL-SIZE model's timing/blob-size while executing a
         # reduced model (benchmarks): sim times & transfer bytes use this
         self.perf_cfg = perf_cfg or engine.model.cfg
         self.catalog = catalog or Catalog(cache_cfg)
-        self.use_catalog = use_catalog
+        self.use_catalog = policy.use_catalog
         # multi-peer fabric: a PeerDirectory holds per-peer catalogs and
         # links; fetches go through a link-aware planner instead of the
         # single master catalog
@@ -74,17 +86,22 @@ class EdgeClient:
                 np.dtype(engine.cache_dtype).itemsize
             self.planner = FetchPlanner(self.directory, self.perf_cfg,
                                         perf, dtype_bytes=dtype_bytes,
-                                        overlap=overlap,
+                                        overlap=policy.overlap,
                                         chunk_layers=cache_cfg.chunk_layers)
         else:
             self.planner = None
+        # strict-mode capability check: fail HERE, not deep inside
+        # _fetch_streamed on the first partial hit
+        links = ([ln.transport for ln in self.directory.links.values()]
+                 if self.directory is not None else [transport])
+        policy.validate_for(engine, links)
         # cross-session fetch dedup + shared blob adoption (SessionPool)
         self.broker = broker
         # layer-streamed partial hits: fetch the blob as v3 chunks
         # (``get_chunks``) and run the suffix prefill one layer group
         # at a time as they land — real wall-clock download/compute
         # pipelining, plus the matching sim-accounting overlap
-        self.overlap = overlap
+        self.overlap = policy.overlap
         self.meta = model_meta(engine.model.cfg,
                                np.dtype(engine.cache_dtype).name
                                if not hasattr(engine.cache_dtype, "name")
@@ -106,8 +123,10 @@ class EdgeClient:
     # ------------------------------------------------------------------
     def infer(self, prompt: PromptSegments, max_new_tokens: int = 16,
               sampler: Callable = greedy, rng=None,
-              upload_on_miss: bool = True) -> InferResult:
+              upload_on_miss: Optional[bool] = None) -> InferResult:
         cfg = self.perf_cfg
+        if upload_on_miss is None:
+            upload_on_miss = self.policy.upload_on_miss
         n = len(prompt.token_ids)
         sim, wall = Breakdown(), Breakdown()
         keys = prompt.keys(self.meta, self.cache_cfg.max_ranges,
@@ -121,7 +140,9 @@ class EdgeClient:
         # planner turns the probe results into link-aware (peer, range)
         # attempts; otherwise attempts are the single-server candidates.
         t0 = time.perf_counter()
-        min_match = self.cache_cfg.min_match_tokens
+        min_match = self.cache_cfg.min_match_tokens \
+            if self.policy.min_match_tokens is None \
+            else self.policy.min_match_tokens
         if self.directory is not None:
             plan = self.planner.plan(keys, n, min_match=min_match,
                                      use_catalog=self.use_catalog)
@@ -153,6 +174,7 @@ class EdgeClient:
             n_attempts += 1
             fetched = None
             if self.overlap and cand.n_tokens < n \
+                    and self.policy.transfer != "blocking" \
                     and self.engine.supports_layer_stream:
                 fetched = self._fetch_streamed(att, prompt)
             if fetched is None:

@@ -1,0 +1,189 @@
+"""One front door for standing up the cache fabric.
+
+There were three divergent ways to build the system — an in-process
+:class:`CacheCluster` sim fabric, a :class:`PeerSupervisor` over real
+TCP daemons, and a raw single :class:`CacheServer` behind an
+``InProcTransport`` — each with different kwargs threaded through
+``SessionPool`` and every benchmark. ``Fabric`` collapses them into
+three constructors with one contract:
+
+* ``Fabric.sim(links)``   — in-process peers over simulated links;
+* ``Fabric.tcp(n_peers)`` — real peer daemons over TCP (``start()`` /
+                            ``stop()`` own the process lifecycle, or
+                            use the fabric as a context manager);
+* ``Fabric.local()``      — the paper's single cache box.
+
+``fabric.directory(...)`` mints a fresh client-side view per session —
+a :class:`PeerDirectory` (per-peer catalogs + clock + estimator) on the
+multi-peer fabrics, an :class:`InProcTransport` on the single box; the
+``EdgeClient`` treats both uniformly. Mode-specific handles stay
+reachable at ``.cluster`` / ``.supervisor`` / ``.server``.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+from repro.config import CacheConfig
+from repro.core.netsim import SimClock, SimNetwork
+
+
+class Fabric:
+    """A started (or startable) cache fabric: the directory/estimator/
+    clock bundle behind one uniform ``directory()`` factory."""
+
+    def __init__(self, kind: str, *, cluster=None, supervisor=None,
+                 server=None, net=None,
+                 cache_cfg: CacheConfig = CacheConfig()):
+        if kind not in ("sim", "tcp", "local"):
+            raise ValueError(f"unknown fabric kind {kind!r}")
+        self.kind = kind
+        self.cluster = cluster         # CacheCluster   (kind == "sim")
+        self.supervisor = supervisor   # PeerSupervisor (kind == "tcp")
+        self.server = server           # CacheServer    (kind == "local")
+        self.net = net                 # local mode's simulated link
+        self.cache_cfg = cache_cfg
+        self._started = kind != "tcp"
+
+    # ------------------------------------------------------------------
+    # constructors
+    # ------------------------------------------------------------------
+    @classmethod
+    def sim(cls, links: Optional[Sequence] = None, n_peers: int = 2,
+            cache_cfg: CacheConfig = CacheConfig(),
+            names: Optional[Sequence[str]] = None,
+            repl_factor: int = 2) -> "Fabric":
+        """In-process peer fabric over simulated links. ``links`` is a
+        list of ``SimNetwork`` / ``(bandwidth_bps, rtt_s)`` specs (its
+        length sets the peer count); omitted, ``n_peers`` uniform
+        default links are used."""
+        from repro.core.cluster import CacheCluster
+        if links is None:
+            links = [SimNetwork() for _ in range(n_peers)]
+        cluster = CacheCluster(links, cache_cfg, names=names,
+                               repl_factor=repl_factor)
+        return cls("sim", cluster=cluster, cache_cfg=cache_cfg)
+
+    @classmethod
+    def tcp(cls, n_peers: int = 2, specs: Optional[Sequence] = None,
+            cache_cfg: CacheConfig = CacheConfig(),
+            max_store_bytes: int = 0, host: str = "127.0.0.1",
+            **supervisor_kw) -> "Fabric":
+        """Real peer daemons over TCP. Returns an *unstarted* fabric —
+        call ``start()`` (or enter it as a context manager) to spawn
+        the fleet; ``stop()`` tears it down."""
+        from repro.core.net.supervisor import PeerSupervisor
+        if specs is not None:
+            sup = PeerSupervisor(specs, **supervisor_kw)
+        else:
+            sup = PeerSupervisor.fleet(n_peers, host=host,
+                                       max_store_bytes=max_store_bytes,
+                                       **supervisor_kw)
+        return cls("tcp", supervisor=sup, cache_cfg=cache_cfg)
+
+    @classmethod
+    def local(cls, cache_cfg: CacheConfig = CacheConfig(), net=None,
+              server=None) -> "Fabric":
+        """The paper's single cache box behind a simulated link. Every
+        ``directory()`` call returns a fresh ``InProcTransport`` (own
+        sim clock) over the one shared server and link."""
+        from repro.core.server import CacheServer
+        return cls("local", server=server or CacheServer(cache_cfg),
+                   net=net or SimNetwork(), cache_cfg=cache_cfg)
+
+    # ------------------------------------------------------------------
+    # lifecycle (tcp mode; no-ops elsewhere)
+    # ------------------------------------------------------------------
+    def start(self) -> "Fabric":
+        if self.kind == "tcp" and not self._started:
+            self.supervisor.start()
+            self._started = True
+        return self
+
+    def stop(self) -> None:
+        if self.kind == "tcp" and self._started:
+            self.supervisor.stop()
+            self._started = False
+
+    def __enter__(self) -> "Fabric":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # ------------------------------------------------------------------
+    # the uniform contract
+    # ------------------------------------------------------------------
+    def directory(self, clock=None, **kw):
+        """Mint a fresh client-side view of the fabric. One per session:
+        each carries its own clock and per-peer catalogs (multi-peer
+        modes accept ``estimator=`` to share link beliefs across
+        sessions; the single box has no links to estimate, so those
+        kwargs are accepted and ignored)."""
+        if self.kind == "sim":
+            return self.cluster.directory(clock=clock, **kw)
+        if self.kind == "tcp":
+            if not self._started:
+                raise RuntimeError(
+                    "Fabric.tcp(...) is not started — call start() or "
+                    "use it as a context manager before directory()")
+            return self.supervisor.directory(clock=clock, **kw)
+        from repro.core.transport import InProcTransport
+        kw.pop("estimator", None)
+        kw.pop("adaptive", None)
+        if kw:
+            raise TypeError(
+                f"Fabric.local().directory() got unexpected kwargs "
+                f"{sorted(kw)}")
+        return InProcTransport(self.server, self.net, clock or SimClock())
+
+    # ------------------------------------------------------------------
+    # convenience passthroughs (used by demos / fault drills)
+    # ------------------------------------------------------------------
+    def peer_ids(self) -> List[str]:
+        if self.kind == "sim":
+            return [p.peer_id for p in self.cluster.peers]
+        if self.kind == "tcp":
+            return list(self.supervisor.procs.keys())
+        return []
+
+    def kill(self, peer_id: str, **kw) -> None:
+        if self.kind == "sim":
+            self.cluster.kill(peer_id)
+        elif self.kind == "tcp":
+            self.supervisor.kill(peer_id, **kw)
+        else:
+            raise ValueError("Fabric.local() has no peers to kill")
+
+    def revive(self, peer_id: str) -> None:
+        if self.kind == "sim":
+            self.cluster.revive(peer_id)
+        elif self.kind == "tcp":
+            self.supervisor.restart(peer_id)
+        else:
+            raise ValueError("Fabric.local() has no peers to revive")
+
+    def gossip(self, fanout: Optional[int] = None) -> int:
+        """Pump one anti-entropy round (sim fabric; the TCP daemons and
+        the single box gossip/sync on their own, so this is a no-op
+        there)."""
+        if self.kind == "sim":
+            return self.cluster.gossip(fanout=fanout)
+        return 0
+
+    def server_stats(self) -> Dict[str, dict]:
+        if self.kind == "sim":
+            return self.cluster.server_stats()
+        if self.kind == "local":
+            return {"server": dict(self.server.stats)}
+        out = {}
+        for pid in self.peer_ids():
+            try:
+                resp = self.supervisor.request(pid, "stats", {})
+                out[pid] = resp.get("stats", {})
+            except Exception:
+                out[pid] = {}
+        return out
+
+    def __repr__(self) -> str:
+        n = len(self.peer_ids()) if self.kind != "local" else 1
+        return f"Fabric(kind={self.kind!r}, peers={n})"

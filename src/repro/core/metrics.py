@@ -99,6 +99,37 @@ class PeerStats:
         return d
 
 
+# counter fields summed when merging PeerStats across sessions/clients
+# (tombstones is a gauge — latest belief wins, see merge_peer_stats)
+PEER_COUNTER_FIELDS = (
+    "gets", "hits", "misses", "miss_outliers", "transport_errors",
+    "bytes_down", "bytes_up", "store_rejects", "hints", "chunks_down",
+    "overlap_hidden_s", "est_fetch_s", "actual_fetch_s")
+
+
+def merge_peer_stats(stat_maps: Sequence[Dict[str, "PeerStats"]],
+                     estimator=None) -> Dict[str, "PeerStats"]:
+    """Fleet view across several clients' per-peer stats: counters
+    summed, ``tombstones`` (a gauge: the latest sync'd count) taken as
+    the freshest belief. With an ``estimator`` (the shared
+    :class:`LinkEstimator`), each merged entry carries the current
+    bw/RTT belief and observation count. One code path for the session
+    pool AND the gateway — no parallel bookkeeping."""
+    merged: Dict[str, PeerStats] = {}
+    for stats in stat_maps:
+        for pid, st in (stats or {}).items():
+            agg = merged.setdefault(pid, PeerStats(pid))
+            for f in PEER_COUNTER_FIELDS:
+                setattr(agg, f, getattr(agg, f) + getattr(st, f))
+            agg.tombstones = max(agg.tombstones, st.tombstones)
+    if estimator is not None:
+        for pid, agg in merged.items():
+            bw, rtt, n_obs = estimator.snapshot(pid)
+            agg.est_bw_bps, agg.est_rtt_s = bw, rtt
+            agg.link_observations = n_obs
+    return merged
+
+
 # ---------------------------------------------------------------------------
 # serving-layer statistics (multi-request)
 # ---------------------------------------------------------------------------
@@ -122,6 +153,7 @@ class RequestStats:
     first_token_t: float = 0.0
     finish_t: float = 0.0
     finish_reason: str = ""        # "eos" | "length"
+    tenant: str = ""               # gateway multi-tenancy ("" = untagged)
 
     @property
     def ttft(self) -> float:
@@ -138,6 +170,34 @@ class RequestStats:
     @property
     def n_out(self) -> int:
         return len(self.output_tokens)
+
+
+@dataclass
+class TenantStats:
+    """Per-tenant slice of a serving run (gateway multi-tenancy)."""
+    tenant: str
+    n_requests: int = 0            # completed requests
+    total_output_tokens: int = 0
+    ttft_p50: float = 0.0
+    ttft_p95: float = 0.0
+    latency_p50: float = 0.0
+    latency_p95: float = 0.0
+    shed: int = 0                  # admissions refused (429/503)
+
+    def as_dict(self) -> Dict[str, float]:
+        return dict(self.__dict__)
+
+    @classmethod
+    def from_requests(cls, tenant: str, reqs: Sequence["RequestStats"],
+                      shed: int = 0) -> "TenantStats":
+        ttfts = [r.ttft for r in reqs]
+        lats = [r.latency for r in reqs]
+        return cls(tenant=tenant, n_requests=len(reqs),
+                   total_output_tokens=sum(r.n_out for r in reqs),
+                   ttft_p50=percentile(ttfts, 50),
+                   ttft_p95=percentile(ttfts, 95),
+                   latency_p50=percentile(lats, 50),
+                   latency_p95=percentile(lats, 95), shed=shed)
 
 
 @dataclass
@@ -160,11 +220,17 @@ class ServingReport:
     # suffix prefill, and stream chunks consumed, across the batch
     overlap_hidden_s: float = 0.0
     chunks_down: int = 0
+    # gateway multi-tenancy: per-tenant percentile slices and requests
+    # refused admission (429/503) — empty/zero outside gateway runs, so
+    # old reports round-trip unchanged
+    per_tenant: Dict[str, TenantStats] = field(default_factory=dict)
+    shed_requests: int = 0
 
     @classmethod
     def _build(cls, ttfts, lats, queue_waits, total_tokens: int,
                wall_s: float, per_peer, overlap_hidden_s: float = 0.0,
-               chunks_down: int = 0) -> "ServingReport":
+               chunks_down: int = 0, per_tenant=None,
+               shed_requests: int = 0) -> "ServingReport":
         return cls(
             n_requests=len(ttfts),
             total_output_tokens=total_tokens,
@@ -177,17 +243,34 @@ class ServingReport:
             queue_wait_p50=percentile(queue_waits, 50),
             per_peer=dict(per_peer or {}),
             overlap_hidden_s=overlap_hidden_s,
-            chunks_down=chunks_down)
+            chunks_down=chunks_down,
+            per_tenant=dict(per_tenant or {}),
+            shed_requests=shed_requests)
 
     @classmethod
     def from_requests(cls, reqs: Sequence[RequestStats],
                       wall_s: float,
-                      per_peer: Dict[str, PeerStats] = None
+                      per_peer: Dict[str, PeerStats] = None,
+                      shed: Dict[str, int] = None
                       ) -> "ServingReport":
+        """``shed`` maps tenant -> admissions refused; shed requests
+        never completed, so they appear only in the shed counters, not
+        the latency percentiles (which cover admitted work)."""
+        shed = dict(shed or {})
+        by_tenant: Dict[str, List[RequestStats]] = {}
+        for r in reqs:
+            by_tenant.setdefault(r.tenant, []).append(r)
+        per_tenant = {}
+        if shed or any(t for t in by_tenant):
+            for t in sorted(set(by_tenant) | set(shed)):
+                per_tenant[t] = TenantStats.from_requests(
+                    t, by_tenant.get(t, ()), shed=shed.get(t, 0))
         return cls._build([r.ttft for r in reqs],
                           [r.latency for r in reqs],
                           [r.queue_wait for r in reqs],
-                          sum(r.n_out for r in reqs), wall_s, per_peer)
+                          sum(r.n_out for r in reqs), wall_s, per_peer,
+                          per_tenant=per_tenant,
+                          shed_requests=sum(shed.values()))
 
     @classmethod
     def from_infer_results(cls, results: Sequence["InferResult"],
@@ -212,4 +295,6 @@ class ServingReport:
     def as_dict(self) -> Dict[str, float]:
         d = dict(self.__dict__)
         d["per_peer"] = {k: v.as_dict() for k, v in self.per_peer.items()}
+        d["per_tenant"] = {k: v.as_dict()
+                           for k, v in self.per_tenant.items()}
         return d

@@ -23,6 +23,7 @@ cross-session optimizations live here:
 from __future__ import annotations
 
 import threading
+import warnings
 from collections import OrderedDict
 from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, List, Optional, Sequence, Tuple
@@ -30,10 +31,12 @@ from typing import Callable, List, Optional, Sequence, Tuple
 from repro.config import CacheConfig
 from repro.core.catalog import Catalog
 from repro.core.client import EdgeClient
+from repro.core.fabric import Fabric
+from repro.core.fetch_policy import FetchPolicy
 from repro.core.metrics import InferResult
-from repro.core.netsim import SimClock, SimNetwork
+from repro.core.netsim import SimNetwork
 from repro.core.server import CacheServer
-from repro.core.transport import InProcTransport, TransportError
+from repro.core.transport import TransportError
 
 
 class _Inflight:
@@ -156,53 +159,79 @@ class FetchBroker:
 
 
 class SessionPool:
-    """N concurrent cache-sharing sessions over one engine + one server
-    (or one multi-peer cache fabric).
+    """N concurrent cache-sharing sessions over one engine + one cache
+    fabric.
 
     Every session is a full ``EdgeClient`` (own local catalog, own
-    simulated clock) sharing the engine, the server, and a
-    ``FetchBroker``. ``run(jobs)`` executes the jobs concurrently
-    (session i takes jobs i, i+N, ...) and returns results in job order.
+    clock) sharing the engine, the fabric, and a ``FetchBroker``.
+    ``run(jobs)`` executes the jobs concurrently (session i takes jobs
+    i, i+N, ...) and returns results in job order.
 
-    Pass ``cluster=CacheCluster(...)`` (or any object with a
-    ``directory(clock=...)`` factory — a
-    :class:`~repro.core.net.supervisor.PeerSupervisor` over real TCP
-    peer processes works identically) instead of ``server`` to run the
-    sessions against the peer fabric: each session gets its own
-    ``PeerDirectory`` (own per-peer catalogs and clock) over the shared
-    peers, and the broker dedups in-flight GETs per (peer, key). All
-    sessions share one :class:`~repro.core.net.estimator.LinkEstimator`,
-    so a congested link discovered by one session immediately reprices
-    every other session's fetch plan.
+    ``fabric`` is the one way to say where the caches live:
+    :meth:`Fabric.local` (the paper's single box), :meth:`Fabric.sim`
+    (in-process peers over simulated links) or :meth:`Fabric.tcp`
+    (real peer daemons). Each session gets its own directory view via
+    ``fabric.directory()``; on the multi-peer fabrics all sessions
+    share one :class:`~repro.core.net.estimator.LinkEstimator`, so a
+    congested link discovered by one session immediately reprices every
+    other session's fetch plan. The pre-``Fabric`` ``server=`` /
+    ``cluster=`` arguments keep working as deprecation shims.
     """
 
-    def __init__(self, server: Optional[CacheServer], engine,
+    def __init__(self, server: Optional[CacheServer] = None, engine=None,
                  n_sessions: int = 2,
                  cache_cfg: CacheConfig = CacheConfig(), net=None,
                  perf=None, perf_cfg=None, overlap: bool = True,
                  broker: Optional[FetchBroker] = None, cluster=None,
-                 estimator=None):
-        if server is None and cluster is None:
-            raise ValueError("need a server or a cluster")
+                 estimator=None, fabric: Optional[Fabric] = None,
+                 policy: Optional[FetchPolicy] = None):
         from repro.core.net.estimator import LinkEstimator
-        self.server = server
+        if fabric is not None and (server is not None
+                                   or cluster is not None):
+            raise ValueError(
+                "pass fabric=Fabric.<mode>(...) or the deprecated "
+                "server=/cluster= arguments, not both")
+        if fabric is None:
+            if cluster is not None:
+                warnings.warn(
+                    "SessionPool(cluster=...) is deprecated; use "
+                    "SessionPool(engine=..., fabric=Fabric.sim(...)/"
+                    "Fabric.tcp(...))", DeprecationWarning, stacklevel=2)
+                fabric = cluster     # duck-compatible: has .directory()
+            elif server is not None:
+                warnings.warn(
+                    "SessionPool(server=..., net=...) is deprecated; "
+                    "use SessionPool(engine=..., "
+                    "fabric=Fabric.local(...))",
+                    DeprecationWarning, stacklevel=2)
+                fabric = Fabric.local(cache_cfg=cache_cfg,
+                                      net=net or SimNetwork(),
+                                      server=server)
+            else:
+                raise ValueError(
+                    "need a fabric (Fabric.sim/.tcp/.local) — or the "
+                    "deprecated server=/cluster= arguments")
+        if engine is None:
+            raise ValueError("SessionPool needs an engine")
+        self.fabric = fabric
+        self.server = server if server is not None \
+            else getattr(fabric, "server", None)
         self.cluster = cluster
         self.engine = engine
-        self.net = net or SimNetwork()
+        self.net = net or getattr(fabric, "net", None) or SimNetwork()
         self.broker = broker or FetchBroker()
         self.estimator = estimator or LinkEstimator()
         self.sessions: List[EdgeClient] = []
         for i in range(n_sessions):
-            if cluster is not None:
-                # the factory picks the clock: SimClock per session on
-                # the in-proc fabric, WallClock over real TCP peers
-                tr = cluster.directory(estimator=self.estimator)
-            else:
-                tr = InProcTransport(server, self.net, SimClock())
+            # the factory picks the clock: SimClock per session on the
+            # in-proc fabrics, WallClock over real TCP peers
+            tr = fabric.directory(estimator=self.estimator)
+            client_kw = dict(policy=policy) if policy is not None \
+                else dict(overlap=overlap)
             self.sessions.append(EdgeClient(
                 f"session{i}", engine, tr, cache_cfg, perf=perf,
                 catalog=Catalog(cache_cfg), perf_cfg=perf_cfg,
-                broker=self.broker, overlap=overlap))
+                broker=self.broker, **client_kw))
 
     def sync_catalogs(self) -> None:
         for s in self.sessions:
@@ -212,28 +241,14 @@ class SessionPool:
         """Fleet view across every session's directory: per-peer
         counters summed (gets/hits/bytes/hints/rejects — the
         replication-aware accounting), estimator beliefs taken from the
-        shared :class:`LinkEstimator`. Empty outside cluster mode."""
-        from repro.core.metrics import PeerStats
-        merged = {}
-        for s in self.sessions:
-            if s.directory is None:
-                continue
-            for pid, st in s.directory.peer_stats().items():
-                agg = merged.setdefault(pid, PeerStats(pid))
-                for f in ("gets", "hits", "misses", "miss_outliers",
-                          "transport_errors", "bytes_down", "bytes_up",
-                          "store_rejects", "hints", "chunks_down",
-                          "overlap_hidden_s",
-                          "est_fetch_s", "actual_fetch_s"):
-                    setattr(agg, f, getattr(agg, f) + getattr(st, f))
-                # tombstones is a gauge (latest sync'd count), not a
-                # counter: take the freshest belief, don't sum
-                agg.tombstones = max(agg.tombstones, st.tombstones)
-        for pid, agg in merged.items():
-            bw, rtt, n_obs = self.estimator.snapshot(pid)
-            agg.est_bw_bps, agg.est_rtt_s = bw, rtt
-            agg.link_observations = n_obs
-        return merged
+        shared :class:`LinkEstimator`. Empty outside cluster mode.
+        Shares :func:`repro.core.metrics.merge_peer_stats` with the
+        gateway so fleet accounting has exactly one code path."""
+        from repro.core.metrics import merge_peer_stats
+        return merge_peer_stats(
+            [s.directory.peer_stats() for s in self.sessions
+             if s.directory is not None],
+            estimator=self.estimator)
 
     def run(self, jobs: Sequence, max_new_tokens: int = 8,
             **infer_kw) -> List[InferResult]:

@@ -1,0 +1,104 @@
+"""OpenAI-compatible HTTP front door for the edge prompt-cache fabric.
+
+One :class:`Gateway` wires the three layers:
+
+* :class:`~repro.gateway.admission.AdmissionController` — per-tenant
+  quotas + load shedding (429/503 with ``Retry-After``), no JAX;
+* :class:`~repro.gateway.engine.GatewayEngine` — the single thread
+  that owns the :class:`~repro.serving.engine.BatchedEngine`,
+  continuous-batching scheduler, and blocking prompt-cache
+  resolve/upload against a :class:`~repro.core.fabric.Fabric`;
+* :class:`~repro.gateway.server.GatewayServer` — pure-asyncio
+  HTTP/1.1 + SSE on a daemon thread, OpenAI request/response shapes.
+
+Quickstart::
+
+    from repro.core import Fabric
+    from repro.gateway import Gateway
+
+    with Fabric.tcp(n_peers=2) as fabric:
+        gw = Gateway(model, params, fabric=fabric).start()
+        # POST http://127.0.0.1:{gw.port}/v1/chat/completions
+        gw.stop()
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from repro.config import CacheConfig
+from repro.core.fetch_policy import FetchPolicy
+from repro.data.tokenizer import WordHashTokenizer
+from repro.gateway.admission import (  # noqa: F401
+    AdmissionController, ShedError, TenantQuota,
+)
+from repro.gateway.engine import (  # noqa: F401
+    GatewayClosed, GatewayEngine, GatewayJob, PrefixFetcher,
+)
+from repro.gateway.server import GatewayServer  # noqa: F401
+from repro.gateway import protocol  # noqa: F401
+
+
+class Gateway:
+    """The assembled front door: admission + engine + HTTP server.
+
+    ``max_inflight`` defaults to the engine's slot count and
+    ``queue_depth`` to one extra batch — beyond that, requests shed
+    with 503 instead of queueing unboundedly.
+    """
+
+    def __init__(self, model, params, fabric=None, batch_size: int = 4,
+                 max_len: int = 512,
+                 cache_cfg: CacheConfig = CacheConfig(),
+                 policy: Optional[FetchPolicy] = None,
+                 cache_dtype=None, tokenizer=None,
+                 host: str = "127.0.0.1", port: int = 0,
+                 max_inflight: Optional[int] = None,
+                 queue_depth: Optional[int] = None,
+                 default_quota: TenantQuota = TenantQuota(),
+                 quotas: Optional[Dict[str, TenantQuota]] = None,
+                 model_name: str = "repro-edge-cache",
+                 request_timeout_s: float = 120.0):
+        self.tokenizer = tokenizer or WordHashTokenizer(model.cfg.vocab)
+        self.admission = AdmissionController(
+            max_inflight=max_inflight or batch_size,
+            queue_depth=batch_size if queue_depth is None else queue_depth,
+            default_quota=default_quota, quotas=quotas)
+        self.engine = GatewayEngine(
+            model, params, batch_size=batch_size, max_len=max_len,
+            fabric=fabric, cache_cfg=cache_cfg, policy=policy,
+            cache_dtype=cache_dtype, admission=self.admission)
+        self.server = GatewayServer(
+            self.engine, self.admission, self.tokenizer,
+            host=host, port=port, model_name=model_name,
+            request_timeout_s=request_timeout_s)
+
+    # ------------------------------------------------------------------
+    @property
+    def port(self) -> int:
+        return self.server.port
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.server.host}:{self.server.port}"
+
+    def start(self, timeout_s: float = 120.0) -> "Gateway":
+        self.engine.start(timeout_s)
+        try:
+            self.server.start()
+        except BaseException:
+            self.engine.stop()
+            raise
+        return self
+
+    def stop(self, timeout_s: float = 30.0) -> None:
+        self.server.close()
+        self.engine.stop(timeout_s)
+
+    def __enter__(self) -> "Gateway":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    def report(self):
+        return self.engine.report()

@@ -1,0 +1,476 @@
+"""The gateway's engine thread: the only place JAX runs.
+
+The asyncio HTTP server parses, validates, and admits requests, then
+hands :class:`GatewayJob` objects to a single :class:`GatewayEngine`
+thread that owns the :class:`BatchedEngine` + continuous-batching
+:class:`Scheduler`. Tokens flow back through per-request asyncio
+queues via ``loop.call_soon_threadsafe`` — the event loop never blocks
+on the device and the device never sees two threads.
+
+Prompt-cache integration mirrors ``EdgeClient`` but stays *blocking*
+(the scheduler's per-slot resume path consumes a restored cache, not a
+chunk stream — ``FetchPolicy(transfer='streamed')`` is rejected at
+construction):
+
+* before submit, :class:`PrefixFetcher` resolves the longest cached
+  prefix range from the fabric (directory plan or single-box catalog)
+  and the request resumes from it (full hit -> slot adoption);
+* on a complete miss, the scheduler's ``on_prefill`` hook fires while
+  the slot still holds the state: ranges are extracted once (engine
+  thread — it is JAX work) and shipped to the fabric by a background
+  uploader thread, off the serving path.
+"""
+from __future__ import annotations
+
+import itertools
+import queue
+import threading
+import time
+from collections import OrderedDict
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.config import CacheConfig
+from repro.core import state_io
+from repro.core.catalog import Catalog
+from repro.core.cluster.directory import PeerDirectory
+from repro.core.cluster.planner import FetchAttempt, FetchPlanner
+from repro.core.fetch_policy import FetchPolicy
+from repro.core.keys import model_meta
+from repro.core.metrics import ServingReport, merge_peer_stats
+from repro.core.session_pool import FetchBroker
+from repro.core.transport import TransportError
+from repro.gateway.protocol import ParsedRequest
+from repro.serving.scheduler import Request, Scheduler
+
+
+class GatewayClosed(Exception):
+    """Submit after stop() / engine death."""
+
+
+class GatewayJob:
+    """One admitted request in flight between the event loop and the
+    engine thread. Events pushed to ``q`` (thread-safe via
+    ``call_soon_threadsafe``): ``("token", id)``, ``("done", reason,
+    meta)``, ``("error", message)``."""
+
+    _ids = itertools.count()
+
+    def __init__(self, parsed: ParsedRequest, segments, loop, q):
+        self.parsed = parsed
+        self.segments = segments
+        self.loop = loop
+        self.q = q
+        self.rid = f"cmpl-{next(self._ids)}"
+        self.created = int(time.time())
+        self.matched = 0
+        self.served_by = ""
+
+    def push(self, event: tuple) -> None:
+        try:
+            self.loop.call_soon_threadsafe(self.q.put_nowait, event)
+        except RuntimeError:
+            pass                      # loop already closed (shutdown)
+
+
+class PrefixFetcher:
+    """Blocking prompt-cache resolve/upload against one fabric view.
+
+    ``view`` is whatever ``fabric.directory()`` returned: a
+    :class:`PeerDirectory` (multi-peer) or an ``InProcTransport``
+    (single box, catalog kept locally). Resolution runs on the engine
+    thread (the restored cache feeds straight into slot adoption);
+    upload PUTs run on a dedicated uploader thread so the wire never
+    blocks serving — the per-link transports serialize concurrent
+    requests internally.
+    """
+
+    def __init__(self, model, cache_dtype, max_len: int, view,
+                 cache_cfg: CacheConfig,
+                 broker: Optional[FetchBroker] = None):
+        self.model = model
+        self.cache_dtype = cache_dtype
+        self.max_len = max_len
+        self.cache_cfg = cache_cfg
+        dtype_name = np.dtype(cache_dtype).name \
+            if not hasattr(cache_dtype, "name") else cache_dtype.name
+        self.meta = model_meta(model.cfg, dtype_name)
+        self.directory = view if isinstance(view, PeerDirectory) else None
+        self.transport = None if self.directory is not None else view
+        self.catalog = Catalog(cache_cfg)
+        self.clock = getattr(view, "clock", None)
+        if self.directory is not None:
+            self.planner = FetchPlanner(
+                self.directory, model.cfg, None,
+                dtype_bytes=np.dtype(cache_dtype).itemsize,
+                chunk_layers=cache_cfg.chunk_layers)
+        else:
+            self.planner = None
+        self.broker = broker or FetchBroker()
+        self._uploaded: "OrderedDict[bytes, None]" = OrderedDict()
+        self.stats = {"resolves": 0, "hits": 0, "full_hits": 0,
+                      "false_positives": 0, "bytes_down": 0,
+                      "bytes_up": 0, "uploads": 0, "upload_errors": 0}
+        self._upq: "queue.Queue" = queue.Queue()
+        self._uploader = threading.Thread(target=self._upload_loop,
+                                          daemon=True)
+        self._uploader.start()
+
+    # ------------------------------------------------------------------
+    def _template(self):
+        return self.model.init_cache(
+            1, self.model.cache_len(self.max_len), self.cache_dtype)
+
+    def sync(self) -> None:
+        now = self.clock.now() if self.clock is not None \
+            else time.monotonic()
+        if self.directory is not None:
+            self.directory.maybe_sync(now)
+            return
+        try:
+            self.catalog.maybe_sync(self.transport, now)
+        except TransportError:
+            pass                     # stale catalog degrades to misses
+
+    # ------------------------------------------------------------------
+    def resolve(self, segments) -> Tuple[object, int, object, str]:
+        """Longest usable cached prefix for this prompt. Returns
+        ``(cache1, matched_tokens, logits, served_by)`` —
+        ``(None, 0, None, "")`` on a miss."""
+        self.stats["resolves"] += 1
+        keys = segments.keys(self.meta, self.cache_cfg.max_ranges,
+                             self.cache_cfg.range_stride)
+        n = len(segments.token_ids)
+        min_match = self.cache_cfg.min_match_tokens
+        if self.directory is not None:
+            plan = self.planner.plan(keys, n, min_match=min_match)
+        else:
+            plan = [FetchAttempt(None, k) for k in keys
+                    if k.n_tokens >= min_match
+                    and self.catalog.lookup(k.digest)]
+        for att in plan:
+            resp, dt, nb, shared, template = self._get(att)
+            hit = bool(resp.get("ok") and resp.get("blob"))
+            if self.directory is not None and att.peer_id is not None \
+                    and not shared:
+                self.directory.record_get(
+                    att.peer_id, hit, att.est_fetch_s, dt,
+                    len(resp.get("blob") or b"") if hit else 0)
+            if resp.get("dead"):
+                continue             # next attempt; never a hang
+            if not hit:
+                self.stats["false_positives"] += 1
+                continue
+            blob = resp["blob"]
+            payload = state_io.parse_state(blob, self.meta)
+            if template is None:
+                template = self._template()
+            cache, n_eff, logits = state_io.restore_state(payload,
+                                                          template)
+            if not shared:
+                self.stats["bytes_down"] += len(blob)
+                if att.peer_id is not None:
+                    self.directory.note_fetch(att.key.digest, blob,
+                                              att.peer_id)
+            self.stats["hits"] += 1
+            if att.key.n_tokens == n:
+                self.stats["full_hits"] += 1
+            return (cache, att.key.n_tokens, logits,
+                    att.peer_id or "server")
+        return None, 0, None, ""
+
+    def _get(self, att: FetchAttempt):
+        cand, peer_id = att.key, att.peer_id
+        if peer_id is not None:
+            def issue():
+                return self.directory.request(peer_id, "get",
+                                              {"key": cand.digest})
+            key = (peer_id, cand.digest)
+        else:
+            def issue():
+                return self.transport.request("get",
+                                              {"key": cand.digest})
+            key = cand.digest
+        return self.broker.fetch(key, issue, prep=self._template)
+
+    # ------------------------------------------------------------------
+    def upload(self, segments, cache1, logits) -> int:
+        """Extract this prompt's range states (one serialization pass,
+        on the caller/engine thread — it is device work) and queue the
+        PUTs for the uploader thread. Ranges this gateway already
+        shipped are skipped — N identical cold prompts cost one
+        upload, not N."""
+        keys = [k for k in segments.keys(self.meta,
+                                         self.cache_cfg.max_ranges,
+                                         self.cache_cfg.range_stride)
+                if k.digest not in self._uploaded]
+        if not keys:
+            return 0
+        n = len(segments.token_ids)
+        per_key = {k.digest: self.model.cache_len(k.n_tokens)
+                   for k in keys}
+        chunk_lists = state_io.extract_state_ranges(
+            cache1, sorted(set(per_key.values())), self.meta,
+            logits=(logits if any(k.n_tokens == n for k in keys)
+                    else None),
+            compress=self.cache_cfg.compress,
+            level=self.cache_cfg.compress_level,
+            quantize=self.cache_cfg.quantize,
+            codec=self.cache_cfg.compress_codec,
+            chunk_layers=self.cache_cfg.chunk_layers)
+        blobs = []
+        for k in keys:
+            blobs.append((k.digest, state_io.pack_container(
+                chunk_lists[per_key[k.digest]])))
+            self._uploaded[k.digest] = None
+            while len(self._uploaded) > 4096:
+                self._uploaded.popitem(last=False)
+        self._upq.put(blobs)
+        return sum(len(b) for _, b in blobs)
+
+    def _upload_loop(self) -> None:
+        while True:
+            blobs = self._upq.get()
+            try:
+                if blobs is None:
+                    return
+                for digest, blob in blobs:
+                    try:
+                        if self.directory is not None:
+                            self.stats["bytes_up"] += \
+                                self.directory.upload(digest, blob)
+                        else:
+                            resp, _, _ = self.transport.request(
+                                "put", {"key": digest, "blob": blob},
+                                advance_clock=False)
+                            if resp.get("stored", True):
+                                self.catalog.register(digest)
+                                self.stats["bytes_up"] += len(blob)
+                        self.stats["uploads"] += 1
+                    except Exception:
+                        self.stats["upload_errors"] += 1
+            finally:
+                self._upq.task_done()
+
+    def flush_uploads(self, timeout_s: float = 10.0) -> bool:
+        """Block until every queued PUT has drained (benchmarks that
+        want bytes_up to be final). Returns False on timeout."""
+        deadline = time.monotonic() + timeout_s
+        while self._upq.unfinished_tasks and time.monotonic() < deadline:
+            time.sleep(0.01)
+        return not self._upq.unfinished_tasks
+
+    def close(self) -> None:
+        self._upq.put(None)
+
+    def peer_stats(self):
+        if self.directory is None:
+            return {}
+        return merge_peer_stats([self.directory.peer_stats()],
+                                estimator=self.directory.estimator)
+
+
+class GatewayEngine:
+    """Single-threaded serving core behind the HTTP front door.
+
+    ``start()`` spawns the engine thread, which constructs the
+    :class:`BatchedEngine` (first JAX touch), the scheduler, and the
+    fabric view, then drains the job inbox: admit -> resolve prefix ->
+    submit -> step -> publish new tokens. ``stop()`` drains and joins.
+    """
+
+    def __init__(self, model, params, batch_size: int = 4,
+                 max_len: int = 512, fabric=None,
+                 cache_cfg: CacheConfig = CacheConfig(),
+                 policy: Optional[FetchPolicy] = None,
+                 cache_dtype=None, admission=None):
+        if policy is None:
+            policy = FetchPolicy(transfer="blocking")
+        if policy.transfer != "blocking" or policy.overlap:
+            # the scheduler's resume path consumes a fully restored
+            # cache — there is no slot-level chunk-stream consumer, so
+            # a streamed/overlapped policy cannot be honored. Reject at
+            # construction, not on the first partial hit.
+            raise ValueError(
+                "GatewayEngine requires FetchPolicy(transfer='blocking',"
+                " overlap=False): the batched scheduler restores cached"
+                " prefixes whole before slot adoption")
+        self.model = model
+        self.params = params
+        self.batch_size = batch_size
+        self.max_len = max_len
+        self.fabric = fabric
+        self.cache_cfg = cache_cfg
+        self.policy = policy
+        self.cache_dtype = cache_dtype
+        self.admission = admission
+        self.inbox: "queue.Queue[GatewayJob]" = queue.Queue()
+        self._live: Dict[int, List] = {}      # req_id -> [job, req, sent]
+        self._stop = threading.Event()
+        self.ready = threading.Event()
+        self.startup_error: Optional[BaseException] = None
+        self.fetcher: Optional[PrefixFetcher] = None
+        self.sched: Optional[Scheduler] = None
+        self._thread: Optional[threading.Thread] = None
+        self._t0 = 0.0
+
+    # ------------------------------------------------------------------
+    def start(self, timeout_s: float = 120.0) -> "GatewayEngine":
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="gateway-engine")
+        self._thread.start()
+        self.ready.wait(timeout_s)
+        if self.startup_error is not None:
+            raise self.startup_error
+        if not self.ready.is_set():
+            raise TimeoutError("gateway engine failed to start")
+        return self
+
+    def stop(self, timeout_s: float = 30.0) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout_s)
+        if self.fetcher is not None:
+            self.fetcher.flush_uploads(timeout_s)
+            self.fetcher.close()
+
+    @property
+    def alive(self) -> bool:
+        return (self._thread is not None and self._thread.is_alive()
+                and not self._stop.is_set())
+
+    def submit(self, job: GatewayJob) -> None:
+        if not self.alive:
+            raise GatewayClosed("gateway engine is not running")
+        self.inbox.put(job)
+
+    # ------------------------------------------------------------------
+    def _run(self) -> None:
+        try:
+            from repro.serving.engine import BatchedEngine
+            self.engine = BatchedEngine(self.model, self.params,
+                                        self.max_len, self.batch_size,
+                                        cache_dtype=self.cache_dtype)
+            self.sched = Scheduler(self.engine,
+                                   on_prefill=self._on_prefill)
+            if self.fabric is not None:
+                view = self.fabric.directory()
+                self.fetcher = PrefixFetcher(
+                    self.model, self.engine.cache_dtype, self.max_len,
+                    view, self.cache_cfg)
+        except BaseException as e:            # noqa: BLE001
+            self.startup_error = e
+            self.ready.set()
+            return
+        self.ready.set()
+        self._t0 = time.perf_counter()
+        while not self._stop.is_set():
+            drained = self._drain_inbox()
+            if self.sched.has_work:
+                try:
+                    self.sched.step()
+                except Exception as e:        # a broken step fails every
+                    self._fail_all(repr(e))   # live request, not the
+                    continue                  # whole gateway
+                self._publish()
+            elif not drained:
+                try:
+                    self._start_job(self.inbox.get(timeout=0.05))
+                except queue.Empty:
+                    continue
+        self._fail_all("gateway shutting down")
+
+    def _drain_inbox(self) -> bool:
+        drained = False
+        while True:
+            try:
+                job = self.inbox.get_nowait()
+            except queue.Empty:
+                return drained
+            self._start_job(job)
+            drained = True
+
+    def _start_job(self, job: GatewayJob) -> None:
+        try:
+            segs = job.segments
+            n = len(segs.token_ids)
+            cache1, matched, logits, served = None, 0, None, ""
+            if self.fetcher is not None:
+                self.fetcher.sync()
+                cache1, matched, logits, served = \
+                    self.fetcher.resolve(segs)
+            req = Request(
+                tokens=np.asarray(segs.token_ids, np.int32),
+                max_new_tokens=job.parsed.max_tokens,
+                tenant=job.parsed.tenant,
+                cache1=cache1, n_prefix=matched,
+                # prefix logits only mean "skip prefill entirely" on a
+                # FULL hit; a partial hit resumes from `matched` and
+                # recomputes the suffix
+                prefix_logits=(logits if matched == n
+                               and logits is not None else None))
+            rid = self.sched.submit(req)
+            job.matched, job.served_by = matched, served
+            self._live[rid] = [job, req, 0]
+        except Exception as e:
+            if self.admission is not None:
+                self.admission.release(job.parsed.tenant)
+            job.push(("error", repr(e)))
+
+    def _on_prefill(self, slot_i: int, req: Request, logits_row) -> None:
+        """Fresh prefill = complete cache miss: publish its ranges."""
+        if self.fetcher is None or not self.policy.upload_on_miss:
+            return
+        entry = self._live.get(req.req_id)
+        if entry is None or entry[0].matched:
+            return
+        try:
+            self.fetcher.upload(entry[0].segments,
+                                self.engine.slot_cache(slot_i),
+                                logits_row[None])
+        except Exception:
+            self.fetcher.stats["upload_errors"] += 1
+
+    def _publish(self) -> None:
+        finished = []
+        for rid, entry in self._live.items():
+            job, req, _sent = entry
+            toks = req.stats.output_tokens
+            while entry[2] < len(toks):
+                job.push(("token", int(toks[entry[2]])))
+                entry[2] += 1
+            if req.stats.finish_t:
+                lat = req.stats.finish_t - req.stats.submit_t
+                if self.admission is not None:
+                    self.admission.release(job.parsed.tenant, lat)
+                job.push(("done", req.stats.finish_reason,
+                          {"matched_tokens": job.matched,
+                           "served_by": job.served_by,
+                           "ttft_s": req.stats.ttft,
+                           "latency_s": lat}))
+                finished.append(rid)
+        for rid in finished:
+            del self._live[rid]
+
+    def _fail_all(self, message: str) -> None:
+        for rid, (job, _req, _sent) in list(self._live.items()):
+            if self.admission is not None:
+                self.admission.release(job.parsed.tenant)
+            job.push(("error", message))
+        self._live.clear()
+
+    # ------------------------------------------------------------------
+    def report(self) -> ServingReport:
+        """Cluster-wide serving report: completed-request percentiles
+        per tenant, shed counts from admission, per-peer fabric stats —
+        the same vocabulary as the SessionPool benchmarks."""
+        reqs = [r.stats for r in self.sched.done] \
+            if self.sched is not None else []
+        wall = (time.perf_counter() - self._t0) if self._t0 else 0.0
+        shed = self.admission.shed_counts() \
+            if self.admission is not None else {}
+        per_peer = self.fetcher.peer_stats() \
+            if self.fetcher is not None else {}
+        return ServingReport.from_requests(reqs, wall,
+                                           per_peer=per_peer, shed=shed)

@@ -43,6 +43,7 @@ class Request:
     cache1: object = None              # restored B=1 cache prefix
     n_prefix: int = 0                  # tokens held by cache1
     prefix_logits: Optional[np.ndarray] = None   # full hit: [1, V]
+    tenant: str = ""                   # gateway multi-tenancy tag
     stats: RequestStats = field(default=None)    # filled by the scheduler
 
 
@@ -57,10 +58,18 @@ class _Slot:
 
 class Scheduler:
     def __init__(self, engine: BatchedEngine, sampler: Callable = greedy,
-                 rng: Optional[np.random.Generator] = None):
+                 rng: Optional[np.random.Generator] = None,
+                 on_prefill: Optional[Callable] = None):
         self.engine = engine
         self.sampler = sampler
         self.rng = rng
+        # called as on_prefill(slot_i, req, logits_row) right after a
+        # FRESH prefill (cache-resumed admissions came FROM the cache,
+        # so there is nothing new to publish) — the gateway hooks this
+        # to extract + upload the prompt-cache ranges while the slot
+        # still holds the state (slots recycle the moment a request
+        # finishes, so finish time is too late)
+        self.on_prefill = on_prefill
         self.queue: deque[Request] = deque()
         self.slots = [_Slot() for _ in range(engine.batch_size)]
         self._ids = itertools.count()
@@ -82,7 +91,8 @@ class Scheduler:
             req.req_id = next(self._ids)
         req.stats = RequestStats(req_id=req.req_id,
                                  prompt_tokens=int(np.size(req.tokens)),
-                                 submit_t=time.perf_counter())
+                                 submit_t=time.perf_counter(),
+                                 tenant=req.tenant)
         self.queue.append(req)
         return req.req_id
 
@@ -144,6 +154,9 @@ class Scheduler:
             logits = self.engine.prefill_slots(fresh, rows)
             for j, slot_i in enumerate(fresh):
                 self._set_logits(slot_i, logits[j])
+                if self.on_prefill is not None:
+                    self.on_prefill(slot_i, self.slots[slot_i].req,
+                                    logits[j])
         # first token of every newly admitted request comes from its
         # prefill (or adopted) logits
         for slot_i in self._admitted_waiting_first_token():

@@ -1,0 +1,20 @@
+"""Multi-tenant workload replay: three production prompt mixes.
+
+JAX-free, fully deterministic request generators (seeded stdlib
+``random``) used by ``benchmarks/gateway_load.py`` and the gateway
+tests. Each mix models a different prefix-sharing structure — the
+variable the paper's distributed prompt cache exploits:
+
+* ``support`` — customer support: every request opens with one hot
+  system prompt; only the short user question varies. The system
+  prefix is cached once and served to everyone.
+* ``rag`` — retrieval augmentation: requests stuff Zipf-popular
+  documents before the question. Docs are ordered most-popular-first
+  so the popular head forms a shared, cacheable prefix.
+* ``agent`` — agent loops: each session's conversation grows turn by
+  turn; request *i*'s full prompt is a strict prefix of request
+  *i+1*'s, so every turn resumes from the previous turn's cache.
+"""
+from repro.workloads.mixes import (  # noqa: F401
+    MIXES, WorkloadRequest, agent_loops, customer_support, rag,
+)
