@@ -22,13 +22,12 @@ hidden fraction, TTFT numbers) so the perf trajectory has data points.
 """
 from __future__ import annotations
 
-import json
 import sys
 import time
 
 import jax
 
-from benchmarks.common import csv_line
+from benchmarks.common import csv_line, write_bench
 from repro.config import CacheConfig
 from repro.configs import get_config
 from repro.core import CacheServer, EdgeClient, state_io
@@ -221,8 +220,7 @@ def main():
     lines, out = [], {}
     serialize_micro(model, engine, meta, lines, out)
     overlap_drill(engine, gen, lines, out, quick=quick)
-    with open("BENCH_blob_pipeline.json", "w") as f:
-        json.dump(out, f, indent=2)
+    write_bench("BENCH_blob_pipeline.json", out)
     return lines
 
 

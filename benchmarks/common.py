@@ -3,6 +3,7 @@ full-size Gemma-3 settings through the device perf model + analytic blob
 sizing (see core/sizing.py)."""
 from __future__ import annotations
 
+import json
 import time
 from dataclasses import dataclass
 
@@ -80,3 +81,31 @@ def csv_line(name: str, us_per_call: float, derived: str) -> str:
     line = f"{name},{us_per_call:.1f},{derived}"
     print(line, flush=True)
     return line
+
+
+def merge_rollups(into: dict, rollup: dict) -> dict:
+    """Accumulate ``Tracer.rollup()`` dicts across benchmark stages
+    (each stage may own a short-lived tracer)."""
+    for name, agg in rollup.items():
+        tot = into.setdefault(name, {"count": 0, "total_s": 0.0})
+        tot["count"] += agg["count"]
+        tot["total_s"] += agg["total_s"]
+    return into
+
+
+def write_bench(path: str, payload: dict, spans: dict = None) -> None:
+    """Write a ``BENCH_*.json`` report with the run's observability
+    state attached under ``"obs"``: the process-wide Prometheus metrics
+    snapshot plus *spans*, a per-span-name rollup ({name: {count,
+    total_s}}, see ``Tracer.rollup``) when the benchmark ran with
+    tracing. Keeps every bench artifact self-describing — a regression
+    report carries the phase breakdown that explains it."""
+    from repro.obs import REGISTRY
+
+    obs: dict = {"metrics": REGISTRY.snapshot()}
+    if spans:
+        obs["spans"] = spans
+    payload = dict(payload)
+    payload["obs"] = obs
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, default=str)

@@ -30,7 +30,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import csv_line
+from benchmarks.common import csv_line, merge_rollups, write_bench
 from repro.config import CacheConfig
 from repro.configs import get_config
 from repro.core import Fabric
@@ -224,6 +224,7 @@ def main(quick: bool = False, only_mix: str = ""):
                          "max_new": MAX_NEW, "n_per_mix": n,
                          "rate_per_s": rate}, "mixes": {}}
     lines = []
+    spans: dict = {}
     mixes = [only_mix] if only_mix else list(MIXES)
     for name in mixes:
         # fresh fleet per mix so cache stats and cost are per-mix
@@ -236,6 +237,9 @@ def main(quick: bool = False, only_mix: str = ""):
             try:
                 res = run_mix(gw, model, params, tok, name, n, rate)
             finally:
+                # each mix owns a short-lived gateway; fold its span
+                # rollup into the report before the tracer goes away
+                merge_rollups(spans, gw.tracer.rollup())
                 gw.stop()
         report["mixes"][name] = res
         lines.append(csv_line(
@@ -253,8 +257,7 @@ def main(quick: bool = False, only_mix: str = ""):
         f"shed={report['shed_drill']['shed']};"
         f"statuses={report['shed_drill']['statuses']}"))
 
-    with open("BENCH_gateway_load.json", "w") as f:
-        json.dump(report, f, indent=2)
+    write_bench("BENCH_gateway_load.json", report, spans=spans)
     return lines
 
 

@@ -26,6 +26,7 @@ MODULES = [
     "benchmarks.engine_micro",         # substrate microbenchmarks
     "benchmarks.serving_throughput",   # continuous batching + sessions
     "benchmarks.gateway_load",         # HTTP front door: 3 replay mixes
+    "benchmarks.obs_smoke",            # tracing overhead + telemetry
     "benchmarks.roofline_table",       # §Roofline (from dry-run records)
 ]
 

@@ -7,6 +7,12 @@ Public API:
     DevicePerfModel, SessionPool, FetchBroker, TransportError,
     CacheCluster, CachePeer, PeerDirectory, FetchPlanner, PlacementPolicy,
     LinkEstimator, TCPPeerLink, PeerSupervisor, serve_peer_tcp
+
+The engine-side names (``EdgeClient``, ``SessionPool``, ``FetchBroker``)
+are lazy (PEP 562): importing them pulls ``state_io`` and therefore JAX.
+Everything a cache peer daemon needs stays import-light — the daemon
+fleet's millisecond start-up (and ``tests/test_obs.py``'s import-graph
+check) depends on ``import repro.core`` never touching JAX.
 """
 from repro.core.bloom import BloomFilter  # noqa: F401
 from repro.core.catalog import Catalog  # noqa: F401
@@ -17,12 +23,32 @@ from repro.core.server import CacheServer  # noqa: F401
 from repro.core.transport import TransportError  # noqa: F401
 from repro.core.fabric import Fabric  # noqa: F401
 from repro.core.fetch_policy import FetchPolicy  # noqa: F401
-from repro.core.client import EdgeClient  # noqa: F401
 from repro.core.perfmodel import DevicePerfModel  # noqa: F401
-from repro.core.session_pool import FetchBroker, SessionPool  # noqa: F401
 from repro.core.cluster import (  # noqa: F401
     CacheCluster, CachePeer, FetchPlanner, PeerDirectory, PlacementPolicy,
 )
 from repro.core.net import (  # noqa: F401
     LinkEstimator, PeerSpec, PeerSupervisor, TCPPeerLink, serve_peer_tcp,
 )
+
+# JAX-tainted exports, resolved on first attribute access
+_LAZY = {
+    "EdgeClient": "repro.core.client",
+    "SessionPool": "repro.core.session_pool",
+    "FetchBroker": "repro.core.session_pool",
+}
+
+
+def __getattr__(name):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    val = getattr(importlib.import_module(mod), name)
+    globals()[name] = val              # cache: __getattr__ runs once
+    return val
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

@@ -27,12 +27,14 @@ from __future__ import annotations
 
 import queue
 import threading
-import time
 from typing import Callable, List, Optional
 
 import numpy as np
 
 from repro.config import CacheConfig
+from repro.obs import REGISTRY, clock as oclock
+from repro.obs.flight import CHUNK_ERROR, FLIGHT, PLAN_EXHAUSTED
+from repro.obs.trace import Tracer, current_span
 from repro.core.catalog import Catalog
 from repro.core.cluster.directory import PeerDirectory
 from repro.core.cluster.planner import FetchAttempt, FetchPlanner
@@ -54,8 +56,21 @@ class EdgeClient:
                  catalog: Optional[Catalog] = None,
                  use_catalog: bool = True, perf_cfg=None,
                  broker=None, overlap: bool = False,
-                 policy: Optional[FetchPolicy] = None):
+                 policy: Optional[FetchPolicy] = None,
+                 tracer: Optional[Tracer] = None):
         self.name = name
+        # every request gets a span tree; the *wall* Breakdown is a
+        # projection of it (Breakdown.from_spans), so the tracer must
+        # be enabled — pass a shared one to stitch client spans into a
+        # larger tree (SessionPool, gateway), or let each client keep
+        # its own bounded store
+        self.tracer = tracer or Tracer(proc=f"client:{name}",
+                                       max_traces=64)
+        self._m_infers = REGISTRY.counter(
+            "client_infers_total", "requests served by EdgeClient.infer")
+        self._m_attempts = REGISTRY.counter(
+            "client_fetch_attempts_total",
+            "per-(peer,range) fetch attempts by result", ("result",))
         self.engine = engine
         self.transport = transport
         self.cache_cfg = cache_cfg
@@ -110,7 +125,7 @@ class EdgeClient:
 
     # ------------------------------------------------------------------
     def sync_catalog(self) -> None:
-        now = self.clock.now() if self.clock else time.monotonic()
+        now = self.clock.now() if self.clock else oclock.monotonic()
         if self.directory is not None:
             self.directory.maybe_sync(now)
             return
@@ -123,8 +138,30 @@ class EdgeClient:
     # ------------------------------------------------------------------
     def infer(self, prompt: PromptSegments, max_new_tokens: int = 16,
               sampler: Callable = greedy, rng=None,
-              upload_on_miss: Optional[bool] = None) -> InferResult:
+              upload_on_miss: Optional[bool] = None,
+              parent=None) -> InferResult:
+        """Run one request. ``parent`` (a Span or SpanContext) stitches
+        this request's span tree under a caller's — the explicit
+        cross-thread handoff. The returned result's *wall* Breakdown is
+        projected from the spans recorded here (Table-3 ``component``
+        attributes), so tracing and accounting cannot drift apart."""
+        root = self.tracer.start("infer", parent=parent,
+                                 attrs={"client": self.name,
+                                        "prompt_tokens":
+                                        len(prompt.token_ids)})
+        with root:
+            res = self._infer_traced(prompt, max_new_tokens, sampler,
+                                     rng, upload_on_miss)
+        spans = self.tracer.trace(root.trace_id) or []
+        res.wall = Breakdown.from_spans(spans)
+        res.trace_id = root.trace_id
+        return res
+
+    def _infer_traced(self, prompt: PromptSegments, max_new_tokens: int,
+                      sampler: Callable, rng,
+                      upload_on_miss: Optional[bool]) -> InferResult:
         cfg = self.perf_cfg
+        tr = self.tracer
         if upload_on_miss is None:
             upload_on_miss = self.policy.upload_on_miss
         n = len(prompt.token_ids)
@@ -139,14 +176,15 @@ class EdgeClient:
         # Step 2: catalog probe, longest range first. In fabric mode the
         # planner turns the probe results into link-aware (peer, range)
         # attempts; otherwise attempts are the single-server candidates.
-        t0 = time.perf_counter()
+        t0 = oclock.monotonic()
         min_match = self.cache_cfg.min_match_tokens \
             if self.policy.min_match_tokens is None \
             else self.policy.min_match_tokens
         if self.directory is not None:
             plan = self.planner.plan(keys, n, min_match=min_match,
                                      use_catalog=self.use_catalog)
-            wall.bloom = time.perf_counter() - t0
+            tr.add("bloom", oclock.monotonic() - t0, t0=t0,
+                   component="bloom", candidates=len(plan))
             if self.perf and self.use_catalog:
                 n_cats = max(len(self.directory.links), 1)
                 sim.bloom = self.perf.time_bloom(len(keys) * n_cats)
@@ -155,7 +193,8 @@ class EdgeClient:
                           if k.n_tokens >= min_match
                           and self.catalog.lookup(k.digest)]
             plan = [FetchAttempt(None, k) for k in candidates]
-            wall.bloom = time.perf_counter() - t0
+            tr.add("bloom", oclock.monotonic() - t0, t0=t0,
+                   component="bloom", candidates=len(plan))
             if self.perf:
                 sim.bloom = self.perf.time_bloom(len(keys))
         else:
@@ -169,98 +208,133 @@ class EdgeClient:
             "", 0.0, 0.0, 0, 0
         streamed, chunks_down = None, 0
         emulated = self.perf_cfg is not self.engine.model.cfg
+        hit = False
         for att in plan:                # best estimated total time first
             cand = att.key
             n_attempts += 1
             fetched = None
-            if self.overlap and cand.n_tokens < n \
-                    and self.policy.transfer != "blocking" \
-                    and self.engine.supports_layer_stream:
-                fetched = self._fetch_streamed(att, prompt)
-            if fetched is None:
-                fetched = self._fetch(cand, att.peer_id)
-            resp, dt, nb, was_shared, template = fetched
-            chunks_down += int(resp.get("_chunks", 0) or 0)
-            # on a streamed wall-link hit, dt is the transfer-VISIBLE
-            # time (wall minus overlapped compute) — right for the TTFT
-            # breakdown, wrong as a bandwidth sample. The estimator and
-            # the est-vs-actual stats must see the true transfer time.
-            transfer_s = (resp.get("_streamed") or {}).get("transfer")
-            net = self._link_net(att.peer_id)
-            # a link with a SimNetwork behind it charges modeled time;
-            # a real TCP link (net is None) charges measured wall time
-            sim_link = self.clock is not None and net is not None
-            hit = bool(resp.get("ok") and resp.get("blob"))
-            dl, basis_bytes = 0.0, None
-            if sim_link:
-                if was_shared:
-                    dl = 0.0         # piggybacks on the deduped transfer
-                elif resp.get("dead"):
-                    dl = net.rtt_s   # connection refused: one fast-fail
-                elif emulated:
-                    # only the full-prompt range's blob carries logits
-                    nb_full = sizing.state_bytes(cfg, cand.n_tokens,
-                                                 with_logits=hit and
-                                                 cand.n_tokens == n)
-                    if hit:
-                        basis_bytes = nb_full
-                    dl = net.transfer_time(nb_full if hit else 256)
+            # one span per (peer, range) fetch attempt: the planner's
+            # estimate rides as an attribute next to the realized cost,
+            # and the directory's net.* / folded peer.* spans nest
+            # under it (the attempt runs with this span ambient)
+            asp = tr.start("redis.attempt", attrs={
+                "peer": att.peer_id or "server",
+                "range_tokens": cand.n_tokens,
+                "est_fetch_s": att.est_fetch_s})
+            with asp:
+                if self.overlap and cand.n_tokens < n \
+                        and self.policy.transfer != "blocking" \
+                        and self.engine.supports_layer_stream:
+                    fetched = self._fetch_streamed(att, prompt)
+                if fetched is None:
+                    fetched = self._fetch(cand, att.peer_id)
+                resp, dt, nb, was_shared, template = fetched
+                chunks_down += int(resp.get("_chunks", 0) or 0)
+                # on a streamed wall-link hit, dt is the transfer-
+                # VISIBLE time (wall minus overlapped compute) — right
+                # for the TTFT breakdown, wrong as a bandwidth sample.
+                # The estimator and the est-vs-actual stats must see
+                # the true transfer time.
+                transfer_s = (resp.get("_streamed") or {}).get("transfer")
+                net = self._link_net(att.peer_id)
+                # a link with a SimNetwork behind it charges modeled
+                # time; a real TCP link (net is None) measured wall time
+                sim_link = self.clock is not None and net is not None
+                hit = bool(resp.get("ok") and resp.get("blob"))
+                dl, basis_bytes = 0.0, None
+                if sim_link:
+                    if was_shared:
+                        dl = 0.0     # piggybacks on the deduped transfer
+                    elif resp.get("dead"):
+                        dl = net.rtt_s  # refused connect: one fast-fail
+                    elif emulated:
+                        # only the full-prompt range's blob has logits
+                        nb_full = sizing.state_bytes(cfg, cand.n_tokens,
+                                                     with_logits=hit and
+                                                     cand.n_tokens == n)
+                        if hit:
+                            basis_bytes = nb_full
+                        dl = net.transfer_time(nb_full if hit else 256)
+                    else:
+                        dl = dt
+                    sim.redis += dl
+                    actual_cost = dl
+                    asp.set(hit=hit, sim_s=dl, actual_s=actual_cost)
                 else:
-                    dl = dt
-                sim.redis += dl
-                actual_cost = dl
-            else:
-                wall.redis += dt
-                actual_cost = transfer_s if transfer_s is not None else dt
-            if resp.get("dead"):
-                # peer unreachable (already marked suspect) — fall to the
-                # next attempt, then to local prefill; never a hang
-                dead += 1
-                continue
-            if self.directory is not None and att.peer_id is not None \
-                    and not was_shared:
-                # shared (broker-deduped) adoptions put no bytes on the
-                # wire — only the leader's GET is accounted per peer.
-                # basis_bytes keeps the estimator's bandwidth samples on
-                # the same byte basis as the planner's estimates when
-                # the blob transfer was charged from analytic sizing.
-                self.directory.record_get(
-                    att.peer_id, hit, att.est_fetch_s, actual_cost,
-                    len(resp.get("blob") or b"") if hit else 0,
-                    basis_bytes=basis_bytes)
-            if hit:
-                blob = resp["blob"]
-                shared = was_shared
-                hit_dl_sim = dl
-                down_bytes = 0 if was_shared else len(blob)
-                if resp.get("_streamed") is not None:
-                    # layer-streamed fetch: restore (and, unless the
-                    # peer held a v2 blob, the suffix prefill too)
-                    # already happened while the chunks were landing
-                    streamed = resp["_streamed"]
-                    state = streamed.get("state")
+                    # wall link: this attempt's transfer time IS the
+                    # request's Table-3 redis share — component_s pins
+                    # the projected amount to exactly ``dt`` even
+                    # though the span block also covers the restore
+                    actual_cost = transfer_s if transfer_s is not None \
+                        else dt
+                    asp.set(hit=hit, component="redis", component_s=dt,
+                            actual_s=actual_cost)
+                FLIGHT.record("fetch.attempt",
+                              client=self.name,
+                              peer=att.peer_id or "server",
+                              range_tokens=cand.n_tokens, hit=hit,
+                              dead=bool(resp.get("dead")))
+                self._m_attempts.labels(result=(
+                    "dead" if resp.get("dead")
+                    else "hit" if hit else "miss")).inc()
+                if resp.get("dead"):
+                    # peer unreachable (already marked suspect) — fall
+                    # to the next attempt, then to local prefill; never
+                    # a hang
+                    dead += 1
+                    continue
+                if self.directory is not None and att.peer_id is not None \
+                        and not was_shared:
+                    # shared (broker-deduped) adoptions put no bytes on
+                    # the wire — only the leader's GET is accounted per
+                    # peer. basis_bytes keeps the estimator's bandwidth
+                    # samples on the same byte basis as the planner's
+                    # estimates when the blob transfer was charged from
+                    # analytic sizing.
+                    self.directory.record_get(
+                        att.peer_id, hit, att.est_fetch_s, actual_cost,
+                        len(resp.get("blob") or b"") if hit else 0,
+                        basis_bytes=basis_bytes)
+                if hit:
+                    blob = resp["blob"]
+                    shared = was_shared
+                    hit_dl_sim = dl
+                    down_bytes = 0 if was_shared else len(blob)
+                    if resp.get("_streamed") is not None:
+                        # layer-streamed fetch: restore (and, unless
+                        # the peer held a v2 blob, the suffix prefill
+                        # too) already happened while the chunks landed
+                        streamed = resp["_streamed"]
+                        state = streamed.get("state")
+                    else:
+                        payload = state_io.parse_state(blob, self.meta)
+                        if template is None:
+                            template = self.engine.new_cache()
+                        cache, n_eff, logits = state_io.restore_state(
+                            payload, template)
+                        state = (cache, n_eff, logits)
+                    matched = cand.n_tokens
+                    if att.peer_id is not None:
+                        served_by = att.peer_id
+                        est_fetch = att.est_fetch_s
+                        actual_fetch = actual_cost
+                        if not was_shared:
+                            # hot keys replicate to the fastest other
+                            # peer (off the critical path); only the
+                            # leader of a deduped transfer counts — N
+                            # pooled adoptions are one fetch, not N
+                            self.directory.note_fetch(cand.digest, blob,
+                                                      att.peer_id)
+                    break
                 else:
-                    payload = state_io.parse_state(blob, self.meta)
-                    if template is None:
-                        template = self.engine.new_cache()
-                    cache, n_eff, logits = state_io.restore_state(payload,
-                                                                  template)
-                    state = (cache, n_eff, logits)
-                matched = cand.n_tokens
-                if att.peer_id is not None:
-                    served_by = att.peer_id
-                    est_fetch = att.est_fetch_s
-                    actual_fetch = actual_cost
-                    if not was_shared:
-                        # hot keys replicate to the fastest other peer
-                        # (off the critical path); only the leader of a
-                        # deduped transfer counts — N pooled adoptions
-                        # are one fetch, not N
-                        self.directory.note_fetch(cand.digest, blob,
-                                                  att.peer_id)
-                break
-            else:
-                false_pos = True     # catalog said yes, server said no
+                    false_pos = True  # catalog said yes, server said no
+        if plan and not hit:
+            # every planned (peer, range) attempt failed: the request
+            # degrades to full local prefill. Freeze the flight ring —
+            # the last events show *why* the plan died (dead peers,
+            # Bloom FPs, corrupt streams).
+            FLIGHT.trigger(PLAN_EXHAUSTED, client=self.name,
+                           attempts=n_attempts, dead_peers=dead)
 
         # Step 3: prefill (full local / resumed / streamed / skipped)
         if matched == n and state is not None and state[2] is not None:
@@ -280,7 +354,11 @@ class EdgeClient:
                                     np.int32)[None]
                 st = self.engine.resume({"tokens": suffix}, cache,
                                         resume_from)
-            wall.p_decode += st.timings["prefill_wall"]
+            tr.add("p_decode", st.timings["prefill_wall"],
+                   component="p_decode",
+                   kind="streamed" if streamed is not None
+                   and streamed.get("st") is not None else "resumed",
+                   resumed_from=resume_from)
             if self.perf:
                 t_suffix = self.perf.time_prefill(cfg, n - resume_from)
                 sim.p_decode += t_suffix
@@ -312,7 +390,8 @@ class EdgeClient:
         else:
             tokens = np.asarray(prompt.token_ids, np.int32)[None]
             st = self.engine.start({"tokens": tokens})
-            wall.p_decode += st.timings["prefill_wall"]
+            tr.add("p_decode", st.timings["prefill_wall"],
+                   component="p_decode", kind="full")
             if self.perf:
                 sim.p_decode += self.perf.time_prefill(cfg, n)
             if upload_on_miss:
@@ -322,8 +401,10 @@ class EdgeClient:
 
         # Step 4: decode the response
         out = self.engine.generate(st, max_new_tokens, sampler, rng=rng)
-        wall.r_decode = st.timings["decode_wall"]
         n_out = st.timings["decode_tokens"]
+        tr.add("r_decode", st.timings["decode_wall"],
+               component="r_decode", tokens=int(n_out))
+        self._m_infers.inc()
         if self.perf:
             sim.r_decode = self.perf.time_decode(cfg, n_out)
             sim.sample = self.perf.time_sample(n_out)
@@ -370,7 +451,7 @@ class EdgeClient:
                 return self.transport.request("get", {"key": cand.digest})
             broker_key = cand.digest
         if self.broker is None:
-            t0 = time.perf_counter()
+            t0 = oclock.monotonic()
             try:
                 resp, dt, nb = issue()
             except TransportError as e:
@@ -378,7 +459,7 @@ class EdgeClient:
                 # connect is ~0, a request timeout is the full bound) —
                 # the wall breakdown must show the stall
                 return ({"ok": False, "dead": True, "error": repr(e)},
-                        time.perf_counter() - t0, 0, False, None)
+                        oclock.monotonic() - t0, 0, False, None)
             return resp, dt, nb, False, None
         return self.broker.fetch(broker_key, issue,
                                  prep=self.engine.new_cache)
@@ -434,15 +515,21 @@ class EdgeClient:
             for gid in restorer.feed(chunk):
                 groups_q.put(gid)
 
+        # the pump runs on its own thread: hand the caller's ambient
+        # span over explicitly so the directory's net.get_chunks span
+        # (and the folded peer-side spans) land in this request's tree
+        caller_span = current_span()
+
         def pump():
             try:
-                if peer_id is not None:
-                    hdr, dt, nb = self.directory.request_stream(
-                        peer_id, "get_chunks", {"key": cand.digest},
-                        on_chunk)
-                else:
-                    hdr, dt, nb = tr.request_stream(
-                        "get_chunks", {"key": cand.digest}, on_chunk)
+                with self.tracer.attach(caller_span):
+                    if peer_id is not None:
+                        hdr, dt, nb = self.directory.request_stream(
+                            peer_id, "get_chunks", {"key": cand.digest},
+                            on_chunk)
+                    else:
+                        hdr, dt, nb = tr.request_stream(
+                            "get_chunks", {"key": cand.digest}, on_chunk)
                 info["hdr"], info["dt"], info["nb"] = hdr, dt, nb
             except TransportError as e:
                 info["err"] = ("dead", e)
@@ -451,7 +538,7 @@ class EdgeClient:
             finally:
                 groups_q.put(None)     # always unblock the consumer
 
-        t0 = time.perf_counter()
+        t0 = oclock.monotonic()
         worker = threading.Thread(target=pump, daemon=True)
         worker.start()
         # restore-template allocation overlaps the first chunks
@@ -483,7 +570,7 @@ class EdgeClient:
         except (state_io.ChunkError, ValueError, NotImplementedError):
             st = None                  # manifest/template mismatch
         worker.join()
-        wall = time.perf_counter() - t0
+        wall = oclock.monotonic() - t0
 
         try:
             if st is None and info["err"] is None and restorer.v2_payload \
@@ -522,6 +609,15 @@ class EdgeClient:
             # miss / dead / corrupt: resolve followers, report like
             # _fetch so the caller walks down the plan — never a hang
             kind = info["err"][0] if info["err"] else "miss"
+            if kind == "corrupt":
+                # per-chunk digest caught a corrupt stream: freeze the
+                # flight ring with the failure context before degrading
+                # to the next attempt
+                FLIGHT.trigger(CHUNK_ERROR, client=self.name,
+                               peer=peer_id or "server",
+                               key=cand.digest.hex(),
+                               chunks=info["chunks"],
+                               error=repr(info["err"][1]))
             resp = {"ok": False, "blob": None, "_chunks": info["chunks"]}
             if kind == "dead":
                 resp["dead"] = True
@@ -539,7 +635,7 @@ class EdgeClient:
                 dt_out = info["dt"] if info["hdr"] is not None \
                     else net.rtt_s
             else:
-                dt_out = time.perf_counter() - t0
+                dt_out = oclock.monotonic() - t0
             return resp, dt_out, info["nb"], False, template
         finally:
             if lead is not None:       # never leave followers hanging

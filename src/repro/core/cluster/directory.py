@@ -47,6 +47,8 @@ from repro.core.cluster.peer import CachePeer, PeerTransport
 from repro.core.cluster.placement import HotKeyTracker, PlacementPolicy
 from repro.core.net.estimator import LinkEstimator
 from repro.core.transport import TransportError
+from repro.obs.flight import FLIGHT, PEER_DEATH
+from repro.obs.trace import SPANS_KEY, inject_trace, phase
 
 
 class PeerLink:
@@ -212,12 +214,31 @@ class PeerDirectory:
     def request(self, peer_id: str, op: str, payload: dict,
                 advance_clock: bool = True):
         """Route one request to a peer; a transport failure marks the
-        peer suspect and re-raises :class:`TransportError`."""
+        peer suspect and re-raises :class:`TransportError`.
+
+        Tracing rides along when the calling thread has an active span
+        (``phase`` is a no-op otherwise): the request opens a
+        ``net.<op>`` child span, injects its context into the payload
+        envelope, and folds the peer's returned ``_spans`` descriptors
+        back under it — one tree across both processes."""
         try:
-            return self.links[peer_id].transport.request(
-                op, payload, advance_clock)
-        except TransportError:
+            with phase(f"net.{op}", peer=peer_id) as sp:
+                if sp:
+                    payload = inject_trace(payload, sp)
+                resp, dt, nb = self.links[peer_id].transport.request(
+                    op, payload, advance_clock)
+                if sp:
+                    sp.set(bytes=nb, transfer_s=dt).end()
+                    remote = resp.get(SPANS_KEY) \
+                        if isinstance(resp, dict) else None
+                    if remote:
+                        sp._tracer.fold_remote(sp, remote,
+                                               proc=f"peer:{peer_id}")
+                return resp, dt, nb
+        except TransportError as e:
             self.mark_suspect(peer_id)
+            FLIGHT.trigger(PEER_DEATH, peer=peer_id, op=op,
+                           error=repr(e))
             raise
 
     def request_stream(self, peer_id: str, op: str, payload: dict,
@@ -231,10 +252,23 @@ class PeerDirectory:
             raise TransportError(
                 f"peer {peer_id!r} transport does not stream")
         try:
-            return tr.request_stream(op, payload, on_chunk,
-                                     advance_clock=advance_clock)
-        except TransportError:
+            with phase(f"net.{op}", peer=peer_id, stream=True) as sp:
+                if sp:
+                    payload = inject_trace(payload, sp)
+                header, dt, nb = tr.request_stream(
+                    op, payload, on_chunk, advance_clock=advance_clock)
+                if sp:
+                    sp.set(bytes=nb, transfer_s=dt).end()
+                    remote = header.get(SPANS_KEY) \
+                        if isinstance(header, dict) else None
+                    if remote:
+                        sp._tracer.fold_remote(sp, remote,
+                                               proc=f"peer:{peer_id}")
+                return header, dt, nb
+        except TransportError as e:
             self.mark_suspect(peer_id)
+            FLIGHT.trigger(PEER_DEATH, peer=peer_id, op=op,
+                           error=repr(e))
             raise
 
     def est_fetch_s(self, peer_id: str, nbytes: int) -> float:

@@ -32,6 +32,31 @@ class Breakdown:
         d["ttlt"] = self.ttlt
         return d
 
+    @classmethod
+    def from_spans(cls, spans: Sequence[dict]) -> "Breakdown":
+        """Project a span tree onto the Table-3 columns.
+
+        Spans that belong in the breakdown carry a ``component``
+        attribute naming their column (``token``/``bloom``/``redis``/
+        ``p_decode``/``r_decode``/``sample``); durations sum per
+        column. Spans without the attribute (structural parents,
+        folded remote server spans) are ignored, so nesting never
+        double-counts. This is how ``InferResult.wall`` is derived
+        once tracing is on — the span tree is the single source of
+        truth and the Breakdown is a view of it."""
+        bd = cls()
+        for d in spans:
+            attrs = d.get("attrs") or {}
+            comp = attrs.get("component")
+            if comp in COMPONENTS:
+                # ``component_s`` overrides the span's wall duration
+                # when the accountable time differs from the block time
+                # (e.g. a streamed fetch span covers transfer+restore
+                # but only the transfer-visible part is Table-3 redis)
+                dur = float(attrs.get("component_s", d["dur"]))
+                setattr(bd, comp, getattr(bd, comp) + dur)
+        return bd
+
 
 @dataclass
 class InferResult:
@@ -50,6 +75,7 @@ class InferResult:
     actual_fetch_s: float = 0.0    # what the fetch actually cost (sim/wall)
     fetch_attempts: int = 0        # GETs tried (Bloom FPs / dead peers + hit)
     extra: Dict[str, float] = field(default_factory=dict)
+    trace_id: str = ""             # span tree behind this result (obs)
 
 
 @dataclass

@@ -111,6 +111,12 @@ class DaemonHandler:
 
     def handle(self, op: str, payload: dict) -> dict:
         if op == "health":
+            # the fleet-telemetry hook: the process-wide metrics
+            # registry (peer_ops_total, peer_op_seconds, ...) and
+            # flight-recorder occupancy ride the liveness probe, so
+            # the supervisor aggregates per-peer series with zero
+            # extra round trips
+            from repro.obs import FLIGHT, REGISTRY
             return {"ok": True, "peer": self.peer.peer_id,
                     "pid": os.getpid(),
                     "stored_bytes": self.peer.server.stored_bytes,
@@ -118,7 +124,9 @@ class DaemonHandler:
                     "gossip": dict(self.peer.gossip_stats),
                     "repl": self.peer.replication.snapshot(),
                     "links": {pid: list(snap) for pid, snap in
-                              self.estimator.snapshot_all().items()}}
+                              self.estimator.snapshot_all().items()},
+                    "metrics": REGISTRY.snapshot(),
+                    "flight": FLIGHT.snapshot()}
         if op == "set_neighbors":
             with self._nlock:
                 self.neighbors = {

@@ -21,9 +21,13 @@ truncated frame, never a hang.
 from __future__ import annotations
 
 import asyncio
+import os
 import threading
 from typing import Optional, Set
 
+from repro.obs import REGISTRY, clock
+from repro.obs.flight import FLIGHT
+from repro.obs.trace import SPANS_KEY, Tracer, extract_trace
 from repro.core.net import frames
 
 
@@ -49,6 +53,18 @@ class PeerServer:
         self.throttle_bps = throttle_bps
         self.stats = {"connections": 0, "requests": 0, "frame_errors": 0,
                       "bytes_in": 0, "bytes_out": 0, "chunks_out": 0}
+        # server-side tracing: requests whose payload carries a
+        # ``_trace`` envelope get a ``peer.<op>`` span (plus any
+        # handler-side ambient phases) returned as relative-time
+        # descriptors under ``_spans`` — the daemon half of the
+        # cross-process span tree. Requests without the envelope take
+        # the untraced fast path and answer without ``_spans``, which
+        # is exactly what a pre-tracing client expects.
+        self.tracer = Tracer(proc=f"pid:{os.getpid()}", max_traces=32)
+        self._m_ops = REGISTRY.counter(
+            "peer_ops_total", "requests served by op", ("op",))
+        self._m_op_secs = REGISTRY.histogram(
+            "peer_op_seconds", "handler wall seconds by op", ("op",))
         self._loop: Optional[asyncio.AbstractEventLoop] = None
         self._server: Optional[asyncio.AbstractServer] = None
         self._thread: Optional[threading.Thread] = None
@@ -101,6 +117,8 @@ class PeerServer:
                     got = await frames.recv_frame_async(reader)
                 except frames.FrameError:
                     self.stats["frame_errors"] += 1
+                    FLIGHT.record("peer.frame_error", host=self.host,
+                                  port=self.port)
                     return             # poisoned stream: drop it
                 if got is None:        # client hung up cleanly
                     return
@@ -123,10 +141,13 @@ class PeerServer:
                     # surprising it with chunk frames would desync every
                     # later response on the connection
                     want_stream = bool(msg.pop("stream", False))
+                    ctx = extract_trace(msg)
                     try:
                         resp = await loop.run_in_executor(
-                            None, self.handle, op, msg)
+                            None, self._dispatch, op, msg, ctx)
                     except Exception as e:   # handler bug -> error reply
+                        FLIGHT.record("peer.op_error", op=str(op),
+                                      error=repr(e))
                         resp = {"ok": False, "error": repr(e)}
                     chunks = resp.pop("chunks", None) \
                         if (want_stream and isinstance(resp, dict)) \
@@ -158,6 +179,39 @@ class PeerServer:
                 writer.close()
             except Exception:
                 pass
+
+    def _dispatch(self, op, payload: dict, ctx) -> dict:
+        """Run the handler on the executor thread, metered. With a
+        trace context (``ctx``) the handler runs under a server-side
+        ``peer.<op>`` span — opened on a *local* trace since the two
+        processes share no clock — and the response carries the
+        finished spans as relative-time descriptors for the client to
+        fold into its own tree."""
+        t0 = clock.monotonic()
+        if ctx is None:
+            try:
+                return self.handle(op, payload)
+            finally:
+                o = str(op)
+                self._m_ops.labels(op=o).inc()
+                self._m_op_secs.labels(op=o).observe(
+                    clock.monotonic() - t0)
+        root = self.tracer.start(
+            f"peer.{op}", attrs={"pid": os.getpid(), "op": str(op)})
+        try:
+            with root:                 # ambient: handler phases nest
+                resp = self.handle(op, payload)
+        finally:
+            o = str(op)
+            self._m_ops.labels(op=o).inc()
+            self._m_op_secs.labels(op=o).observe(clock.monotonic() - t0)
+        if isinstance(resp, dict):
+            recorded = self.tracer.trace(root.trace_id) or []
+            resp[SPANS_KEY] = [
+                {"name": d["name"], "rel_s": d["t0"] - root.t0,
+                 "dur_s": d["dur"], "attrs": d["attrs"]}
+                for d in sorted(recorded, key=lambda d: d["t0"])]
+        return resp
 
     async def _send(self, writer: asyncio.StreamWriter, obj,
                     pace: Optional[dict] = None) -> int:

@@ -250,6 +250,29 @@ class PeerSupervisor:
                 out[pid] = False
         return out
 
+    def fleet_metrics(self) -> Dict[str, object]:
+        """Merge every live daemon's metrics snapshot (returned by its
+        ``health`` op) into fleet-wide series, each sample re-labelled
+        with ``peer="<id>"`` — the supervisor's aggregation half of the
+        telemetry pipeline. Dead/unreachable peers simply contribute
+        nothing; the merged dict also carries a ``_fleet`` summary
+        (peers probed / reporting)."""
+        from repro.obs.metrics import merge_snapshots
+        snaps: Dict[str, Dict[str, object]] = {}
+        for pid, pp in self.procs.items():
+            if not pp.alive:
+                continue
+            try:
+                resp = self.request(pid, "health", {}, timeout=2.0)
+            except TransportError:
+                continue
+            if resp.get("ok") and isinstance(resp.get("metrics"), dict):
+                snaps[pid] = resp["metrics"]
+        merged = merge_snapshots(snaps)
+        merged["_fleet"] = {"peers": len(self.procs),
+                            "reporting": len(snaps)}
+        return merged
+
     def check_and_restart(self) -> List[str]:
         """Health-check the fleet; restart every dead peer. Returns the
         ids restarted."""

@@ -143,17 +143,17 @@ class FetchBroker:
 
     @staticmethod
     def _issue(entry: _Inflight, issue) -> None:
-        import time
-        t0 = time.perf_counter()
+        from repro.obs import clock as oclock
+        t0 = oclock.monotonic()
         try:
             entry.result = issue()
         except TransportError as e:      # dead peer: bounded fast-fail,
             entry.result = ({"ok": False, "dead": True,    # charged at
                              "error": repr(e)},            # actual cost
-                            time.perf_counter() - t0, 0)
+                            oclock.monotonic() - t0, 0)
         except Exception as e:           # surface transport errors as misses
             entry.result = ({"ok": False, "error": repr(e)},
-                            time.perf_counter() - t0, 0)
+                            oclock.monotonic() - t0, 0)
         finally:
             entry.event.set()
 

@@ -55,6 +55,10 @@ import jax.numpy as jnp
 from repro.core.chunkfmt import (  # noqa: F401  (re-exported)
     CHUNK_MAGIC, is_chunked, pack_container, split_container,
 )
+# ambient tracing: serialize/restore/per-chunk-digest phases appear in
+# a request's span tree whenever the calling thread holds an active
+# span (no-ops otherwise — the sim hot path pays one getattr)
+from repro.obs.trace import phase
 
 SEQ_LEAVES = {"k", "v", "ckv", "krope"}
 FORMAT_VERSION = 2                     # single-frame payload version
@@ -219,6 +223,22 @@ def extract_state_ranges(cache, n_effs: Sequence[int], meta: bytes,
                          quantize: bool = False, codec: str = "auto",
                          chunk_layers: int = 1
                          ) -> Dict[int, List[bytes]]:
+    """Traced front door for :func:`_extract_state_ranges`: the whole
+    single-pass serialization shows up as one ``state.serialize`` span
+    in the calling request's tree."""
+    with phase("state.serialize", ranges=len(list(n_effs))):
+        return _extract_state_ranges(cache, n_effs, meta, logits=logits,
+                                     compress=compress, level=level,
+                                     quantize=quantize, codec=codec,
+                                     chunk_layers=chunk_layers)
+
+
+def _extract_state_ranges(cache, n_effs: Sequence[int], meta: bytes,
+                          logits: Optional[np.ndarray] = None,
+                          compress: bool = True, level: int = 1,
+                          quantize: bool = False, codec: str = "auto",
+                          chunk_layers: int = 1
+                          ) -> Dict[int, List[bytes]]:
     """ONE serialization pass over ``cache``, emitting a chunk list per
     requested prefix length.
 
@@ -410,22 +430,24 @@ class ChunkedRestorer:
         if self.header is None or self.fed > self.header["n_chunks"]:
             raise ChunkError("chunk beyond the manifest's n_chunks")
         man = self.header["chunks"][self.fed - 1]
-        if len(chunk) != man["nbytes"]:
-            raise ChunkError(
-                f"chunk {self.fed} size {len(chunk)} != manifest "
-                f"{man['nbytes']} (truncated/corrupt stream)")
-        got = hashlib.blake2b(chunk,
-                              digest_size=_CHUNK_DIGEST_BYTES).digest()
-        if got != bytes(man["digest"]):
-            raise ChunkError(f"chunk {self.fed} integrity digest mismatch")
-        try:
-            bufs = msgpack.unpackb(_decompress(chunk), raw=False)
-            arrs = self._decode_pieces(man["pieces"], bufs)
-        except ChunkError:
-            raise
-        except Exception as e:
-            raise ChunkError(
-                f"undecodable chunk {self.fed}: {e!r}") from e
+        with phase("chunk.verify", chunk=self.fed, nbytes=len(chunk)):
+            if len(chunk) != man["nbytes"]:
+                raise ChunkError(
+                    f"chunk {self.fed} size {len(chunk)} != manifest "
+                    f"{man['nbytes']} (truncated/corrupt stream)")
+            got = hashlib.blake2b(
+                chunk, digest_size=_CHUNK_DIGEST_BYTES).digest()
+            if got != bytes(man["digest"]):
+                raise ChunkError(
+                    f"chunk {self.fed} integrity digest mismatch")
+            try:
+                bufs = msgpack.unpackb(_decompress(chunk), raw=False)
+                arrs = self._decode_pieces(man["pieces"], bufs)
+            except ChunkError:
+                raise
+            except Exception as e:
+                raise ChunkError(
+                    f"undecodable chunk {self.fed}: {e!r}") from e
         gid = (man["seg"], int(man["lo"]), int(man["hi"]))
         self._pieces.setdefault(gid, []).extend(arrs)
         self._remaining[gid] -= 1
@@ -621,7 +643,13 @@ def parse_state(blob: bytes, meta: bytes) -> Dict[str, Any]:
     """Decode a state blob (either format) into a payload for
     :func:`restore_state`. v3 containers decode through a
     :class:`ChunkedRestorer`, so both formats share one validation and
-    placement path."""
+    placement path. Shows up as a ``state.parse`` span (with nested
+    ``chunk.verify`` phases for v3) in the calling request's tree."""
+    with phase("state.parse", nbytes=len(blob)):
+        return _parse_state(blob, meta)
+
+
+def _parse_state(blob: bytes, meta: bytes) -> Dict[str, Any]:
     if is_chunked(blob):
         r = ChunkedRestorer(meta)
         for c in split_container(blob):
@@ -651,7 +679,16 @@ def restore_state(payload: Dict[str, Any], template) -> Tuple[Any, int,
     Partial-prefix seq leaves are written into the template on-device
     via ``jax.lax.dynamic_update_slice`` — no host copy of the template
     and no full-leaf rewrite (the old ``np.array(template)`` +
-    full-assign path doubled every leaf through host memory)."""
+    full-assign path doubled every leaf through host memory).
+
+    Shows up as a ``state.restore`` span in the calling request's
+    tree."""
+    with phase("state.restore", n_eff=int(payload.get("n_eff", 0))):
+        return _restore_state(payload, template)
+
+
+def _restore_state(payload: Dict[str, Any], template
+                   ) -> Tuple[Any, int, Optional[np.ndarray]]:
     if "_restorer" in payload:
         return payload["_restorer"].result(template)
     stored = {d["path"]: d for d in payload["leaves"]}

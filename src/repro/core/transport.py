@@ -45,8 +45,38 @@ class InProcTransport:
 
     def _serve(self, op: str, payload: dict) -> dict:
         """The in-proc 'wire': subclasses hook liveness checks here so
-        request and request_stream share one failure contract."""
-        return self.server.handle(op, payload)
+        request and request_stream share one failure contract.
+
+        Trace parity with the TCP path: a ``_trace`` envelope in the
+        payload gets a server-side ``peer.<op>`` span returned as
+        ``_spans`` descriptors, exactly like
+        :meth:`repro.core.net.server.PeerServer._dispatch` — so sim
+        runs produce the same cross-"process" trees the TCP fleet
+        does, and payloads without the envelope are served untouched.
+        """
+        from repro.obs.trace import SPANS_KEY, extract_trace
+        ctx = extract_trace(payload)
+        if ctx is None:
+            return self.server.handle(op, payload)
+        tracer = self._tracer()
+        root = tracer.start(f"peer.{op}", attrs={"op": op})
+        with root:
+            resp = self.server.handle(op, payload)
+        if isinstance(resp, dict):
+            recorded = tracer.trace(root.trace_id) or []
+            resp[SPANS_KEY] = [
+                {"name": d["name"], "rel_s": d["t0"] - root.t0,
+                 "dur_s": d["dur"], "attrs": d["attrs"]}
+                for d in sorted(recorded, key=lambda d: d["t0"])]
+        return resp
+
+    def _tracer(self):
+        tr = getattr(self, "_srv_tracer", None)
+        if tr is None:
+            from repro.obs.trace import Tracer
+            tr = self._srv_tracer = Tracer(proc="sim-peer",
+                                           max_traces=32)
+        return tr
 
     def request(self, op: str, payload: dict,
                 advance_clock: bool = True) -> Tuple[dict, float, int]:

@@ -57,7 +57,8 @@ class Gateway:
                  default_quota: TenantQuota = TenantQuota(),
                  quotas: Optional[Dict[str, TenantQuota]] = None,
                  model_name: str = "repro-edge-cache",
-                 request_timeout_s: float = 120.0):
+                 request_timeout_s: float = 120.0,
+                 tracer=None):
         self.tokenizer = tokenizer or WordHashTokenizer(model.cfg.vocab)
         self.admission = AdmissionController(
             max_inflight=max_inflight or batch_size,
@@ -66,7 +67,8 @@ class Gateway:
         self.engine = GatewayEngine(
             model, params, batch_size=batch_size, max_len=max_len,
             fabric=fabric, cache_cfg=cache_cfg, policy=policy,
-            cache_dtype=cache_dtype, admission=self.admission)
+            cache_dtype=cache_dtype, admission=self.admission,
+            tracer=tracer)
         self.server = GatewayServer(
             self.engine, self.admission, self.tokenizer,
             host=host, port=port, model_name=model_name,
@@ -76,6 +78,11 @@ class Gateway:
     @property
     def port(self) -> int:
         return self.server.port
+
+    @property
+    def tracer(self):
+        """The gateway-wide span store behind ``GET /v1/traces/<id>``."""
+        return self.engine.tracer
 
     @property
     def url(self) -> str:

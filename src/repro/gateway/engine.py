@@ -42,6 +42,8 @@ from repro.core.metrics import ServingReport, merge_peer_stats
 from repro.core.session_pool import FetchBroker
 from repro.core.transport import TransportError
 from repro.gateway.protocol import ParsedRequest
+from repro.obs import REGISTRY, clock as oclock
+from repro.obs.trace import NULL_SPAN, NULL_TRACER, Tracer, current_span
 from repro.serving.scheduler import Request, Scheduler
 
 
@@ -63,9 +65,13 @@ class GatewayJob:
         self.loop = loop
         self.q = q
         self.rid = f"cmpl-{next(self._ids)}"
-        self.created = int(time.time())
+        self.created = int(oclock.wall())
         self.matched = 0
         self.served_by = ""
+        # root request span (opened by the HTTP front door, ended there
+        # after the response is written); the engine thread parents its
+        # resolve/slot spans onto ``span.ctx`` — explicit handoff
+        self.span = None
 
     def push(self, event: tuple) -> None:
         try:
@@ -88,7 +94,9 @@ class PrefixFetcher:
 
     def __init__(self, model, cache_dtype, max_len: int, view,
                  cache_cfg: CacheConfig,
-                 broker: Optional[FetchBroker] = None):
+                 broker: Optional[FetchBroker] = None,
+                 tracer: Optional[Tracer] = None):
+        self.tracer = tracer or NULL_TRACER
         self.model = model
         self.cache_dtype = cache_dtype
         self.max_len = max_len
@@ -124,7 +132,7 @@ class PrefixFetcher:
 
     def sync(self) -> None:
         now = self.clock.now() if self.clock is not None \
-            else time.monotonic()
+            else oclock.monotonic()
         if self.directory is not None:
             self.directory.maybe_sync(now)
             return
@@ -182,15 +190,22 @@ class PrefixFetcher:
 
     def _get(self, att: FetchAttempt):
         cand, peer_id = att.key, att.peer_id
+        # the broker leader runs issue() on a helper thread; hand the
+        # caller's ambient span across explicitly so the directory's
+        # per-attempt net spans (and the peer's folded remote spans)
+        # land in this request's trace
+        caller = current_span()
         if peer_id is not None:
             def issue():
-                return self.directory.request(peer_id, "get",
-                                              {"key": cand.digest})
+                with self.tracer.attach(caller):
+                    return self.directory.request(peer_id, "get",
+                                                  {"key": cand.digest})
             key = (peer_id, cand.digest)
         else:
             def issue():
-                return self.transport.request("get",
-                                              {"key": cand.digest})
+                with self.tracer.attach(caller):
+                    return self.transport.request("get",
+                                                  {"key": cand.digest})
             key = cand.digest
         return self.broker.fetch(key, issue, prep=self._template)
 
@@ -256,8 +271,9 @@ class PrefixFetcher:
     def flush_uploads(self, timeout_s: float = 10.0) -> bool:
         """Block until every queued PUT has drained (benchmarks that
         want bytes_up to be final). Returns False on timeout."""
-        deadline = time.monotonic() + timeout_s
-        while self._upq.unfinished_tasks and time.monotonic() < deadline:
+        deadline = oclock.monotonic() + timeout_s
+        while self._upq.unfinished_tasks \
+                and oclock.monotonic() < deadline:
             time.sleep(0.01)
         return not self._upq.unfinished_tasks
 
@@ -284,7 +300,8 @@ class GatewayEngine:
                  max_len: int = 512, fabric=None,
                  cache_cfg: CacheConfig = CacheConfig(),
                  policy: Optional[FetchPolicy] = None,
-                 cache_dtype=None, admission=None):
+                 cache_dtype=None, admission=None,
+                 tracer: Optional[Tracer] = None):
         if policy is None:
             policy = FetchPolicy(transfer="blocking")
         if policy.transfer != "blocking" or policy.overlap:
@@ -305,6 +322,17 @@ class GatewayEngine:
         self.policy = policy
         self.cache_dtype = cache_dtype
         self.admission = admission
+        # one tracer for the whole gateway process: HTTP front door,
+        # engine thread, scheduler, and fetcher all mint spans here, so
+        # GET /v1/traces/<rid> resolves one complete tree
+        self.tracer = tracer or Tracer(proc="gateway", max_traces=128)
+        self._m_ttft = REGISTRY.histogram(
+            "gateway_ttft_seconds", "submit-to-first-token per request")
+        self._m_latency = REGISTRY.histogram(
+            "gateway_request_seconds", "submit-to-finish per request")
+        self._m_done = REGISTRY.counter(
+            "gateway_requests_finished_total",
+            "requests finished by the engine", ("reason",))
         self.inbox: "queue.Queue[GatewayJob]" = queue.Queue()
         self._live: Dict[int, List] = {}      # req_id -> [job, req, sent]
         self._stop = threading.Event()
@@ -353,18 +381,19 @@ class GatewayEngine:
                                         self.max_len, self.batch_size,
                                         cache_dtype=self.cache_dtype)
             self.sched = Scheduler(self.engine,
-                                   on_prefill=self._on_prefill)
+                                   on_prefill=self._on_prefill,
+                                   tracer=self.tracer)
             if self.fabric is not None:
                 view = self.fabric.directory()
                 self.fetcher = PrefixFetcher(
                     self.model, self.engine.cache_dtype, self.max_len,
-                    view, self.cache_cfg)
+                    view, self.cache_cfg, tracer=self.tracer)
         except BaseException as e:            # noqa: BLE001
             self.startup_error = e
             self.ready.set()
             return
         self.ready.set()
-        self._t0 = time.perf_counter()
+        self._t0 = oclock.monotonic()
         while not self._stop.is_set():
             drained = self._drain_inbox()
             if self.sched.has_work:
@@ -395,22 +424,32 @@ class GatewayEngine:
         try:
             segs = job.segments
             n = len(segs.token_ids)
+            pctx = getattr(job.span, "ctx", None)
             cache1, matched, logits, served = None, 0, None, ""
             if self.fetcher is not None:
-                self.fetcher.sync()
-                cache1, matched, logits, served = \
-                    self.fetcher.resolve(segs)
+                rs = (self.tracer.start("gw.resolve", parent=pctx,
+                                        attrs={"prompt_tokens": n})
+                      if pctx is not None else NULL_SPAN)
+                with rs:               # ambient: attempt spans nest here
+                    self.fetcher.sync()
+                    cache1, matched, logits, served = \
+                        self.fetcher.resolve(segs)
+                    rs.set(matched=matched, served_by=served)
             req = Request(
                 tokens=np.asarray(segs.token_ids, np.int32),
                 max_new_tokens=job.parsed.max_tokens,
                 tenant=job.parsed.tenant,
                 cache1=cache1, n_prefix=matched,
+                trace=pctx,
                 # prefix logits only mean "skip prefill entirely" on a
                 # FULL hit; a partial hit resumes from `matched` and
                 # recomputes the suffix
                 prefix_logits=(logits if matched == n
                                and logits is not None else None))
             rid = self.sched.submit(req)
+            if pctx is not None:
+                # the request id doubles as a trace lookup key
+                self.tracer.alias(job.rid, pctx.trace_id)
             job.matched, job.served_by = matched, served
             self._live[rid] = [job, req, 0]
         except Exception as e:
@@ -444,11 +483,17 @@ class GatewayEngine:
                 lat = req.stats.finish_t - req.stats.submit_t
                 if self.admission is not None:
                     self.admission.release(job.parsed.tenant, lat)
+                self._m_ttft.observe(req.stats.ttft)
+                self._m_latency.observe(lat)
+                self._m_done.labels(
+                    reason=req.stats.finish_reason).inc()
                 job.push(("done", req.stats.finish_reason,
                           {"matched_tokens": job.matched,
                            "served_by": job.served_by,
                            "ttft_s": req.stats.ttft,
-                           "latency_s": lat}))
+                           "latency_s": lat,
+                           "trace_id": getattr(job.span, "trace_id",
+                                               "")}))
                 finished.append(rid)
         for rid in finished:
             del self._live[rid]
@@ -467,7 +512,7 @@ class GatewayEngine:
         the same vocabulary as the SessionPool benchmarks."""
         reqs = [r.stats for r in self.sched.done] \
             if self.sched is not None else []
-        wall = (time.perf_counter() - self._t0) if self._t0 else 0.0
+        wall = (oclock.monotonic() - self._t0) if self._t0 else 0.0
         shed = self.admission.shed_counts() \
             if self.admission is not None else {}
         per_peer = self.fetcher.peer_stats() \

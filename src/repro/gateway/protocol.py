@@ -150,9 +150,14 @@ def _usage(n_prompt: int, n_out: int) -> dict:
 
 
 def _cache_meta(meta: dict) -> dict:
-    """Non-OpenAI extension: how the prompt cache served this request."""
-    return {"matched_tokens": int(meta.get("matched_tokens", 0)),
-            "served_by": meta.get("served_by", "")}
+    """Non-OpenAI extension: how the prompt cache served this request,
+    plus the trace id ``GET /v1/traces/<id>`` resolves (the request id
+    works there too — the gateway aliases it)."""
+    out = {"matched_tokens": int(meta.get("matched_tokens", 0)),
+           "served_by": meta.get("served_by", "")}
+    if meta.get("trace_id"):
+        out["trace_id"] = meta["trace_id"]
+    return out
 
 
 def completion_response(tok, rid: str, created: int, model: str,

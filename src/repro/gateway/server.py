@@ -3,27 +3,38 @@
 Hand-rolled on ``asyncio.start_server`` in the same shape as
 :class:`~repro.core.net.server.PeerServer` (event loop on a daemon
 thread, OS-assigned ephemeral port read back after bind, graceful
-drain on close) — no HTTP framework dependency. Every connection
-serves exactly one request (``Connection: close``), which keeps the
-parser honest and matches the short-lived clients the load generator
-models.
+drain on close) — no HTTP framework dependency. Connections are
+HTTP/1.1 **keep-alive**: sequential (pipelined) requests on one socket
+are served in order until the client sends ``Connection: close`` or
+hangs up; SSE responses carry no ``Content-Length``, so a streamed
+reply is the connection's last. Requests sharing a connection share a
+span *link* — each root span carries ``conn``/``seq`` attributes plus
+a ``follows`` edge to the previous request's root span.
 
 Routes:
 
 * ``POST /v1/completions``        — OpenAI text completion (+SSE)
 * ``POST /v1/chat/completions``   — OpenAI chat completion (+SSE)
 * ``GET  /v1/models``             — the one served model
+* ``GET  /v1/traces/<id>``        — span tree by trace id or request id
+* ``GET  /v1/flight``             — flight-recorder ring + dumps
 * ``GET  /healthz``               — liveness + slot counts
-* ``GET  /metrics``               — ServingReport + admission snapshot
+* ``GET  /metrics``               — Prometheus text exposition 0.0.4
+* ``GET  /metrics.json``          — ServingReport + admission snapshot
 
 The handler path never touches JAX: parse -> validate -> tokenize ->
 admit (429/503 + ``Retry-After`` on refusal) -> hand a
 :class:`GatewayJob` to the engine thread -> relay its event queue back
-as JSON or SSE frames.
+as JSON or SSE frames. Every accepted completion opens a ``gw.request``
+root span (accept -> parse -> admission -> queue -> prefill -> first
+token -> last token live under it as children minted by the engine
+thread and scheduler) that ``GET /v1/traces/<request-id>`` resolves
+afterwards.
 """
 from __future__ import annotations
 
 import asyncio
+import itertools
 import json
 import math
 import threading
@@ -32,6 +43,10 @@ from typing import Optional
 from repro.gateway import protocol
 from repro.gateway.admission import AdmissionController, ShedError
 from repro.gateway.engine import GatewayClosed, GatewayEngine, GatewayJob
+from repro.obs import FLIGHT, REGISTRY, clock as oclock
+from repro.obs.export import span_tree
+from repro.obs.flight import SHED
+from repro.obs.trace import NULL_SPAN
 
 REASONS = {200: "OK", 400: "Bad Request", 404: "Not Found",
            405: "Method Not Allowed", 408: "Request Timeout",
@@ -67,7 +82,11 @@ class GatewayServer:
         self.request_timeout_s = request_timeout_s
         self.stats = {"connections": 0, "requests": 0, "streamed": 0,
                       "shed_429": 0, "shed_503": 0, "errors_400": 0,
-                      "errors_5xx": 0}
+                      "errors_5xx": 0, "keepalive_reuses": 0}
+        self._conn_ids = itertools.count()
+        self._m_http = REGISTRY.counter(
+            "gateway_http_requests_total",
+            "HTTP responses by status code", ("code",))
         self._loop: Optional[asyncio.AbstractEventLoop] = None
         self._server: Optional[asyncio.AbstractServer] = None
         self._thread: Optional[threading.Thread] = None
@@ -177,9 +196,10 @@ class GatewayServer:
         return method.upper(), path.split("?", 1)[0], headers, body
 
     def _head(self, status: int, ctype: str, length: Optional[int],
-              extra: Optional[dict] = None) -> bytes:
+              extra: Optional[dict] = None, close: bool = True) -> bytes:
         lines = [f"HTTP/1.1 {status} {REASONS.get(status, 'Unknown')}",
-                 f"Content-Type: {ctype}", "Connection: close"]
+                 f"Content-Type: {ctype}",
+                 "Connection: " + ("close" if close else "keep-alive")]
         if length is not None:
             lines.append(f"Content-Length: {length}")
         for k, v in (extra or {}).items():
@@ -188,32 +208,58 @@ class GatewayServer:
 
     async def _respond(self, writer, status: int, body: bytes,
                        ctype: str = "application/json",
-                       extra: Optional[dict] = None) -> None:
-        writer.write(self._head(status, ctype, len(body), extra) + body)
+                       extra: Optional[dict] = None,
+                       close: bool = True) -> None:
+        self._m_http.labels(code=str(status)).inc()
+        writer.write(self._head(status, ctype, len(body), extra,
+                                close=close) + body)
         await writer.drain()
 
     # ------------------------------------------------------------------
     async def _conn(self, reader: asyncio.StreamReader,
                     writer: asyncio.StreamWriter) -> None:
         self.stats["connections"] += 1
+        conn_id = next(self._conn_ids)
+        seq = 0
+        prev_span = ""
         try:
-            try:
-                got = await asyncio.wait_for(self._read_request(reader),
-                                             self.request_timeout_s)
-            except asyncio.TimeoutError:
-                await self._respond(writer, 408, protocol.error_body(
-                    "timed out reading request"))
-                return
-            except _HttpError as e:
-                self.stats["errors_400"] += 1
-                await self._respond(writer, e.status,
-                                    protocol.error_body(e.message))
-                return
-            if got is None:
-                return
-            method, path, headers, body = got
-            self.stats["requests"] += 1
-            await self._route(writer, method, path, headers, body)
+            while True:
+                try:
+                    got = await asyncio.wait_for(
+                        self._read_request(reader),
+                        self.request_timeout_s)
+                except asyncio.TimeoutError:
+                    if seq == 0:       # idle keep-alive just closes
+                        await self._respond(writer, 408,
+                                            protocol.error_body(
+                                                "timed out reading "
+                                                "request"))
+                    return
+                except _HttpError as e:
+                    self.stats["errors_400"] += 1
+                    await self._respond(writer, e.status,
+                                        protocol.error_body(e.message))
+                    return
+                if got is None:
+                    return             # client hung up between requests
+                method, path, headers, body = got
+                self.stats["requests"] += 1
+                if seq:
+                    self.stats["keepalive_reuses"] += 1
+                # HTTP/1.1 default: keep the socket for the next
+                # pipelined request unless the client opts out (or we
+                # are draining)
+                keep = (headers.get("connection", "").lower() != "close"
+                        and not self._stopping)
+                link = {"conn": conn_id, "seq": seq,
+                        "follows": prev_span}
+                span_id, keep = await self._route(
+                    writer, method, path, headers, body, keep, link)
+                if span_id:
+                    prev_span = span_id
+                seq += 1
+                if not keep:
+                    return
         except (ConnectionError, asyncio.CancelledError):
             pass
         except Exception as e:         # keep the front door up
@@ -230,86 +276,159 @@ class GatewayServer:
                 pass
 
     async def _route(self, writer, method: str, path: str,
-                     headers: dict, body: bytes) -> None:
+                     headers: dict, body: bytes, keep: bool,
+                     link: dict):
+        """Dispatch one request; returns ``(root_span_id, keep)`` so
+        the connection loop can chain span links and honor downgrades
+        (SSE has no Content-Length, so it closes the connection)."""
         if path in ("/v1/completions", "/v1/chat/completions"):
             if method != "POST":
                 await self._respond(
                     writer, 405,
                     protocol.error_body(f"{method} not allowed"),
-                    extra={"Allow": "POST"})
-                return
+                    extra={"Allow": "POST"}, close=not keep)
+                return None, keep
             kind = "chat" if path.startswith("/v1/chat") else "completion"
-            await self._complete(writer, kind, headers, body)
+            return await self._complete(writer, kind, headers, body,
+                                        keep, link)
         elif path == "/healthz" and method == "GET":
             await self._respond(writer, 200, json.dumps({
                 "ok": self.engine.alive, "model": self.model_name,
                 "slots": self.engine.batch_size,
-                "max_len": self.engine.max_len}).encode())
+                "max_len": self.engine.max_len}).encode(),
+                close=not keep)
         elif path == "/v1/models" and method == "GET":
             await self._respond(writer, 200, json.dumps({
                 "object": "list",
                 "data": [{"id": self.model_name, "object": "model",
-                          "owned_by": "repro"}]}).encode())
+                          "owned_by": "repro"}]}).encode(),
+                close=not keep)
         elif path == "/metrics" and method == "GET":
+            # Prometheus text exposition of the process-wide registry
+            await self._respond(
+                writer, 200, REGISTRY.render().encode(),
+                ctype="text/plain; version=0.0.4; charset=utf-8",
+                close=not keep)
+        elif path == "/metrics.json" and method == "GET":
             snap = {"report": self.engine.report().as_dict(),
                     "admission": self.admission.snapshot(),
                     "http": dict(self.stats)}
             if self.engine.fetcher is not None:
                 snap["fetcher"] = dict(self.engine.fetcher.stats)
             await self._respond(writer, 200,
-                                json.dumps(snap, default=str).encode())
+                                json.dumps(snap, default=str).encode(),
+                                close=not keep)
+        elif path.startswith("/v1/traces/") and method == "GET":
+            tid = path[len("/v1/traces/"):]
+            spans = self.engine.tracer.trace(tid)
+            if not spans:
+                await self._respond(writer, 404, protocol.error_body(
+                    f"unknown trace {tid!r}", etype="not_found"),
+                    close=not keep)
+            else:
+                await self._respond(writer, 200, json.dumps({
+                    "trace_id": spans[0]["trace"],
+                    "n_spans": len(spans),
+                    "spans": spans,
+                    "tree": span_tree(spans)},
+                    default=str).encode(), close=not keep)
+        elif path == "/v1/flight" and method == "GET":
+            await self._respond(
+                writer, 200,
+                json.dumps({"snapshot": FLIGHT.snapshot(),
+                            "dumps": FLIGHT.dumps()},
+                           default=str).encode(),
+                close=not keep)
         else:
             await self._respond(writer, 404, protocol.error_body(
-                f"no route for {method} {path}", etype="not_found"))
+                f"no route for {method} {path}", etype="not_found"),
+                close=not keep)
+        return None, keep
 
     # ------------------------------------------------------------------
     async def _complete(self, writer, kind: str, headers: dict,
-                        body: bytes) -> None:
+                        body: bytes, keep: bool, link: dict):
+        """One completion request under a ``gw.request`` root span:
+        accept -> parse -> admission -> queue -> (engine-side resolve /
+        prefill / first token / last token as children). Returns
+        ``(root_span_id, keep)``."""
+        tr = self.engine.tracer
+        attrs = {"route": kind, "conn": link["conn"],
+                 "seq": link["seq"]}
+        if link.get("follows"):
+            # per-connection span link: sequential requests on one
+            # keep-alive socket chain root -> root
+            attrs["follows"] = link["follows"]
+        root = tr.start("gw.request", attrs=attrs)
+        t_parse = oclock.monotonic()
         try:
             parsed = self._parse(kind, headers, body)
+            segments = protocol.tokenize_request(self.tok, parsed)
         except protocol.BadRequest as e:
             self.stats["errors_400"] += 1
+            root.set(status=400).end()
             await self._respond(writer, 400,
-                                protocol.error_body(str(e)))
-            return
-        segments = protocol.tokenize_request(self.tok, parsed)
+                                protocol.error_body(str(e)),
+                                close=not keep)
+            return root.span_id or None, keep
+        tr.add("gw.parse", oclock.monotonic() - t_parse, parent=root,
+               t0=t_parse, component="token",
+               prompt_tokens=len(segments.token_ids))
         n = len(segments.token_ids)
         if n + parsed.max_tokens > self.engine.max_len:
             self.stats["errors_400"] += 1
+            root.set(status=400).end()
             await self._respond(writer, 400, protocol.error_body(
                 f"prompt ({n} tokens) + max_tokens "
                 f"({parsed.max_tokens}) exceeds the engine context of "
-                f"{self.engine.max_len} tokens"))
-            return
+                f"{self.engine.max_len} tokens"), close=not keep)
+            return root.span_id or None, keep
 
+        t_admit = oclock.monotonic()
         try:
             self.admission.admit(parsed.tenant)
         except ShedError as e:
             self.stats["shed_429" if e.status == 429 else "shed_503"] += 1
+            FLIGHT.trigger(SHED, tenant=parsed.tenant,
+                           status=e.status, retry_after_s=e.retry_after_s)
+            root.set(status=e.status, shed=True).end()
             etype = "rate_limit_exceeded" if e.status == 429 \
                 else "overloaded"
             await self._respond(
                 writer, e.status,
                 protocol.error_body(str(e), etype=etype, code=e.status),
                 extra={"Retry-After":
-                       str(int(math.ceil(e.retry_after_s)))})
-            return
+                       str(int(math.ceil(e.retry_after_s)))},
+                close=not keep)
+            return root.span_id or None, keep
+        tr.add("gw.admission", oclock.monotonic() - t_admit,
+               parent=root, t0=t_admit, tenant=parsed.tenant)
 
         job = GatewayJob(parsed, segments, asyncio.get_running_loop(),
                          asyncio.Queue())
+        job.span = root if root is not NULL_SPAN else None
         try:
             self.engine.submit(job)
         except GatewayClosed:
             self.admission.release(parsed.tenant)
+            root.set(status=503).end()
             await self._respond(writer, 503, protocol.error_body(
                 "engine is shutting down", etype="overloaded"),
-                extra={"Retry-After": "5"})
-            return
-        if parsed.stream:
-            self.stats["streamed"] += 1
-            await self._stream_response(writer, job, kind, n)
-        else:
-            await self._unary_response(writer, job, kind, n)
+                extra={"Retry-After": "5"}, close=not keep)
+            return root.span_id or None, keep
+        try:
+            if parsed.stream:
+                # SSE has no Content-Length: this response ends the
+                # connection, so the loop must not read another request
+                keep = False
+                self.stats["streamed"] += 1
+                await self._stream_response(writer, job, kind, n)
+            else:
+                await self._unary_response(writer, job, kind, n,
+                                           close=not keep)
+        finally:
+            root.set(rid=job.rid, tenant=parsed.tenant).end()
+        return root.span_id or None, keep
 
     def _parse(self, kind: str, headers: dict,
                body: bytes) -> protocol.ParsedRequest:
@@ -331,7 +450,8 @@ class GatewayServer:
         return await asyncio.wait_for(q.get(), self.request_timeout_s)
 
     async def _unary_response(self, writer, job: GatewayJob, kind: str,
-                              n_prompt: int) -> None:
+                              n_prompt: int,
+                              close: bool = True) -> None:
         tokens, finish, meta = [], "", {}
         try:
             while True:
@@ -344,21 +464,23 @@ class GatewayServer:
                 else:                  # ("error", message)
                     self.stats["errors_5xx"] += 1
                     await self._respond(writer, 500, protocol.error_body(
-                        ev[1], etype="internal_error"))
+                        ev[1], etype="internal_error"), close=close)
                     return
         except asyncio.TimeoutError:
             self.stats["errors_5xx"] += 1
             await self._respond(writer, 504, protocol.error_body(
-                "generation timed out", etype="timeout"))
+                "generation timed out", etype="timeout"), close=close)
             return
         build = protocol.chat_response if kind == "chat" \
             else protocol.completion_response
         payload = build(self.tok, job.rid, job.created, self.model_name,
                         tokens, n_prompt, finish, meta)
-        await self._respond(writer, 200, json.dumps(payload).encode())
+        await self._respond(writer, 200, json.dumps(payload).encode(),
+                            close=close)
 
     async def _stream_response(self, writer, job: GatewayJob, kind: str,
                                n_prompt: int) -> None:
+        self._m_http.labels(code="200").inc()
         writer.write(self._head(200, "text/event-stream", None,
                                 {"Cache-Control": "no-cache"}))
         await writer.drain()

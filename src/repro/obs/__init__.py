@@ -1,0 +1,37 @@
+"""Observability substrate: tracing, metrics, export, flight recorder.
+
+This package is deliberately **JAX-free** (asserted by
+``tests/test_obs.py``): the peer daemons, the gateway's HTTP thread,
+and the supervisor all import it, and none of them may pay a JAX
+import. Everything here is stdlib + thread-safe.
+
+Modules
+-------
+* :mod:`repro.obs.clock`   — the one monotonic/wall clock pair every
+  serving-path timing goes through (mockable in tests).
+* :mod:`repro.obs.trace`   — ``Tracer``/``Span``: per-request span
+  trees with explicit cross-thread and cross-process handoff. Span
+  names reuse the paper's Table-3 vocabulary (``token``, ``bloom``,
+  ``redis``, ``p_decode``, ``r_decode``) so a request's wall
+  :class:`~repro.core.metrics.Breakdown` is a *projection* of its span
+  tree, not a parallel bookkeeping path.
+* :mod:`repro.obs.metrics` — counter/gauge/histogram registry with
+  Prometheus text exposition (``GET /metrics`` on the gateway).
+* :mod:`repro.obs.export`  — Chrome/Perfetto ``traceEvents`` JSON and
+  a structured JSONL event log.
+* :mod:`repro.obs.flight`  — bounded ring-buffer flight recorder that
+  dumps the last N events on fetch-plan exhaustion, ChunkError, shed,
+  or peer death.
+"""
+from repro.obs import clock  # noqa: F401
+from repro.obs.flight import FLIGHT, FlightRecorder  # noqa: F401
+from repro.obs.metrics import (  # noqa: F401
+    REGISTRY, Counter, Gauge, Histogram, MetricsRegistry,
+)
+from repro.obs.trace import (  # noqa: F401
+    NULL_TRACER, Span, SpanContext, Tracer, extract_trace, inject_trace,
+    phase,
+)
+from repro.obs.export import (  # noqa: F401
+    perfetto_trace, write_jsonl, write_perfetto,
+)

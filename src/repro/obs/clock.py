@@ -1,0 +1,69 @@
+"""The one clock the serving path tells time by.
+
+Every wall timing in ``client.py``, ``session_pool.py`` and
+``gateway/engine.py`` goes through :func:`monotonic` / :func:`wall`
+instead of scattering ``time.time()`` / ``time.perf_counter()`` call
+sites — so all durations share one monotonic source (durations from
+``time.time()`` jump under NTP slew) and tests can freeze time with
+:func:`mocked` instead of sleeping.
+
+The default sources are ``time.perf_counter`` (monotonic, highest
+resolution available) and ``time.time`` (epoch seconds, for absolute
+timestamps in logs/dumps only — never for durations).
+"""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+
+_mono = time.perf_counter
+_wall = time.time
+
+
+def monotonic() -> float:
+    """Seconds on the process-wide monotonic clock. Use for every
+    duration and span timestamp."""
+    return _mono()
+
+
+def wall() -> float:
+    """Epoch seconds. Use only for absolute "when did this happen"
+    stamps (flight-recorder dumps, response ``created`` fields)."""
+    return _wall()
+
+
+class MockClock:
+    """A hand-advanced clock for tests: install with :func:`mocked`."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = float(t)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> "MockClock":
+        self.t += dt
+        return self
+
+    # duck-compatibility with repro.core.netsim clocks
+    def now(self) -> float:
+        return self.t
+
+
+def set_sources(mono=None, wall=None) -> None:
+    """Swap the time sources (``None`` restores the default)."""
+    global _mono, _wall
+    _mono = mono or time.perf_counter
+    _wall = wall or time.time
+
+
+@contextmanager
+def mocked(clock: MockClock = None):
+    """Freeze both sources to a :class:`MockClock` for the duration of
+    the ``with`` block; yields the clock."""
+    clock = clock or MockClock()
+    set_sources(clock, clock)
+    try:
+        yield clock
+    finally:
+        set_sources()

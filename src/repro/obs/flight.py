@@ -1,0 +1,119 @@
+"""Failure flight recorder: a bounded ring buffer of serving events.
+
+Every layer feeds cheap structured events into the process-wide
+:data:`FLIGHT` ring (``FLIGHT.record("fetch.attempt", peer=...,
+bytes=...)``). Nothing is written anywhere until something goes wrong:
+on a *trigger* — fetch-plan exhaustion, a :class:`ChunkError`
+(corrupt chunk digest), an admission shed, or a peer death — the
+recorder freezes the last N events into a **dump**: the black-box
+picture of what the fabric was doing in the seconds before the
+failure.
+
+A dump is a plain dict::
+
+    {"reason": "chunk_error",          # which trigger fired
+     "at": <epoch s>, "mono": <monotonic s>,
+     "context": {...},                 # trigger-site details (peer,
+                                       #  key, error repr, trace id)
+     "events": [ {"ev": ..., "mono": ..., ...}, ... ]}  # oldest first
+
+Dumps are kept in a small bounded list (``FLIGHT.dumps()``) and can be
+spilled to JSONL via :meth:`FlightRecorder.dump_jsonl`. The gateway
+exposes them at ``GET /v1/flight``; ``tests/test_obs.py`` asserts a
+dump appears when a ChunkError is injected into a streamed fetch.
+
+The ring is lock-guarded but append-only-cheap (a deque rotate), so
+recording on the hot path costs a dict build + deque append — no I/O,
+no formatting.
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from typing import Dict, List, Optional
+
+from repro.obs import clock
+
+# canonical trigger reasons (free-form strings are allowed too)
+PLAN_EXHAUSTED = "plan_exhausted"
+CHUNK_ERROR = "chunk_error"
+SHED = "shed"
+PEER_DEATH = "peer_death"
+
+
+class FlightRecorder:
+    """Bounded ring buffer of events with trigger-time dumps."""
+
+    def __init__(self, capacity: int = 512, max_dumps: int = 32):
+        self.capacity = capacity
+        self._lock = threading.Lock()
+        self._ring: "deque[dict]" = deque(maxlen=capacity)
+        self._dumps: "deque[dict]" = deque(maxlen=max_dumps)
+        self._seq = 0
+        self.enabled = True
+
+    def record(self, ev: str, **fields) -> None:
+        """Append one event to the ring. ``ev`` is a dotted kind
+        (``fetch.attempt``, ``gw.shed``, ``peer.suspect`` …)."""
+        if not self.enabled:
+            return
+        entry = {"ev": ev, "mono": clock.monotonic()}
+        if fields:
+            entry.update(fields)
+        with self._lock:
+            self._seq += 1
+            entry["seq"] = self._seq
+            self._ring.append(entry)
+
+    def trigger(self, reason: str, **context) -> dict:
+        """Freeze the ring into a dump. Returns the dump dict (also
+        retained in :meth:`dumps`)."""
+        with self._lock:
+            events = list(self._ring)
+        dump = {"reason": reason, "at": clock.wall(),
+                "mono": clock.monotonic(),
+                "context": {k: _plain(v) for k, v in context.items()},
+                "events": events}
+        if self.enabled:
+            with self._lock:
+                self._dumps.append(dump)
+        return dump
+
+    def dumps(self) -> List[dict]:
+        with self._lock:
+            return list(self._dumps)
+
+    def last_dump(self) -> Optional[dict]:
+        with self._lock:
+            return self._dumps[-1] if self._dumps else None
+
+    def snapshot(self) -> Dict[str, object]:
+        with self._lock:
+            return {"events": len(self._ring), "seq": self._seq,
+                    "dumps": len(self._dumps),
+                    "capacity": self.capacity}
+
+    def dump_jsonl(self, path: str) -> int:
+        """Spill retained dumps to a JSONL file; returns the count."""
+        from repro.obs.export import write_jsonl
+        return write_jsonl(path, self.dumps())
+
+    def clear(self) -> None:
+        with self._lock:
+            self._ring.clear()
+            self._dumps.clear()
+            self._seq = 0
+
+
+def _plain(v):
+    if isinstance(v, (str, int, float, bool, type(None))):
+        return v
+    if isinstance(v, (list, tuple)):
+        return [_plain(x) for x in v]
+    if isinstance(v, dict):
+        return {str(k): _plain(x) for k, x in v.items()}
+    return repr(v)
+
+
+# process-wide recorder: daemons, client, gateway all feed this one
+FLIGHT = FlightRecorder()

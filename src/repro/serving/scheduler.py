@@ -20,7 +20,6 @@ runs (tests/test_scheduler.py asserts this).
 from __future__ import annotations
 
 import itertools
-import time
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence
@@ -28,6 +27,8 @@ from typing import Callable, Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core.metrics import RequestStats, ServingReport
+from repro.obs import REGISTRY, clock as oclock
+from repro.obs.trace import NULL_TRACER, Tracer
 from repro.serving.engine import BatchedEngine
 from repro.serving.sampler import greedy
 
@@ -45,6 +46,9 @@ class Request:
     prefix_logits: Optional[np.ndarray] = None   # full hit: [1, V]
     tenant: str = ""                   # gateway multi-tenancy tag
     stats: RequestStats = field(default=None)    # filled by the scheduler
+    # trace context (SpanContext) this request's slot-lifecycle spans
+    # parent onto — the cross-thread handoff from the submitting side
+    trace: object = None
 
 
 @dataclass
@@ -59,10 +63,22 @@ class _Slot:
 class Scheduler:
     def __init__(self, engine: BatchedEngine, sampler: Callable = greedy,
                  rng: Optional[np.random.Generator] = None,
-                 on_prefill: Optional[Callable] = None):
+                 on_prefill: Optional[Callable] = None,
+                 tracer: Optional[Tracer] = None):
         self.engine = engine
         self.sampler = sampler
         self.rng = rng
+        # slot-lifecycle spans (queue wait / prefill / decode) are
+        # emitted per finished request, parented onto ``Request.trace``
+        # when the submitter provided one; NULL_TRACER makes the whole
+        # path free for untraced sim runs
+        self.tracer = tracer or NULL_TRACER
+        self._m_reqs = REGISTRY.counter(
+            "sched_requests_total", "requests finished by reason",
+            ("reason",))
+        self._m_queue = REGISTRY.histogram(
+            "sched_queue_wait_seconds",
+            "submit-to-admission wait per request")
         # called as on_prefill(slot_i, req, logits_row) right after a
         # FRESH prefill (cache-resumed admissions came FROM the cache,
         # so there is nothing new to publish) — the gateway hooks this
@@ -91,7 +107,7 @@ class Scheduler:
             req.req_id = next(self._ids)
         req.stats = RequestStats(req_id=req.req_id,
                                  prompt_tokens=int(np.size(req.tokens)),
-                                 submit_t=time.perf_counter(),
+                                 submit_t=oclock.monotonic(),
                                  tenant=req.tenant)
         self.queue.append(req)
         return req.req_id
@@ -109,7 +125,7 @@ class Scheduler:
         slot = self.slots[slot_i]
         req = slot.req
         if not req.stats.first_token_t:
-            req.stats.first_token_t = time.perf_counter()
+            req.stats.first_token_t = oclock.monotonic()
         req.stats.output_tokens.append(int(token))
         finished = None
         if req.eos_id is not None and token == req.eos_id:
@@ -117,11 +133,38 @@ class Scheduler:
         elif len(req.stats.output_tokens) >= req.max_new_tokens:
             finished = "length"
         if finished:
-            req.stats.finish_t = time.perf_counter()
+            req.stats.finish_t = oclock.monotonic()
             req.stats.finish_reason = finished
+            self._finish_obs(slot_i, req, finished)
             self.done.append(req)
             slot.req = None
             self.engine.free_slot(slot_i)
+
+    def _finish_obs(self, slot_i: int, req: Request, reason: str) -> None:
+        """Project the finished request's RequestStats timestamps into
+        slot-lifecycle spans (Table-3 vocabulary: the prefill span is
+        ``p_decode``, the decode span ``r_decode``) and metrics. The
+        stats timestamps stay authoritative — spans are derived, never
+        re-measured."""
+        st = req.stats
+        self._m_reqs.labels(reason=reason).inc()
+        self._m_queue.observe(max(st.admit_t - st.submit_t, 0.0))
+        tr = self.tracer
+        if not tr.enabled or req.trace is None:
+            return
+        tr.add("slot.queue_wait", max(st.admit_t - st.submit_t, 0.0),
+               parent=req.trace, t0=st.submit_t, slot=slot_i)
+        tr.add("slot.prefill",
+               max(st.first_token_t - st.admit_t, 0.0),
+               parent=req.trace, t0=st.admit_t, slot=slot_i,
+               component="p_decode",
+               prompt_tokens=st.prompt_tokens,
+               resumed=bool(req.cache1 is not None))
+        tr.add("slot.decode",
+               max(st.finish_t - st.first_token_t, 0.0),
+               parent=req.trace, t0=st.first_token_t, slot=slot_i,
+               component="r_decode",
+               tokens=len(st.output_tokens), reason=reason)
 
     def _admit(self) -> None:
         """Fill free slots from the queue (FIFO), prefill, emit first
@@ -132,7 +175,7 @@ class Scheduler:
             slot_i = next(i for i, s in enumerate(self.slots) if s.free)
             req = self.queue.popleft()
             self.slots[slot_i].req = req
-            req.stats.admit_t = time.perf_counter()
+            req.stats.admit_t = oclock.monotonic()
             eng = self.engine
             if req.prefix_logits is not None and req.cache1 is not None:
                 # full prompt-cache hit: zero prefill compute
@@ -201,10 +244,10 @@ class Scheduler:
         {req_id: RequestStats} for every completed request."""
         for r in (requests or []):
             self.submit(r)
-        t0 = time.perf_counter()
+        t0 = oclock.monotonic()
         while self.has_work:
             self.step()
-        self.wall_s = time.perf_counter() - t0
+        self.wall_s = oclock.monotonic() - t0
         return {r.req_id: r.stats for r in self.done}
 
     def report(self) -> ServingReport:

@@ -217,10 +217,67 @@ def test_routing_and_introspection(gw):
     assert r.status == 200 and health["ok"] and health["slots"] == 2
     r, data = _get(gw, "/v1/models")
     assert json.loads(data)["data"][0]["id"] == "test-model"
-    r, data = _get(gw, "/metrics")
+    r, data = _get(gw, "/metrics.json")
     metrics = json.loads(data)
     assert "report" in metrics and "admission" in metrics
     assert metrics["admission"]["max_inflight"] == 2
+    r, data = _get(gw, "/metrics")
+    assert r.status == 200
+    assert r.getheader("Content-Type").startswith("text/plain")
+    text = data.decode()
+    assert "# TYPE gateway_http_requests_total counter" in text
+    assert "gateway_ttft_seconds_bucket" in text
+
+
+def test_keepalive_pipelines_sequential_requests(gw):
+    """Two unary requests down ONE socket: the server must answer both
+    (Connection: keep-alive), count the reuse, and link the second
+    request's root span to the first via the ``follows`` attr."""
+    before = gw.server.stats["keepalive_reuses"]
+    c = _conn(gw)
+    try:
+        tids = []
+        for i in range(2):
+            c.request("POST", "/v1/completions",
+                      json.dumps({"prompt": f"keepalive req {i}",
+                                  "max_tokens": 2}),
+                      {"Content-Type": "application/json"})
+            r = c.getresponse()
+            assert r.status == 200
+            assert r.getheader("Connection") == "keep-alive"
+            tids.append(json.loads(r.read())["cache"]["trace_id"])
+    finally:
+        c.close()
+    assert gw.server.stats["keepalive_reuses"] >= before + 1
+
+    def _root(tid):
+        # the root span ends just after the response bytes flush —
+        # give the server's event loop a beat to record it
+        deadline = time.monotonic() + 5.0
+        while time.monotonic() < deadline:
+            for s in (gw.tracer.trace(tid) or []):
+                if s["name"] == "gw.request":
+                    return s
+            time.sleep(0.01)
+        raise AssertionError(f"gw.request root never recorded for {tid}")
+
+    roots = [_root(t) for t in tids]
+    assert roots[0]["attrs"]["conn"] == roots[1]["attrs"]["conn"]
+    assert roots[0]["attrs"]["seq"] == 0 and roots[1]["attrs"]["seq"] == 1
+    assert roots[1]["attrs"]["follows"] == roots[0]["span"]
+    assert "follows" not in roots[0]["attrs"]
+
+
+def test_connection_close_honoured(gw):
+    c = _conn(gw)
+    try:
+        c.request("GET", "/healthz", headers={"Connection": "close"})
+        r = c.getresponse()
+        assert r.status == 200
+        assert r.getheader("Connection") == "close"
+        r.read()
+    finally:
+        c.close()
 
 
 # ---------------------------------------------------------------------------
@@ -359,6 +416,64 @@ def test_fabric_equivalence_sim_vs_local(tiny_setup):
     toks_local = _pool_tokens(Fabric.local(), engine, gen)
     toks_sim = _pool_tokens(Fabric.sim(n_peers=2), engine, gen)
     assert toks_local == toks_sim
+
+
+@pytest.mark.slow
+def test_gateway_trace_spans_client_and_remote_daemon(tiny_setup):
+    """Acceptance: a gateway request id resolves via GET
+    /v1/traces/<id> to ONE span tree that crosses process boundaries —
+    gateway-side request/resolve/slot spans plus folded remote spans
+    minted by a peer daemon (its pid rides along as proof)."""
+    cfg, model, params = tiny_setup
+    with Fabric.tcp(n_peers=2) as fabric:
+        g = Gateway(model, params, fabric=fabric, batch_size=2,
+                    max_len=MAX_LEN).start()
+        try:
+            body = {"prompt": "trace me across the fleet",
+                    "max_tokens": 3}
+            r1, _ = _post(g, "/v1/completions", body)
+            assert r1.status == 200
+            g.engine.fetcher.flush_uploads()
+            # retry until the uploaded prefix is visible through the
+            # gossiped catalog and a daemon actually serves the hit
+            deadline = time.monotonic() + 60
+            second = None
+            while time.monotonic() < deadline:
+                _, d2 = _post(g, "/v1/completions", body)
+                second = json.loads(d2)
+                if second["cache"]["matched_tokens"] > 0:
+                    break
+                time.sleep(0.3)
+            assert second["cache"]["matched_tokens"] > 0
+            rid = second["id"]
+            assert second["cache"]["trace_id"]
+            r, data = _get(g, f"/v1/traces/{rid}")   # alias lookup
+            assert r.status == 200
+            doc = json.loads(data)
+            assert doc["trace_id"] == second["cache"]["trace_id"]
+            spans = doc["spans"]
+            names = {d["name"] for d in spans}
+            assert "gw.request" in names and "gw.resolve" in names
+            assert {"slot.queue_wait", "slot.prefill",
+                    "slot.decode"} <= names
+            # cross-process: folded spans minted by the daemon process
+            remote = [d for d in spans
+                      if str(d["proc"]).startswith("peer:")]
+            assert remote
+            assert any(d["attrs"].get("pid") for d in remote)
+            assert all(d["attrs"].get("remote") for d in remote)
+            # one connected tree, rooted at the HTTP front door
+            roots = [d for d in spans if not d["parent"]]
+            assert len(roots) == 1 and roots[0]["name"] == "gw.request"
+            assert doc["tree"]["name"] == "gw.request"
+            # unknown ids 404
+            r, _ = _get(g, "/v1/traces/nope")
+            assert r.status == 404
+            # flight endpoint serves the ring snapshot
+            r, data = _get(g, "/v1/flight")
+            assert r.status == 200 and "snapshot" in json.loads(data)
+        finally:
+            g.stop()
 
 
 @pytest.mark.slow
