@@ -75,6 +75,7 @@ def _stream_one(host: str, port: int, wl, out: dict) -> None:
             if payload == b"[DONE]":
                 break
             chunk = json.loads(payload)
+            out["id"] = chunk.get("id", out.get("id"))
             choice = chunk["choices"][0]
             if "token_id" in choice:
                 if not tokens:
@@ -110,6 +111,52 @@ def replay(gw, requests, time_scale: float = 1.0):
         t.join(180)
     wall = time.perf_counter() - t0
     return results, wall
+
+
+def _get_json(gw, path: str):
+    conn = http.client.HTTPConnection(gw.server.host, gw.port,
+                                      timeout=30)
+    try:
+        conn.request("GET", path)
+        resp = conn.getresponse()
+        return resp.status, json.loads(resp.read())
+    finally:
+        conn.close()
+
+
+# ---------------------------------------------------------------------------
+# acceptance: every served request resolves to a populated decision
+# ---------------------------------------------------------------------------
+
+def resolve_decisions(gw, results, name: str) -> dict:
+    """``GET /v1/decisions/<completion-id>`` for every 200 response:
+    each must resolve to a record with its candidate set and a
+    committed outcome (realized timings, regret)."""
+    checked, regret, savings = 0, 0.0, 0.0
+    by_result: dict = {}
+    for r in results:
+        if r.get("status") != 200:
+            continue
+        rid = r.get("id")
+        assert rid, f"{name}: streamed response carried no id: {r}"
+        status, rec = _get_json(gw, f"/v1/decisions/{rid}")
+        assert status == 200, \
+            f"{name}: {rid} has no decision record ({status})"
+        assert "candidates" in rec and "attempts" in rec, rec
+        oc = rec.get("outcome")
+        assert oc, f"{name}: decision {rec.get('id')} never committed"
+        assert oc["result"] in ("hit", "partial", "local"), oc
+        assert oc["realized_total_s"] >= 0.0, oc
+        assert oc["regret_s"] >= 0.0, oc
+        assert "fallthroughs" in oc and "ttft_s" in oc, oc
+        by_result[oc["result"]] = by_result.get(oc["result"], 0) + 1
+        regret += oc["regret_s"]
+        if oc.get("savings_vs_local_s") is not None:
+            savings += oc["savings_vs_local_s"]
+        checked += 1
+    assert checked == sum(1 for r in results if r.get("status") == 200)
+    return {"resolved": checked, "by_result": by_result,
+            "regret_s": regret, "ttft_savings_vs_local_s": savings}
 
 
 # ---------------------------------------------------------------------------
@@ -162,6 +209,100 @@ def shed_drill(model, params, burst: int = 6) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# acceptance: silent-congestion drill -> estimator-drift alarm
+# ---------------------------------------------------------------------------
+
+def console_snapshot(gw) -> str:
+    """``python -m repro.obs.console --once`` against the live gateway
+    (real subprocess — the CI smoke path and the README screenshot)."""
+    import os
+    import subprocess
+    import sys
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.obs.console", "--once",
+         "--gateway", f"{gw.server.host}:{gw.port}"],
+        capture_output=True, text=True, timeout=60, env=env)
+    assert proc.returncode == 0, proc.stderr
+    assert "fleet console" in proc.stdout, proc.stdout
+    return proc.stdout
+
+
+def congestion_drill(model, params, n: int = 16) -> dict:
+    """Silently degrade live peers and watch the drift alarm fire.
+
+    Phase 1 seeds every prompt's ranges into the fleet, then the
+    warm gateway retires (its broker blob cache would satisfy phase-2
+    refetches without touching the wire). ``set_throttle`` then paces
+    each daemon's serving socket — no restart, nothing announced to
+    clients — and a fresh gateway replays the same prompts: every
+    resolve refetches over a degraded link, est-vs-actual error blows
+    past the calibration band, the ``repro_estimator_drift`` gauge
+    flips, and the flight recorder dumps an ``estimator_drift``
+    snapshot."""
+    from repro.obs import REGISTRY
+    from repro.obs.flight import ESTIMATOR_DRIFT
+
+    # several seeds => several distinct hot system prefixes: the broker
+    # dedups each unique blob to ONE wire transfer, so one seed's worth
+    # of traffic gives each peer too few est-vs-actual samples to clear
+    # the calibration tracker's min_obs gate
+    wls = [w for s in range(4)
+           for w in MIXES["support"](max(n // 4, 2), seed=11 + s,
+                                     rate_per_s=0.0, max_new_tokens=4)]
+
+    def mk(fabric, name):
+        return Gateway(model, params, fabric=fabric, batch_size=4,
+                       max_len=MAX_LEN, max_inflight=64, queue_depth=64,
+                       default_quota=TenantQuota(max_concurrent=64),
+                       model_name=name).start()
+
+    with Fabric.tcp(n_peers=2, cache_cfg=CacheConfig()) as fabric:
+        gw = mk(fabric, "congestion-warm")
+        try:
+            results, _ = replay(gw, wls, time_scale=0.0)
+            assert all(r.get("status") == 200 for r in results), results
+            gw.engine.fetcher.flush_uploads()
+            up = gw.engine.fetcher.stats
+            blob_b = up["bytes_up"] / max(up["uploads"], 1)
+        finally:
+            gw.stop()
+        # pace so one blob transfer takes ~0.5s beyond the pacer's
+        # ~0.2s burst credit; planner estimates still assume the
+        # unthrottled link, so actuals blow past them
+        bps = max(blob_b * 8.0 / 0.7, 5e4)
+        for pid in fabric.peer_ids():
+            r = fabric.supervisor.set_throttle(pid, bps)
+            assert r.get("ok"), r
+
+        gw = mk(fabric, "congestion-drill")
+        try:
+            results, _ = replay(gw, wls, time_scale=0.0)
+            assert all(r.get("status") == 200 for r in results), results
+            cal = gw.engine.fetcher.directory.calibration
+            drifted = cal.drifted()
+            snap = cal.snapshot()
+            _, flight = _get_json(gw, "/v1/flight")
+            dumps = [d for d in flight["dumps"]
+                     if d.get("reason") == ESTIMATOR_DRIFT]
+            gauge = REGISTRY.snapshot().get("repro_estimator_drift", {})
+            console = console_snapshot(gw)
+            fstats = dict(gw.engine.fetcher.stats)
+        finally:
+            gw.stop()
+    assert fstats["hits"] > 0, f"drill refetched nothing: {fstats}"
+    assert drifted, f"throttled fleet flagged no drift: {snap}"
+    assert isinstance(gauge, dict) and any(gauge.values()), \
+        f"repro_estimator_drift gauge never flipped: {gauge}"
+    assert dumps, "no estimator_drift flight dump"
+    return {"throttle_bps": bps, "drifted_peers": drifted,
+            "drift_gauge": gauge, "n_drift_dumps": len(dumps),
+            "refetch_hits": fstats["hits"], "calibration": snap,
+            "console_once": console}
+
+
+# ---------------------------------------------------------------------------
 
 def _pct(vals, q):
     return float(np.percentile(vals, q)) if vals else 0.0
@@ -192,6 +333,8 @@ def run_mix(gw, model, params, tok, name: str, n: int, rate: float,
             f"{name}: request {i} diverged from the direct scheduler "
             f"run: gateway={r['tokens']} direct={list(expect)}")
 
+    ledger = resolve_decisions(gw, results, name)
+
     ttfts = [r["ttft_s"] for r in results]
     ttlts = [r["ttlt_s"] for r in results]
     shed_n = sum(1 for r in results if r.get("status") in (429, 503))
@@ -207,6 +350,7 @@ def run_mix(gw, model, params, tok, name: str, n: int, rate: float,
         "shed_rate": shed_n / max(n, 1),
         "cost_per_1k_usd": cost_1k,
         "cache": fstats,
+        "ledger": ledger,
         "token_identity": "ok",
     }
 
@@ -225,6 +369,7 @@ def main(quick: bool = False, only_mix: str = ""):
                          "rate_per_s": rate}, "mixes": {}}
     lines = []
     spans: dict = {}
+    last_spans: list = []
     mixes = [only_mix] if only_mix else list(MIXES)
     for name in mixes:
         # fresh fleet per mix so cache stats and cost are per-mix
@@ -240,6 +385,7 @@ def main(quick: bool = False, only_mix: str = ""):
                 # each mix owns a short-lived gateway; fold its span
                 # rollup into the report before the tracer goes away
                 merge_rollups(spans, gw.tracer.rollup())
+                last_spans = gw.tracer.spans()
                 gw.stop()
         report["mixes"][name] = res
         lines.append(csv_line(
@@ -248,6 +394,7 @@ def main(quick: bool = False, only_mix: str = ""):
             f"ttlt_p95_ms={res['ttlt_p95_s'] * 1e3:.1f};"
             f"shed_rate={res['shed_rate']:.2f};"
             f"hits={res['cache']['hits']}/{res['cache']['resolves']};"
+            f"regret_s={res['ledger']['regret_s']:.3f};"
             f"cost_1k=${res['cost_per_1k_usd']:.4f}"))
 
     report["shed_drill"] = shed_drill(model, params)
@@ -256,6 +403,24 @@ def main(quick: bool = False, only_mix: str = ""):
         f"served={report['shed_drill']['served']};"
         f"shed={report['shed_drill']['shed']};"
         f"statuses={report['shed_drill']['statuses']}"))
+
+    report["congestion_drill"] = congestion_drill(model, params)
+    lines.append(csv_line(
+        "gateway_congestion_drill",
+        report["congestion_drill"]["throttle_bps"],
+        f"drifted={report['congestion_drill']['drifted_peers']};"
+        f"dumps={report['congestion_drill']['n_drift_dumps']}"))
+
+    # whole-run ledger accounting + CI artifact spills: the full
+    # decision ledger as JSONL, and the last mix's span tree as a
+    # Perfetto-loadable trace
+    from repro.obs import LEDGER
+    from repro.obs.export import write_perfetto
+    report["ledger_totals"] = LEDGER.totals()
+    LEDGER.dump_jsonl("BENCH_gateway_load_ledger.jsonl")
+    if last_spans:
+        write_perfetto("BENCH_gateway_load_trace.json", last_spans,
+                       default_proc="gateway")
 
     write_bench("BENCH_gateway_load.json", report, spans=spans)
     return lines

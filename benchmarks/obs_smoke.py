@@ -150,14 +150,18 @@ def main():
             replay_p50(gw, reqs[:warm])
         check_telemetry(gw_on, reqs[warm], out)
 
-        best_on = best_off = float("inf")
+        # all ATTEMPTS trials run (no early break): the bound applies
+        # to the min, but every trial lands in the BENCH json so a
+        # noisy CI box is visible in the artifact, not hidden by the
+        # first lucky pair
+        trials_on, trials_off = [], []
         for _ in range(ATTEMPTS):
-            best_off = min(best_off, replay_p50(gw_off, reqs[warm + 1:]))
-            best_on = min(best_on, replay_p50(gw_on, reqs[warm + 1:]))
-            if best_on <= best_off * 1.02 + EPS_S:
-                break
+            trials_off.append(replay_p50(gw_off, reqs[warm + 1:]))
+            trials_on.append(replay_p50(gw_on, reqs[warm + 1:]))
+        best_on, best_off = min(trials_on), min(trials_off)
         overhead = best_on / best_off - 1.0
         out.update(ttft_p50_on_s=best_on, ttft_p50_off_s=best_off,
+                   trials_on_s=trials_on, trials_off_s=trials_off,
                    overhead_frac=overhead)
         assert best_on <= best_off * 1.02 + EPS_S, (
             f"tracing overhead {overhead:+.1%} exceeds 2% "

@@ -34,6 +34,7 @@ import numpy as np
 from repro.config import CacheConfig
 from repro.obs import REGISTRY, clock as oclock
 from repro.obs.flight import CHUNK_ERROR, FLIGHT, PLAN_EXHAUSTED
+from repro.obs.ledger import LEDGER, LEDGER_KEY
 from repro.obs.trace import Tracer, current_span
 from repro.core.catalog import Catalog
 from repro.core.cluster.directory import PeerDirectory
@@ -103,6 +104,7 @@ class EdgeClient:
                                         perf, dtype_bytes=dtype_bytes,
                                         overlap=policy.overlap,
                                         chunk_layers=cache_cfg.chunk_layers)
+            self.planner.owner = name
         else:
             self.planner = None
         # strict-mode capability check: fail HERE, not deep inside
@@ -207,6 +209,11 @@ class EdgeClient:
         served_by, est_fetch, actual_fetch, n_attempts, dead = \
             "", 0.0, 0.0, 0, 0
         streamed, chunks_down = None, 0
+        # decision-ledger record the planner just opened (fabric mode);
+        # closed below with the realized outcome
+        rec = self.planner.last_decision \
+            if self.directory is not None else None
+        dedup_of = None
         emulated = self.perf_cfg is not self.engine.model.cfg
         hit = False
         for att in plan:                # best estimated total time first
@@ -277,6 +284,23 @@ class EdgeClient:
                 self._m_attempts.labels(result=(
                     "dead" if resp.get("dead")
                     else "hit" if hit else "miss")).inc()
+                LEDGER.note_attempt(
+                    rec, peer=att.peer_id or "server",
+                    range_tokens=cand.n_tokens,
+                    result=("dead" if resp.get("dead")
+                            else "hit" if hit
+                            else "corrupt" if resp.get("error")
+                            else "miss"),
+                    est_fetch_s=att.est_fetch_s, actual_s=actual_cost,
+                    shared=was_shared)
+                if hit and rec is not None:
+                    if was_shared:
+                        # ride the broker `_trace`-style: the dedup
+                        # leader stamped its record id into the shared
+                        # response — this session's record points there
+                        dedup_of = resp.get(LEDGER_KEY)
+                    else:
+                        resp[LEDGER_KEY] = rec["id"]
                 if resp.get("dead"):
                     # peer unreachable (already marked suspect) — fall
                     # to the next attempt, then to local prefill; never
@@ -294,7 +318,8 @@ class EdgeClient:
                     self.directory.record_get(
                         att.peer_id, hit, att.est_fetch_s, actual_cost,
                         len(resp.get("blob") or b"") if hit else 0,
-                        basis_bytes=basis_bytes)
+                        basis_bytes=basis_bytes,
+                        predicted_present=self.use_catalog)
                 if hit:
                     blob = resp["blob"]
                     shared = was_shared
@@ -334,7 +359,8 @@ class EdgeClient:
             # the last events show *why* the plan died (dead peers,
             # Bloom FPs, corrupt streams).
             FLIGHT.trigger(PLAN_EXHAUSTED, client=self.name,
-                           attempts=n_attempts, dead_peers=dead)
+                           attempts=n_attempts, dead_peers=dead,
+                           decision=rec["id"] if rec else "")
 
         # Step 3: prefill (full local / resumed / streamed / skipped)
         if matched == n and state is not None and state[2] is not None:
@@ -408,6 +434,31 @@ class EdgeClient:
         if self.perf:
             sim.r_decode = self.perf.time_decode(cfg, n_out)
             sim.sample = self.perf.time_sample(n_out)
+
+        # close the decision record with the realized outcome: regret
+        # (estimate errors + fallthroughs) and counterfactual savings
+        # vs the cache-off baseline. Sim-mode records close on the same
+        # modeled seconds the planner priced in; wall-mode records on
+        # measured wall seconds (the ledger learns its local baseline
+        # from observed full prefills).
+        if rec is not None:
+            if matched > 0:
+                LEDGER.commit(
+                    rec, chosen=served_by or None,
+                    result="hit" if matched == n else "partial",
+                    fetch_s=actual_fetch,
+                    suffix_s=(sim.p_decode if self.perf
+                              else st.timings.get("prefill_wall", 0.0))
+                    if matched < n else 0.0,
+                    dedup_of=dedup_of)
+            else:
+                local_wall = st.timings.get("prefill_wall", 0.0)
+                if not self.perf:
+                    LEDGER.note_prefill(n, local_wall)
+                LEDGER.commit(
+                    rec, chosen=None, result="local",
+                    local_prefill_s=(sim.p_decode if self.perf
+                                     else local_wall))
 
         case = self._case_of(prompt, matched)
         res = InferResult(
@@ -585,7 +636,14 @@ class EdgeClient:
                 container = state_io.pack_container(restorer.raw_chunks())
                 resp = {"ok": True, "blob": container}
                 if lead is not None:
-                    self.broker.publish(broker_key, dict(resp),
+                    pub = dict(resp)
+                    if self.planner is not None \
+                            and self.planner.last_decision is not None:
+                        # broker-shared: followers close their ledger
+                        # records as dedup_of this one
+                        pub[LEDGER_KEY] = \
+                            self.planner.last_decision["id"]
+                    self.broker.publish(broker_key, pub,
                                         info["dt"], info["nb"])
                     lead = None
                 compute = st.timings["prefill_wall"] \

@@ -47,7 +47,9 @@ from repro.core.cluster.peer import CachePeer, PeerTransport
 from repro.core.cluster.placement import HotKeyTracker, PlacementPolicy
 from repro.core.net.estimator import LinkEstimator
 from repro.core.transport import TransportError
+from repro.obs.calibrate import CalibrationTracker
 from repro.obs.flight import FLIGHT, PEER_DEATH
+from repro.obs.metrics import REGISTRY
 from repro.obs.trace import SPANS_KEY, inject_trace, phase
 
 
@@ -140,6 +142,16 @@ class PeerDirectory:
         # seeded from it. ``adaptive=False`` pins the nominal costs.
         self.adaptive = adaptive
         self.estimator = estimator or LinkEstimator()
+        # est-vs-actual calibration: every realized transfer feeds the
+        # per-peer error EWMA; a sustained out-of-band error fires the
+        # ESTIMATOR_DRIFT flight trigger + repro_estimator_drift gauge
+        self.calibration = CalibrationTracker()
+        # live Bloom-FP accounting: a GET the catalog predicted present
+        # that comes back miss IS a stale-catalog false positive
+        self._m_catalog_fp = REGISTRY.counter(
+            "repro_catalog_fp_total",
+            "catalog-predicted-present GETs that missed (stale Bloom)",
+            ("peer",))
         self._nominal: Dict[str, Tuple[float, float]] = {}
         for pid, ln in self.links.items():
             net = ln.net
@@ -418,11 +430,15 @@ class PeerDirectory:
     # -- accounting ----------------------------------------------------
     def record_get(self, peer_id: str, hit: bool, est_s: float,
                    actual_s: float, nbytes: int,
-                   basis_bytes: Optional[int] = None) -> None:
+                   basis_bytes: Optional[int] = None,
+                   predicted_present: bool = False) -> None:
         """Account one GET and feed the link estimator. ``basis_bytes``
         is the byte count the planner's estimate was computed from
         (analytic blob sizing under perf emulation); it defaults to the
-        wire bytes so real-TCP observations use what actually moved."""
+        wire bytes so real-TCP observations use what actually moved.
+        ``predicted_present=True`` marks a GET the Bloom catalog said
+        would hit — a miss then counts as a live catalog false positive
+        (``repro_catalog_fp_total{peer}``)."""
         st = self.links[peer_id].stats
         st.gets += 1
         if hit:
@@ -432,7 +448,10 @@ class PeerDirectory:
             st.actual_fetch_s += actual_s
             self.estimator.observe(peer_id, basis_bytes or nbytes,
                                    actual_s)
+            self.calibration.observe(peer_id, est_s, actual_s, nbytes)
         else:
+            if predicted_present:
+                self._m_catalog_fp.labels(peer=peer_id).inc()
             st.misses += 1
             # a failed GET is a near-empty round trip — *usually* an
             # RTT sample. But a miss dominated by server-side handling
@@ -459,7 +478,11 @@ class PeerDirectory:
         st = self.links[peer_id].stats
         st.chunks_down += 1
         if observe and seconds > 0:
+            # calibration sees the PRE-observation belief: the price
+            # this chunk was (implicitly) planned under
+            est = self.est_fetch_s(peer_id, nbytes)
             self.estimator.observe(peer_id, nbytes, seconds)
+            self.calibration.observe(peer_id, est, seconds, nbytes)
 
     def record_overlap(self, peer_id: str, hidden_s: float) -> None:
         """Transfer seconds hidden behind the layer-streamed suffix

@@ -24,6 +24,46 @@ real TCP links it was never given parameters for.
 Without a device perf model there is no compute estimate to trade
 against, so the plan preserves the paper's longest-first order and
 only uses the link model to break ties between peers.
+
+Decision ledger record — STABLE CONTRACT
+----------------------------------------
+Every ``plan()`` call opens a record in the process-wide
+:data:`repro.obs.ledger.LEDGER` (kept on ``self.last_decision`` for
+the caller that walks the plan to close). The record schema below is
+the stable contract served by the gateway's
+``GET /v1/decisions/<request-id>`` and spilled to JSONL; fields may be
+*added* but never renamed or removed::
+
+    {"id": "dec-<n>",             # ledger record id
+     "trace_id": "...",           # ambient trace at plan time ("" none)
+     "client": "...",             # planner owner (client / gateway id)
+     "t_open": <monotonic s>,
+     "prompt_tokens": <int>,
+     "local_est_s": <float|null>, # perf-model local-prefill baseline
+     "candidates": [              # FULL priced set, pre-prune
+        {"peer": "peer0", "range_tokens": <int>,
+         "est_fetch_s": <float>, "est_total_s": <float>,
+         "ring_rank": <int>,
+         "pruned": <bool>},       # true = estimated worse than local
+        ...],
+     "attempts": [                # walked by the caller, in order
+        {"peer": "peer0", "range_tokens": <int>,
+         "result": "hit|miss|dead|corrupt",
+         "est_fetch_s": <float>, "actual_s": <float>,
+         "shared": <bool>},       # true = served from the dedup broker
+        ...],
+     "outcome": {                 # null until the caller commits
+        "chosen": "peer0"|null, "result": "hit|partial|local",
+        "fallthroughs": {"miss": n, "dead": n, "corrupt": n},
+        "fetch_s": <float>, "suffix_s": <float>,
+        "local_prefill_s": <float>,
+        "baseline_s": <float|null>,     # cache-off counterfactual
+        "realized_total_s": <float>,
+        "best_hindsight_s": <float>,
+        "regret_s": <float>,            # realized - best-in-hindsight
+        "savings_vs_local_s": <float|null>,
+        "dedup_of": "dec-<m>"|null,     # broker leader's record
+        "t_close": <monotonic s>}}      # (+ late fields, e.g. ttft_s)
 """
 from __future__ import annotations
 
@@ -32,6 +72,8 @@ from typing import List, Optional, Sequence
 
 from repro.core.keys import PromptKey
 from repro.core.sizing import state_bytes, stream_chunk_count
+from repro.obs.ledger import LEDGER
+from repro.obs.trace import current_span
 
 
 @dataclass(frozen=True)
@@ -70,6 +112,13 @@ class FetchPlanner:
         # plans and charged TTFTs would disagree.
         self.overlap = overlap
         self.chunk_layers = chunk_layers
+        # decision-ledger hookup: ``owner`` labels records (set by the
+        # creating client/gateway); ``last_decision`` is the record the
+        # most recent plan() opened — the caller that walks the plan
+        # closes it with the realized outcome (single-threaded per
+        # planner by construction)
+        self.owner = ""
+        self.last_decision = None
 
     # ------------------------------------------------------------------
     def plan(self, keys: Sequence[PromptKey], n_tokens: int,
@@ -107,13 +156,36 @@ class FetchPlanner:
                 est = d.est_fetch_s(pid, nb)
                 attempts.append(FetchAttempt(pid, k, est, total(est),
                                              rank.get(pid, 0)))
+        local_s: Optional[float] = None
         if perf is not None:
             local_s = perf.time_prefill(cfg, n_tokens)
-            attempts = [a for a in attempts if a.est_total_s < local_s]
-            attempts.sort(key=lambda a: (a.est_total_s, a.est_fetch_s,
-                                         a.ring_rank))
+            kept = [a for a in attempts if a.est_total_s < local_s]
+            kept.sort(key=lambda a: (a.est_total_s, a.est_fetch_s,
+                                     a.ring_rank))
         else:
-            attempts.sort(
+            kept = list(attempts)
+            kept.sort(
                 key=lambda a: (-a.key.n_tokens, a.est_fetch_s,
                                a.ring_rank))
-        return attempts
+        self._open_decision(attempts, kept, local_s, n_tokens)
+        return kept
+
+    def _open_decision(self, priced: List[FetchAttempt],
+                       kept: List[FetchAttempt],
+                       local_s: Optional[float], n_tokens: int) -> None:
+        """Open the ledger record for this plan (schema above)."""
+        if not LEDGER.enabled:
+            self.last_decision = None
+            return
+        keep = {id(a) for a in kept}
+        sp = current_span()
+        cands = [{"peer": a.peer_id, "range_tokens": a.key.n_tokens,
+                  "est_fetch_s": a.est_fetch_s,
+                  "est_total_s": a.est_total_s,
+                  "ring_rank": a.ring_rank,
+                  "pruned": id(a) not in keep}
+                 for a in priced]
+        self.last_decision = LEDGER.open(
+            client=self.owner, prompt_tokens=n_tokens,
+            trace_id=sp.trace_id if sp is not None else "",
+            candidates=cands, local_est_s=local_s)

@@ -14,10 +14,20 @@ learns OS-assigned ports. The import footprint is deliberately tiny —
 config + cache + sockets, no JAX — so a fleet of daemons starts in
 milliseconds.
 
-On top of the peer's ops the daemon speaks three control ops:
+On top of the peer's ops the daemon speaks four control ops:
 
 * ``health``        — liveness + store occupancy + pid + replication
-  stats (pending pushes, handoffs delivered, repaired leaks)
+  stats (pending pushes, handoffs delivered, repaired leaks) + the
+  ``catalog_fp`` probe: this peer's *predicted* Bloom false-positive
+  rate (the master filter's analytic rate at its current fill) next to
+  the *realized* served miss rate (every GET that reaches a peer was
+  catalog-predicted present somewhere, so misses are stale-catalog
+  FPs — evictions tombstone keys that remote Blooms still claim)
+* ``set_throttle``  — ``{bps: <float|null>}``; sets the serving
+  socket's outbound pacing at runtime (``null`` removes it). The
+  silent-congestion drill in ``benchmarks/gateway_load.py`` uses this
+  to degrade one live peer without restarting it and watch the
+  client-side estimator-drift alarm fire.
 * ``set_neighbors`` — ``{peers: {peer_id: [host, port], ...},
   ring: [...], repl_factor: R}``; arms the epidemic gossip thread,
   which every ``--gossip-interval`` seconds pulls ``csync`` deltas from
@@ -69,6 +79,9 @@ class DaemonHandler:
         self.estimator = LinkEstimator()
         if state_dir:
             self.estimator.warm_start(self._links_path)
+        # the serving PeerServer, attached by main() after the socket
+        # binds — the set_throttle control op mutates its pacing live
+        self.server = None
         self.neighbors: Dict[str, Tuple[str, int]] = {}
         # every peer id this daemon has ever been told about: the ring
         # fallback must stay a superset across re-wires, because a
@@ -117,16 +130,31 @@ class DaemonHandler:
             # the supervisor aggregates per-peer series with zero
             # extra round trips
             from repro.obs import FLIGHT, REGISTRY
+            from repro.obs.calibrate import catalog_fp_probe
+            srv = self.peer.server
             return {"ok": True, "peer": self.peer.peer_id,
                     "pid": os.getpid(),
-                    "stored_bytes": self.peer.server.stored_bytes,
-                    "n_entries": len(self.peer.server.store),
+                    "stored_bytes": srv.stored_bytes,
+                    "n_entries": len(srv.store),
                     "gossip": dict(self.peer.gossip_stats),
                     "repl": self.peer.replication.snapshot(),
                     "links": {pid: list(snap) for pid, snap in
                               self.estimator.snapshot_all().items()},
+                    "catalog_fp": catalog_fp_probe(
+                        srv.master, srv.stats.get("gets", 0),
+                        srv.stats.get("misses", 0),
+                        len(getattr(srv, "tombstones", ()))),
+                    "throttle_bps": getattr(self.server, "throttle_bps",
+                                            None),
                     "metrics": REGISTRY.snapshot(),
                     "flight": FLIGHT.snapshot()}
+        if op == "set_throttle":
+            bps = payload.get("bps")
+            if self.server is None:
+                return {"ok": False, "error": "no server attached"}
+            self.server.throttle_bps = (float(bps) if bps else None)
+            return {"ok": True, "peer": self.peer.peer_id,
+                    "throttle_bps": self.server.throttle_bps}
         if op == "set_neighbors":
             with self._nlock:
                 self.neighbors = {
@@ -227,6 +255,7 @@ def main(argv=None) -> int:
                             state_dir=args.state_dir)
     server = serve_peer_tcp(handler, args.host, args.port,
                             drain_timeout_s=args.drain_timeout)
+    handler.server = server            # set_throttle mutates its pacing
 
     signal.signal(signal.SIGTERM, lambda *_: stop_event.set())
     signal.signal(signal.SIGINT, lambda *_: stop_event.set())

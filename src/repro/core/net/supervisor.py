@@ -273,6 +273,41 @@ class PeerSupervisor:
                             "reporting": len(snaps)}
         return merged
 
+    def fleet_calibration(self) -> Dict[str, object]:
+        """Per-peer calibration view merged from every live daemon's
+        ``health`` response: the predicted-vs-realized Bloom-FP probe
+        (``catalog_fp``), learned link beliefs (``links``), current
+        outbound throttle, and store occupancy — the supervisor half of
+        the estimator-calibration loop, rendered by the fleet
+        console."""
+        out: Dict[str, object] = {}
+        for pid, pp in self.procs.items():
+            if not pp.alive:
+                out[pid] = {"alive": False}
+                continue
+            try:
+                resp = self.request(pid, "health", {}, timeout=2.0)
+            except TransportError:
+                out[pid] = {"alive": False}
+                continue
+            if not resp.get("ok"):
+                out[pid] = {"alive": False}
+                continue
+            out[pid] = {"alive": True,
+                        "catalog_fp": resp.get("catalog_fp", {}),
+                        "links": resp.get("links", {}),
+                        "throttle_bps": resp.get("throttle_bps"),
+                        "stored_bytes": resp.get("stored_bytes", 0),
+                        "n_entries": resp.get("n_entries", 0)}
+        return out
+
+    def set_throttle(self, peer_id: str,
+                     bps: Optional[float]) -> dict:
+        """Set (``bps=None`` clears) a live peer's outbound pacing at
+        runtime — the silent-congestion injection hook the drift drill
+        uses to degrade a link without restarting the daemon."""
+        return self.request(peer_id, "set_throttle", {"bps": bps})
+
     def check_and_restart(self) -> List[str]:
         """Health-check the fleet; restart every dead peer. Returns the
         ids restarted."""

@@ -64,6 +64,14 @@ class FetchBroker:
     per (peer, key). A :class:`TransportError` from ``issue`` publishes
     a ``{"ok": False, "dead": True}`` miss so every waiting follower
     degrades to its own fallback instead of hanging.
+
+    The published ``resp`` dict is shared *by reference* with every
+    follower (and with later blob-cache hits). The decision ledger
+    rides this deliberately: the leader stamps its record id under
+    :data:`~repro.obs.ledger.LEDGER_KEY` (``"_ledger"``) into ``resp``,
+    so deduped sibling requests link their records to the leader's via
+    ``outcome.dedup_of`` instead of double-counting the transfer —
+    same mechanism as the ``_trace`` context riding op payloads.
     """
 
     def __init__(self, cache_entries: int = 32):

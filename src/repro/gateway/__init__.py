@@ -58,7 +58,8 @@ class Gateway:
                  quotas: Optional[Dict[str, TenantQuota]] = None,
                  model_name: str = "repro-edge-cache",
                  request_timeout_s: float = 120.0,
-                 tracer=None):
+                 tracer=None, ttft_buckets=None,
+                 queue_wait_buckets=None):
         self.tokenizer = tokenizer or WordHashTokenizer(model.cfg.vocab)
         self.admission = AdmissionController(
             max_inflight=max_inflight or batch_size,
@@ -68,7 +69,8 @@ class Gateway:
             model, params, batch_size=batch_size, max_len=max_len,
             fabric=fabric, cache_cfg=cache_cfg, policy=policy,
             cache_dtype=cache_dtype, admission=self.admission,
-            tracer=tracer)
+            tracer=tracer, ttft_buckets=ttft_buckets,
+            queue_wait_buckets=queue_wait_buckets)
         self.server = GatewayServer(
             self.engine, self.admission, self.tokenizer,
             host=host, port=port, model_name=model_name,

@@ -43,6 +43,8 @@ from repro.core.session_pool import FetchBroker
 from repro.core.transport import TransportError
 from repro.gateway.protocol import ParsedRequest
 from repro.obs import REGISTRY, clock as oclock
+from repro.obs.ledger import LEDGER, LEDGER_KEY
+from repro.obs.metrics import DEFAULT_BUCKETS
 from repro.obs.trace import NULL_SPAN, NULL_TRACER, Tracer, current_span
 from repro.serving.scheduler import Request, Scheduler
 
@@ -68,6 +70,13 @@ class GatewayJob:
         self.created = int(oclock.wall())
         self.matched = 0
         self.served_by = ""
+        # decision-ledger handoff: the record the fetcher's plan opened
+        # (committed at finish, when the realized prefill is known),
+        # the broker leader's record when this resolve was deduped, and
+        # the winning attempt's transfer seconds
+        self.decision = None
+        self.dedup_of = None
+        self.fetch_s = 0.0
         # root request span (opened by the HTTP front door, ended there
         # after the response is written); the engine thread parents its
         # resolve/slot spans onto ``span.ctx`` — explicit handoff
@@ -113,8 +122,13 @@ class PrefixFetcher:
                 self.directory, model.cfg, None,
                 dtype_bytes=np.dtype(cache_dtype).itemsize,
                 chunk_layers=cache_cfg.chunk_layers)
+            self.planner.owner = "gateway"
         else:
             self.planner = None
+        # (record, dedup_of, fetch_s) of the most recent resolve — the
+        # engine thread attaches it to the job and commits at finish
+        # (resolution is single-threaded on the engine thread)
+        self.last_decision = (None, None, 0.0)
         self.broker = broker or FetchBroker()
         self._uploaded: "OrderedDict[bytes, None]" = OrderedDict()
         self.stats = {"resolves": 0, "hits": 0, "full_hits": 0,
@@ -157,14 +171,29 @@ class PrefixFetcher:
             plan = [FetchAttempt(None, k) for k in keys
                     if k.n_tokens >= min_match
                     and self.catalog.lookup(k.digest)]
+        # the plan() call above opened a decision record; close it at
+        # request finish (the engine thread knows the realized prefill),
+        # so only stash + annotate here
+        rec = self.planner.last_decision \
+            if self.planner is not None else None
+        self.last_decision = (rec, None, 0.0)
         for att in plan:
             resp, dt, nb, shared, template = self._get(att)
             hit = bool(resp.get("ok") and resp.get("blob"))
+            LEDGER.note_attempt(
+                rec, peer=att.peer_id or "server",
+                range_tokens=att.key.n_tokens,
+                result=("dead" if resp.get("dead")
+                        else "hit" if hit else "miss"),
+                est_fetch_s=att.est_fetch_s, actual_s=dt, shared=shared)
             if self.directory is not None and att.peer_id is not None \
                     and not shared:
+                # every planned attempt was catalog-predicted present,
+                # so a miss here is a stale-Bloom false positive
                 self.directory.record_get(
                     att.peer_id, hit, att.est_fetch_s, dt,
-                    len(resp.get("blob") or b"") if hit else 0)
+                    len(resp.get("blob") or b"") if hit else 0,
+                    predicted_present=True)
             if resp.get("dead"):
                 continue             # next attempt; never a hang
             if not hit:
@@ -181,6 +210,14 @@ class PrefixFetcher:
                 if att.peer_id is not None:
                     self.directory.note_fetch(att.key.digest, blob,
                                               att.peer_id)
+            if rec is not None:
+                if shared:
+                    # broker follower: the leader's record owns this
+                    # fetch; link ours to it instead of double-counting
+                    self.last_decision = (rec, resp.get(LEDGER_KEY), dt)
+                else:
+                    resp[LEDGER_KEY] = rec["id"]
+                    self.last_decision = (rec, None, dt)
             self.stats["hits"] += 1
             if att.key.n_tokens == n:
                 self.stats["full_hits"] += 1
@@ -301,7 +338,8 @@ class GatewayEngine:
                  cache_cfg: CacheConfig = CacheConfig(),
                  policy: Optional[FetchPolicy] = None,
                  cache_dtype=None, admission=None,
-                 tracer: Optional[Tracer] = None):
+                 tracer: Optional[Tracer] = None,
+                 ttft_buckets=None, queue_wait_buckets=None):
         if policy is None:
             policy = FetchPolicy(transfer="blocking")
         if policy.transfer != "blocking" or policy.overlap:
@@ -326,8 +364,15 @@ class GatewayEngine:
         # engine thread, scheduler, and fetcher all mint spans here, so
         # GET /v1/traces/<rid> resolves one complete tree
         self.tracer = tracer or Tracer(proc="gateway", max_traces=128)
+        # bucket layouts are registration-time config: the registry's
+        # first registration of a family wins, so deployments that care
+        # about sub-5ms TTFT resolution pass their own edges here
+        self._queue_wait_buckets = (tuple(queue_wait_buckets)
+                                    if queue_wait_buckets else None)
         self._m_ttft = REGISTRY.histogram(
-            "gateway_ttft_seconds", "submit-to-first-token per request")
+            "gateway_ttft_seconds", "submit-to-first-token per request",
+            buckets=(tuple(ttft_buckets) if ttft_buckets
+                     else DEFAULT_BUCKETS))
         self._m_latency = REGISTRY.histogram(
             "gateway_request_seconds", "submit-to-finish per request")
         self._m_done = REGISTRY.counter(
@@ -380,9 +425,10 @@ class GatewayEngine:
             self.engine = BatchedEngine(self.model, self.params,
                                         self.max_len, self.batch_size,
                                         cache_dtype=self.cache_dtype)
-            self.sched = Scheduler(self.engine,
-                                   on_prefill=self._on_prefill,
-                                   tracer=self.tracer)
+            self.sched = Scheduler(
+                self.engine, on_prefill=self._on_prefill,
+                tracer=self.tracer,
+                queue_wait_buckets=self._queue_wait_buckets)
             if self.fabric is not None:
                 view = self.fabric.directory()
                 self.fetcher = PrefixFetcher(
@@ -451,6 +497,13 @@ class GatewayEngine:
                 # the request id doubles as a trace lookup key
                 self.tracer.alias(job.rid, pctx.trace_id)
             job.matched, job.served_by = matched, served
+            if self.fetcher is not None:
+                job.decision, job.dedup_of, job.fetch_s = \
+                    self.fetcher.last_decision
+                if job.decision is not None:
+                    # the request id also resolves the decision record
+                    # (GET /v1/decisions/cmpl-N)
+                    LEDGER.alias(job.rid, job.decision["id"])
             self._live[rid] = [job, req, 0]
         except Exception as e:
             if self.admission is not None:
@@ -485,6 +538,7 @@ class GatewayEngine:
                     self.admission.release(job.parsed.tenant, lat)
                 self._m_ttft.observe(req.stats.ttft)
                 self._m_latency.observe(lat)
+                self._commit_decision(job, req, lat)
                 self._m_done.labels(
                     reason=req.stats.finish_reason).inc()
                 job.push(("done", req.stats.finish_reason,
@@ -497,6 +551,36 @@ class GatewayEngine:
                 finished.append(rid)
         for rid in finished:
             del self._live[rid]
+
+    def _commit_decision(self, job: GatewayJob, req: Request,
+                         lat: float) -> None:
+        """Close the job's decision record with the realized outcome.
+
+        Deferred to finish because the gateway's planner runs without a
+        PerfModel (``local_est_s`` is None): the counterfactual
+        baseline is the ledger's *learned* per-token prefill rate, fed
+        here from every complete-miss request's measured wall prefill
+        (admit -> first token)."""
+        rec = job.decision
+        if rec is None:
+            return
+        st = req.stats
+        first = st.first_token_t or st.finish_t
+        prefill_s = max(first - st.admit_t, 0.0) if st.admit_t else 0.0
+        n = st.prompt_tokens
+        if job.matched > 0:
+            LEDGER.commit(
+                rec, chosen=job.served_by or None,
+                result="hit" if job.matched >= n else "partial",
+                fetch_s=job.fetch_s,
+                suffix_s=prefill_s if job.matched < n else 0.0,
+                dedup_of=job.dedup_of,
+                ttft_s=st.ttft, latency_s=lat)
+        else:
+            LEDGER.note_prefill(n, prefill_s)
+            LEDGER.commit(rec, chosen=None, result="local",
+                          local_prefill_s=prefill_s,
+                          ttft_s=st.ttft, latency_s=lat)
 
     def _fail_all(self, message: str) -> None:
         for rid, (job, _req, _sent) in list(self._live.items()):

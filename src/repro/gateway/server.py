@@ -17,6 +17,10 @@ Routes:
 * ``POST /v1/chat/completions``   — OpenAI chat completion (+SSE)
 * ``GET  /v1/models``             — the one served model
 * ``GET  /v1/traces/<id>``        — span tree by trace id or request id
+* ``GET  /v1/decisions``          — decision-ledger totals + recent ids
+* ``GET  /v1/decisions/<id>``     — one decision record by request id,
+  trace id, or ``dec-N`` ledger id (full candidate set, attempts,
+  realized outcome, regret)
 * ``GET  /v1/flight``             — flight-recorder ring + dumps
 * ``GET  /healthz``               — liveness + slot counts
 * ``GET  /metrics``               — Prometheus text exposition 0.0.4
@@ -43,7 +47,7 @@ from typing import Optional
 from repro.gateway import protocol
 from repro.gateway.admission import AdmissionController, ShedError
 from repro.gateway.engine import GatewayClosed, GatewayEngine, GatewayJob
-from repro.obs import FLIGHT, REGISTRY, clock as oclock
+from repro.obs import FLIGHT, LEDGER, REGISTRY, clock as oclock
 from repro.obs.export import span_tree
 from repro.obs.flight import SHED
 from repro.obs.trace import NULL_SPAN
@@ -315,6 +319,11 @@ class GatewayServer:
                     "http": dict(self.stats)}
             if self.engine.fetcher is not None:
                 snap["fetcher"] = dict(self.engine.fetcher.stats)
+                d = self.engine.fetcher.directory
+                if d is not None:
+                    # per-peer est-vs-actual calibration incl. drift
+                    # flags — what the fleet console renders
+                    snap["calibration"] = d.calibration.snapshot()
             await self._respond(writer, 200,
                                 json.dumps(snap, default=str).encode(),
                                 close=not keep)
@@ -332,6 +341,22 @@ class GatewayServer:
                     "spans": spans,
                     "tree": span_tree(spans)},
                     default=str).encode(), close=not keep)
+        elif path.startswith("/v1/decisions/") and method == "GET":
+            did = path[len("/v1/decisions/"):]
+            rec = LEDGER.get(did)
+            if rec is None:
+                await self._respond(writer, 404, protocol.error_body(
+                    f"unknown decision {did!r}", etype="not_found"),
+                    close=not keep)
+            else:
+                await self._respond(writer, 200,
+                                    json.dumps(rec, default=str).encode(),
+                                    close=not keep)
+        elif path == "/v1/decisions" and method == "GET":
+            await self._respond(writer, 200, json.dumps({
+                "totals": LEDGER.totals(),
+                "recent": LEDGER.records(50)},
+                default=str).encode(), close=not keep)
         elif path == "/v1/flight" and method == "GET":
             await self._respond(
                 writer, 200,

@@ -21,10 +21,20 @@ Modules
   a structured JSONL event log.
 * :mod:`repro.obs.flight`  — bounded ring-buffer flight recorder that
   dumps the last N events on fetch-plan exhaustion, ChunkError, shed,
-  or peer death.
+  peer death, or estimator drift.
+* :mod:`repro.obs.ledger`  — planner decision ledger: the full priced
+  candidate set per ``FetchPlanner.plan`` call, closed with the
+  realized outcome for regret + counterfactual-savings accounting
+  (``GET /v1/decisions/<id>`` on the gateway).
+* :mod:`repro.obs.calibrate` — per-peer est-vs-actual error EWMAs with
+  drift alarms, and the predicted-vs-realized Bloom-FP probe.
+* :mod:`repro.obs.console` — live fleet console (``python -m
+  repro.obs.console``; not imported here — it is an entry point).
 """
 from repro.obs import clock  # noqa: F401
+from repro.obs.calibrate import CalibrationTracker  # noqa: F401
 from repro.obs.flight import FLIGHT, FlightRecorder  # noqa: F401
+from repro.obs.ledger import LEDGER, DecisionLedger  # noqa: F401
 from repro.obs.metrics import (  # noqa: F401
     REGISTRY, Counter, Gauge, Histogram, MetricsRegistry,
 )

@@ -1,0 +1,157 @@
+"""Estimator calibration: est-vs-actual error tracking + drift alarms.
+
+The planner prices every candidate from the
+:class:`~repro.core.net.estimator.LinkEstimator`'s EWMA beliefs; this
+module watches how wrong those prices turn out to be. Every realized
+transfer (``PeerDirectory.record_get`` hits, ``record_chunk`` samples)
+feeds :meth:`CalibrationTracker.observe` with the *estimated* and
+*actual* seconds; the tracker keeps a per-peer distribution of the
+signed relative error ``(est - actual) / actual``:
+
+* ``ewma`` — exponentially weighted signed relative error: the
+  direction and magnitude of systematic bias (a throttled link drives
+  it toward −1: estimates far too optimistic);
+* ``mean_abs`` — running mean absolute error (calibration quality);
+* ``n`` / last est/actual/bytes — context for the console.
+
+**Drift detection**: once a peer has ``min_obs`` samples and its
+``|ewma|`` crosses ``band``, the tracker fires a single
+:data:`~repro.obs.flight.ESTIMATOR_DRIFT` flight-recorder trigger
+(black-box context: the peer, the EWMA, the last sample) and raises
+the ``repro_estimator_drift{peer}`` gauge. Hysteresis: the flag clears
+(gauge back to 0) only when ``|ewma|`` falls below ``band/2``, so a
+link hovering at the boundary doesn't flap dumps.
+
+This is the calibration loop the edge-inference survey (PAPERS.md)
+calls out as the gap between cost models and real wireless links — and
+the silent-congestion drill in ``benchmarks/gateway_load.py`` proves
+it end to end by throttling a live daemon and watching the gauge flip.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional
+
+from repro.obs.flight import ESTIMATOR_DRIFT, FLIGHT
+from repro.obs.metrics import REGISTRY
+
+_EPS = 1e-9
+
+
+class _PeerCal:
+    __slots__ = ("n", "ewma", "abs_sum", "last_est_s", "last_actual_s",
+                 "last_bytes", "drift", "drift_events")
+
+    def __init__(self):
+        self.n = 0
+        self.ewma = 0.0
+        self.abs_sum = 0.0
+        self.last_est_s = 0.0
+        self.last_actual_s = 0.0
+        self.last_bytes = 0
+        self.drift = False
+        self.drift_events = 0
+
+
+class CalibrationTracker:
+    """Per-peer est-vs-actual error EWMAs with banded drift alarms."""
+
+    def __init__(self, alpha: float = 0.3, band: float = 0.5,
+                 min_obs: int = 4, flight=None, registry=None):
+        self.alpha = alpha
+        self.band = band
+        self.min_obs = min_obs
+        self._flight = flight if flight is not None else FLIGHT
+        self._lock = threading.Lock()
+        self._peers: Dict[str, _PeerCal] = {}
+        reg = registry if registry is not None else REGISTRY
+        self._g_drift = reg.gauge(
+            "repro_estimator_drift",
+            "1 while a peer's link estimator is drifted out of band",
+            ("peer",))
+        self._g_err = reg.gauge(
+            "repro_estimator_rel_err",
+            "EWMA signed relative error (est-actual)/actual per peer",
+            ("peer",))
+
+    def observe(self, peer: str, est_s: float, actual_s: float,
+                nbytes: int = 0) -> None:
+        """Fold one realized transfer into the peer's error EWMA.
+        Samples without a meaningful estimate or measurement are
+        dropped (cold estimator, zero-duration sim hops)."""
+        if est_s <= 0.0 or actual_s <= _EPS:
+            return
+        err = (est_s - actual_s) / max(actual_s, _EPS)
+        fire = None
+        with self._lock:
+            pc = self._peers.get(peer)
+            if pc is None:
+                pc = self._peers[peer] = _PeerCal()
+            pc.n += 1
+            pc.abs_sum += abs(err)
+            pc.ewma = (err if pc.n == 1
+                       else self.alpha * err + (1 - self.alpha) * pc.ewma)
+            pc.last_est_s, pc.last_actual_s = est_s, actual_s
+            pc.last_bytes = int(nbytes)
+            if pc.n >= self.min_obs:
+                if not pc.drift and abs(pc.ewma) >= self.band:
+                    pc.drift = True
+                    pc.drift_events += 1
+                    fire = dict(peer=peer, ewma=pc.ewma, n=pc.n,
+                                est_s=est_s, actual_s=actual_s,
+                                nbytes=int(nbytes))
+                elif pc.drift and abs(pc.ewma) < self.band / 2.0:
+                    pc.drift = False
+            ewma, drift = pc.ewma, pc.drift
+        self._g_err.labels(peer=peer).set(ewma)
+        self._g_drift.labels(peer=peer).set(1.0 if drift else 0.0)
+        if fire is not None:
+            self._flight.trigger(ESTIMATOR_DRIFT, **fire)
+
+    def drifted(self) -> list:
+        """Peers currently flagged as drifted."""
+        with self._lock:
+            return sorted(p for p, pc in self._peers.items() if pc.drift)
+
+    def snapshot(self) -> Dict[str, dict]:
+        """Per-peer calibration state (daemon ``health`` / console)."""
+        with self._lock:
+            return {p: {"n": pc.n,
+                        "ewma_rel_err": pc.ewma,
+                        "mean_abs_err": (pc.abs_sum / pc.n if pc.n
+                                         else 0.0),
+                        "drift": pc.drift,
+                        "drift_events": pc.drift_events,
+                        "last_est_s": pc.last_est_s,
+                        "last_actual_s": pc.last_actual_s,
+                        "last_bytes": pc.last_bytes}
+                    for p, pc in self._peers.items()}
+
+
+def catalog_fp_probe(bloom, gets: int, misses: int,
+                     tombstones: int = 0) -> Dict[str, object]:
+    """Predicted-vs-realized Bloom false-positive probe for one
+    catalog. ``predicted`` is the filter's analytic FP rate at its
+    current fill ``(1 - e^{-kn/m})^k``; ``realized`` is the served
+    miss rate (a GET only reaches a peer when some catalog predicted
+    the key present, so every miss *is* a stale-catalog FP — evictions
+    leave tombstoned keys in remote Blooms). Reported per peer in
+    daemon ``health``, merged fleet-wide by the supervisor."""
+    import math
+
+    predicted = 0.0
+    if bloom is not None:
+        fp = getattr(bloom, "expected_fp_rate", None)
+        if callable(fp):
+            predicted = float(fp())
+        else:
+            m = getattr(bloom, "m", 0) or 0
+            k = getattr(bloom, "k", 0) or 0
+            n = getattr(bloom, "n_added", 0)
+            if m and k:
+                predicted = (1.0 - math.exp(
+                    -float(k) * float(n) / float(m))) ** k
+    return {"predicted": predicted,
+            "realized": (misses / gets) if gets else 0.0,
+            "gets": int(gets), "misses": int(misses),
+            "tombstones": int(tombstones)}

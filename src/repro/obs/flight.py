@@ -39,6 +39,7 @@ PLAN_EXHAUSTED = "plan_exhausted"
 CHUNK_ERROR = "chunk_error"
 SHED = "shed"
 PEER_DEATH = "peer_death"
+ESTIMATOR_DRIFT = "estimator_drift"
 
 
 class FlightRecorder:
@@ -93,10 +94,25 @@ class FlightRecorder:
                     "dumps": len(self._dumps),
                     "capacity": self.capacity}
 
-    def dump_jsonl(self, path: str) -> int:
-        """Spill retained dumps to a JSONL file; returns the count."""
+    def dump_jsonl(self, path: str, max_bytes: int = 4 << 20) -> int:
+        """Spill retained dumps to a JSONL file; returns the count.
+
+        Appends by default but stays *bounded*: when the file has
+        already grown past ``max_bytes`` the spill rewrites it with
+        only the currently retained dumps instead of appending — so a
+        long-lived process calling this on every trigger cannot fill
+        the disk. ``max_bytes=0`` disables the cap."""
+        import os
+
         from repro.obs.export import write_jsonl
-        return write_jsonl(path, self.dumps())
+        mode = "a"
+        if max_bytes:
+            try:
+                if os.path.getsize(path) >= max_bytes:
+                    mode = "w"
+            except OSError:
+                pass
+        return write_jsonl(path, self.dumps(), mode=mode)
 
     def clear(self) -> None:
         with self._lock:

@@ -93,17 +93,24 @@ class _HistChild:
                     self.counts[i] += 1
 
     def quantile(self, q: float) -> float:
-        """Bucket-resolution quantile estimate (upper bound of the
-        bucket containing the q-th observation)."""
+        """Quantile estimate with linear interpolation inside the
+        containing bucket (Prometheus ``histogram_quantile``
+        semantics): the q-th observation is placed proportionally
+        between the bucket's lower and upper bound by its rank within
+        the bucket, instead of snapping to the upper bound."""
         with self._lock:
             if not self.count:
                 return 0.0
             rank = q * self.count
-            cum = 0
+            prev, lo = 0, 0.0
             for i, b in enumerate(self.buckets):
                 cum = self.counts[i]
                 if cum >= rank:
-                    return b
+                    if cum == prev:
+                        return lo
+                    frac = (rank - prev) / (cum - prev)
+                    return lo + frac * (b - lo)
+                prev, lo = cum, b
             return self.buckets[-1]
 
 
@@ -289,7 +296,15 @@ def merge_snapshots(snaps: Dict[str, Dict[str, object]]
                     ) -> Dict[str, object]:
     """Merge per-peer ``snapshot()`` dicts into fleet-wide series by
     re-labelling each sample with ``peer="<peer_id>"`` — what
-    ``PeerSupervisor.fleet_metrics`` returns."""
+    ``PeerSupervisor.fleet_metrics`` returns.
+
+    Collisions relabel deterministically, never silently sum: two
+    peers exporting the *same* labelset stay distinct series (each
+    gains its own ``peer=`` label), and a sample whose inner labelset
+    already carries a ``peer=`` label (e.g. a client-side
+    ``repro_catalog_fp_total{peer=...}`` re-exported through a daemon
+    health snapshot) has that label renamed to ``src_peer=`` so the
+    merged key never holds two ``peer=`` entries."""
     out: Dict[str, object] = {}
     for peer, snap in snaps.items():
         if not isinstance(snap, dict):
@@ -310,6 +325,10 @@ def _is_hist(val: dict) -> bool:
 
 def _relabel(lbl: str, peer: str) -> str:
     inner = lbl.strip("{}")
+    if inner:
+        inner = ",".join(
+            ("src_" + p if p.startswith('peer="') else p)
+            for p in inner.split(","))
     parts = [p for p in (f'peer="{peer}"', inner) if p]
     return "{" + ",".join(parts) + "}"
 

@@ -64,7 +64,8 @@ class Scheduler:
     def __init__(self, engine: BatchedEngine, sampler: Callable = greedy,
                  rng: Optional[np.random.Generator] = None,
                  on_prefill: Optional[Callable] = None,
-                 tracer: Optional[Tracer] = None):
+                 tracer: Optional[Tracer] = None,
+                 queue_wait_buckets=None):
         self.engine = engine
         self.sampler = sampler
         self.rng = rng
@@ -76,9 +77,13 @@ class Scheduler:
         self._m_reqs = REGISTRY.counter(
             "sched_requests_total", "requests finished by reason",
             ("reason",))
+        # bucket edges are registration-time config (first registration
+        # of the family wins in the process-wide registry)
         self._m_queue = REGISTRY.histogram(
             "sched_queue_wait_seconds",
-            "submit-to-admission wait per request")
+            "submit-to-admission wait per request",
+            **({"buckets": tuple(queue_wait_buckets)}
+               if queue_wait_buckets else {}))
         # called as on_prefill(slot_i, req, logits_row) right after a
         # FRESH prefill (cache-resumed admissions came FROM the cache,
         # so there is nothing new to publish) — the gateway hooks this

@@ -1,0 +1,253 @@
+"""Decision ledger + estimator calibration: regret math, broker dedup
+linkage, drift alarms with hysteresis, the Bloom-FP probe, and the
+stale-catalog false-positive counter — unit tests plus the sim-fabric
+end-to-end paths (planner opens, client commits)."""
+import pytest
+
+from repro.config import CacheConfig
+from repro.core import (CacheCluster, EdgeClient, PromptSegments,
+                        SimClock)
+from repro.core.bloom import BloomFilter
+from repro.core.perfmodel import PI_ZERO_2W
+from repro.core.session_pool import FetchBroker
+from repro.obs.calibrate import CalibrationTracker, catalog_fp_probe
+from repro.obs.flight import ESTIMATOR_DRIFT, FlightRecorder
+from repro.obs.ledger import LEDGER, DecisionLedger
+from repro.obs.metrics import REGISTRY, MetricsRegistry
+from repro.serving.engine import InferenceEngine
+
+HET_LINKS = [(30e6, 0.002), (21e6, 0.003), (8e6, 0.008)]
+
+
+# ---------------------------------------------------------------------------
+# regret math
+# ---------------------------------------------------------------------------
+
+def test_regret_zero_when_plan_wins_cleanly():
+    led = DecisionLedger()
+    rec = led.open(client="c", prompt_tokens=100, trace_id="tr-1",
+                   candidates=[{"peer": "p0", "range_tokens": 100,
+                                "est_fetch_s": 0.05, "est_total_s": 0.05,
+                                "ring_rank": 0, "pruned": False}],
+                   local_est_s=0.5)
+    led.note_attempt(rec, peer="p0", range_tokens=100, result="hit",
+                     est_fetch_s=0.05, actual_s=0.07)
+    led.commit(rec, chosen="p0", result="hit", fetch_s=0.07)
+    oc = rec["outcome"]
+    assert oc["realized_total_s"] == pytest.approx(0.07)
+    assert oc["best_hindsight_s"] == pytest.approx(0.07)
+    assert oc["regret_s"] == pytest.approx(0.0)
+    assert oc["savings_vs_local_s"] == pytest.approx(0.43)
+    assert led.get("tr-1") is rec and led.get(rec["id"]) is rec
+    t = led.totals()
+    assert t["commits"] == 1 and t["wins"] == 1
+    # commit is idempotent: a second close cannot rewrite the outcome
+    led.commit(rec, chosen=None, result="local", local_prefill_s=9.0)
+    assert rec["outcome"]["result"] == "hit"
+    assert led.totals()["commits"] == 1
+
+
+def test_regret_equals_wasted_fallthrough_time():
+    led = DecisionLedger()
+    rec = led.open(client="c", prompt_tokens=10, candidates=[],
+                   local_est_s=0.2)
+    led.note_attempt(rec, peer="p0", range_tokens=10, result="miss",
+                     est_fetch_s=0.01, actual_s=0.05)
+    led.note_attempt(rec, peer="p1", range_tokens=10, result="dead",
+                     est_fetch_s=0.01, actual_s=0.03)
+    led.commit(rec, chosen=None, result="local", local_prefill_s=0.2)
+    oc = rec["outcome"]
+    # realized = wasted attempts + full local prefill; hindsight best
+    # was to go local immediately, so regret == the wasted time
+    assert oc["realized_total_s"] == pytest.approx(0.28)
+    assert oc["best_hindsight_s"] == pytest.approx(0.2)
+    assert oc["regret_s"] == pytest.approx(0.08)
+    assert oc["savings_vs_local_s"] == pytest.approx(-0.08)
+    assert oc["fallthroughs"] == {"miss": 1, "dead": 1, "corrupt": 0}
+    t = led.totals()
+    assert t["fallthrough_miss"] == 1 and t["fallthrough_dead"] == 1
+    assert t["locals"] == 1 and t["wins"] == 0
+
+
+def test_learned_wall_clock_baseline():
+    led = DecisionLedger()
+    assert led.baseline_s(100) is None
+    led.note_prefill(100, 0.5)                 # 5 ms/token
+    assert led.baseline_s(200) == pytest.approx(1.0)
+    led.note_prefill(100, 1.0)                 # EWMA folds toward 10 ms
+    assert led.baseline_s(100) == pytest.approx(0.65)
+    # a perf-less (wall-clock) commit falls back to the learned rate
+    rec = led.open(client="c", prompt_tokens=100, candidates=[])
+    led.commit(rec, chosen="p0", result="hit", fetch_s=0.1)
+    oc = rec["outcome"]
+    assert oc["baseline_s"] == pytest.approx(0.65)
+    assert oc["savings_vs_local_s"] == pytest.approx(0.55)
+
+
+def test_ledger_bounded_fifo_with_aliases():
+    led = DecisionLedger(max_records=2)
+    r0 = led.open(client="c", trace_id="t0")
+    led.alias("cmpl-0", r0["id"])
+    led.open(client="c", trace_id="t1")
+    r2 = led.open(client="c", trace_id="t2")
+    assert led.get(r0["id"]) is None           # FIFO evicted
+    assert led.get("t0") is None               # aliases went with it
+    assert led.get("cmpl-0") is None
+    assert led.get("t2") is r2
+    assert len(led.records(10)) == 2
+    # finalize folds late serving timings into a committed outcome
+    led.commit(r2, chosen=None, result="local", local_prefill_s=0.1)
+    led.finalize("t2", ttft_s=0.123)
+    assert r2["outcome"]["ttft_s"] == 0.123
+
+
+# ---------------------------------------------------------------------------
+# calibration: drift alarm, hysteresis, Bloom-FP probe
+# ---------------------------------------------------------------------------
+
+def test_calibration_drift_alarm_and_hysteresis():
+    fr = FlightRecorder(capacity=16, max_dumps=8)
+    reg = MetricsRegistry()
+    cal = CalibrationTracker(band=0.5, min_obs=4, flight=fr,
+                             registry=reg)
+    cal.observe("p0", est_s=0.0, actual_s=0.1)   # dropped: no estimate
+    for _ in range(3):
+        cal.observe("p0", est_s=0.01, actual_s=0.5)
+    assert not cal.drifted()                     # min_obs gate
+    assert not fr.dumps()
+    cal.observe("p0", est_s=0.01, actual_s=0.5)
+    assert cal.drifted() == ["p0"]
+    assert reg.snapshot()["repro_estimator_drift"]['{peer="p0"}'] == 1.0
+    dumps = [d for d in fr.dumps() if d["reason"] == ESTIMATOR_DRIFT]
+    assert len(dumps) == 1
+    assert dumps[0]["context"]["peer"] == "p0"
+    # still drifted: no dump flapping
+    cal.observe("p0", est_s=0.01, actual_s=0.5)
+    assert len(fr.dumps()) == 1
+    # hysteresis: clears only once |ewma| decays below band/2
+    for _ in range(20):
+        cal.observe("p0", est_s=0.5, actual_s=0.5)
+    assert cal.drifted() == []
+    assert reg.snapshot()["repro_estimator_drift"]['{peer="p0"}'] == 0.0
+    snap = cal.snapshot()["p0"]
+    assert snap["drift_events"] == 1 and snap["n"] >= 25
+
+
+def test_catalog_fp_probe_matches_bloom_analytics():
+    bf = BloomFilter(capacity=128, fp_rate=0.05)
+    for i in range(64):
+        bf.add(bytes([i]) * 32)
+    probe = catalog_fp_probe(bf, gets=10, misses=1, tombstones=2)
+    assert probe["predicted"] == pytest.approx(bf.expected_fp_rate())
+    assert 0.0 < probe["predicted"] < 1.0
+    assert probe["realized"] == pytest.approx(0.1)
+    assert probe["tombstones"] == 2
+    empty = catalog_fp_probe(None, 0, 0)
+    assert empty["predicted"] == 0.0 and empty["realized"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# end to end over the sim fabric: planner opens, client commits
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def ledger_world(tiny_setup):
+    cfg, model, params = tiny_setup
+    engine = InferenceEngine(model, params, max_len=512)
+    ccfg = CacheConfig()
+    cluster = CacheCluster(HET_LINKS, ccfg)
+
+    def client(name, **kw):
+        d = cluster.directory(clock=SimClock())
+        return EdgeClient(name, engine, d, ccfg, perf=PI_ZERO_2W, **kw)
+    return cluster, client
+
+
+def _one_range_prompt(start: int, n: int) -> PromptSegments:
+    tokens = list(range(start, start + n))
+    return PromptSegments.make(tokens, [len(tokens)])
+
+
+def test_planner_opens_and_client_commits(ledger_world):
+    cluster, client = ledger_world
+    seg = _one_range_prompt(3, 57)
+    LEDGER.clear()
+
+    r1 = client("seeder").infer(seg, max_new_tokens=2)
+    assert r1.matched_tokens == 0
+    rec = LEDGER.get(r1.trace_id)
+    assert rec is not None and rec["client"] == "seeder"
+    assert rec["outcome"]["result"] == "local"
+    assert rec["outcome"]["regret_s"] == pytest.approx(0.0)
+
+    cluster.gossip()
+    c2 = client("fetcher")
+    c2.sync_catalog()
+    r2 = c2.infer(seg, max_new_tokens=2)
+    assert r2.matched_tokens == 57
+    rec = LEDGER.get(r2.trace_id)
+    assert rec["client"] == "fetcher"
+    # full candidate schema (the stable contract in planner.py)
+    assert rec["candidates"]
+    assert {"peer", "range_tokens", "est_fetch_s", "est_total_s",
+            "ring_rank", "pruned"} <= set(rec["candidates"][0])
+    assert rec["attempts"] and rec["attempts"][0]["result"] == "hit"
+    oc = rec["outcome"]
+    assert oc["result"] == "hit" and oc["chosen"] == r2.served_by
+    assert oc["fetch_s"] > 0.0 and oc["regret_s"] >= 0.0
+    assert oc["savings_vs_local_s"] is not None
+    t = LEDGER.totals()
+    assert t["decisions"] == 2 and t["commits"] == 2
+    assert t["wins"] == 1 and t["locals"] == 1
+
+
+def test_broker_dedup_links_records(ledger_world):
+    cluster, client = ledger_world
+    seg = _one_range_prompt(7, 70)
+    client("seeder").infer(seg, max_new_tokens=2)
+    cluster.gossip()
+
+    broker = FetchBroker()
+    a = client("leader", broker=broker)
+    b = client("follower", broker=broker)
+    a.sync_catalog()
+    b.sync_catalog()
+    LEDGER.clear()
+    ra = a.infer(seg, max_new_tokens=2)
+    rb = b.infer(seg, max_new_tokens=2)
+    assert ra.matched_tokens == rb.matched_tokens == 70
+    rec_a, rec_b = LEDGER.get(ra.trace_id), LEDGER.get(rb.trace_id)
+    # the leader's record owns the fetch; the deduped sibling links
+    # to it through the broker-shared response envelope
+    assert rec_a["outcome"]["dedup_of"] is None
+    assert rec_b["outcome"]["dedup_of"] == rec_a["id"]
+    assert rec_b["attempts"][0]["shared"] is True
+    assert LEDGER.totals()["dedup_shared"] == 1
+
+
+def test_stale_catalog_fp_bumps_directory_counter(ledger_world):
+    cluster, client = ledger_world
+    seg = _one_range_prompt(11, 44)
+    client("seeder").infer(seg, max_new_tokens=2)
+    cluster.gossip()
+    c = client("victim")
+    c.sync_catalog()
+    # force every catalog stale: peers drop the blob but the synced
+    # Blooms still advertise it — the next GET is a catalog FP
+    for peer in cluster.peers:
+        peer.server.store.clear()
+        peer.server.stored_bytes = 0
+
+    def fp_total():
+        fam = REGISTRY.snapshot().get("repro_catalog_fp_total", {})
+        return sum(fam.values()) if isinstance(fam, dict) else fam
+
+    LEDGER.clear()
+    before = fp_total()
+    res = c.infer(seg, max_new_tokens=2)
+    assert res.matched_tokens == 0             # degraded to local
+    assert fp_total() > before                 # live FP counter moved
+    rec = LEDGER.get(res.trace_id)
+    assert rec["outcome"]["result"] == "local"
+    assert rec["outcome"]["fallthroughs"]["miss"] >= 1
+    assert LEDGER.totals()["fallthrough_miss"] >= 1

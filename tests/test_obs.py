@@ -159,7 +159,9 @@ def test_prometheus_text_format():
     assert 'lat_seconds_bucket{le="1"} 2' in text
     assert 'lat_seconds_bucket{le="+Inf"} 3' in text
     assert "lat_seconds_count 3" in text
-    assert h.quantile(0.5) == pytest.approx(1.0)
+    # linear interpolation within the winning bucket: rank 1.5 of
+    # cum counts (1, 2) -> halfway through (0.1, 1.0]
+    assert h.quantile(0.5) == pytest.approx(0.55)
     # idempotent re-registration returns the same family
     assert reg.counter("ops_total") is c
     with pytest.raises(ValueError):
@@ -178,6 +180,51 @@ def test_merge_snapshots_relabels_per_peer():
     assert merged["peer_ops_total"]['{peer="p0",op="get"}'] == 3
     assert merged["peer_ops_total"]['{peer="p1",op="put"}'] == 1
     assert merged["op_seconds"]['{peer="p0"}']["count"] == 1
+
+
+def test_histogram_quantile_interpolates_within_bucket():
+    """Pinned p50 regression: the quantile walks cumulative bucket
+    counts and interpolates linearly inside the winning bucket — not
+    the old snap-to-upper-edge behavior."""
+    reg = MetricsRegistry()
+    h = reg.histogram("q_seconds", "", buckets=(1.0, 2.0, 4.0, 8.0))
+    for v in (0.5, 1.5, 2.5, 3.5, 6.0):
+        h.observe(v)
+    # rank 2.5 of cumulative counts (1, 2, 4, 5): quarter-way into
+    # the (2, 4] bucket
+    assert h.quantile(0.5) == pytest.approx(2.5)
+    assert h.quantile(0.2) == pytest.approx(1.0)   # exactly bucket 1
+    assert h.quantile(1.0) == pytest.approx(8.0)   # top bucket's edge
+    h.observe(100.0)                     # beyond the top edge
+    assert h.quantile(1.0) == 8.0        # clamped to the last bucket
+    # registration-time bucket config: custom edges drive exposition
+    assert 'q_seconds_bucket{le="4"} 4' in reg.render()
+    empty = reg.histogram("empty_seconds", "")
+    assert empty.quantile(0.5) == 0.0
+
+
+def test_merge_snapshots_peer_label_collision():
+    """Two daemons re-exporting the *same* inner labelset must stay
+    distinct series (deterministic relabel, never a silent sum): the
+    inner ``peer=`` is renamed ``src_peer=`` and the exporting
+    daemon's id takes ``peer=``."""
+    a = MetricsRegistry()
+    a.counter("repro_catalog_fp_total", "", ("peer",)) \
+        .labels(peer="p1").inc(2)
+    b = MetricsRegistry()
+    b.counter("repro_catalog_fp_total", "", ("peer",)) \
+        .labels(peer="p0").inc(5)
+    merged = merge_snapshots({"p0": a.snapshot(), "p1": b.snapshot()})
+    fam = merged["repro_catalog_fp_total"]
+    assert fam['{peer="p0",src_peer="p1"}'] == 2
+    assert fam['{peer="p1",src_peer="p0"}'] == 5
+    assert len(fam) == 2                 # nothing merged away
+    # identical unlabeled families also stay per-peer
+    c, d = MetricsRegistry(), MetricsRegistry()
+    c.gauge("depth", "").set(1)
+    d.gauge("depth", "").set(2)
+    m2 = merge_snapshots({"x": c.snapshot(), "y": d.snapshot()})
+    assert m2["depth"] == {'{peer="x"}': 1, '{peer="y"}': 2}
 
 
 def test_mock_clock_swaps_time_sources():
@@ -280,6 +327,26 @@ def test_flight_recorder_ring_and_dump(tmp_path):
     assert len(open(path).readlines()) == 2
     snap = fr.snapshot()
     assert snap["events"] == 4 and snap["dumps"] == 2
+
+
+def test_flight_dump_jsonl_size_cap(tmp_path):
+    """The JSONL spill appends, but stays bounded: past ``max_bytes``
+    it rewrites the file with only the retained dumps instead of
+    growing the disk forever."""
+    fr = FlightRecorder(capacity=4, max_dumps=8)
+    for i in range(3):
+        fr.trigger("shed", i=i)
+    path = str(tmp_path / "flight.jsonl")
+    assert fr.dump_jsonl(path) == 3          # append mode by default
+    assert fr.dump_jsonl(path) == 3
+    assert len(open(path).readlines()) == 6
+    size = os.path.getsize(path)
+    # file already at/over the cap -> rewritten, not appended
+    assert fr.dump_jsonl(path, max_bytes=size) == 3
+    assert len(open(path).readlines()) == 3
+    # max_bytes=0 disables the cap entirely
+    assert fr.dump_jsonl(path, max_bytes=0) == 3
+    assert len(open(path).readlines()) == 6
 
 
 def test_flight_dump_on_injected_chunk_error(tiny_setup):
