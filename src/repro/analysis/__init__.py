@@ -1,0 +1,26 @@
+"""Project-specific static analysis + runtime concurrency watchdog.
+
+Stdlib-only (importable from the lint stage and from the JAX-free
+daemon fleet). Two halves:
+
+* ``python -m repro.analysis src/`` — AST/import-graph checks R1–R5
+  (daemon import hygiene, blocking-in-coroutine, raw clocks, wire-op
+  consistency, static lock-order cycles). See ``docs/analysis.md``.
+* :mod:`repro.analysis.watchdog` — opt-in runtime lock-order watchdog
+  (``REPRO_LOCK_WATCHDOG=1``) that instruments ``threading.Lock`` /
+  ``RLock`` and fails on acquisition-order cycles or blocking calls
+  made while holding a lock.
+"""
+from repro.analysis.checker import (ALL_RULES, Report, check_paths,
+                                    default_baseline_path, run_rules)
+from repro.analysis.core import Baseline, Finding, SourceFile, load_tree
+from repro.analysis.watchdog import (LockOrderViolation,
+                                     LockOrderWatchdog, install,
+                                     install_from_env, uninstall)
+
+__all__ = [
+    "ALL_RULES", "Baseline", "Finding", "LockOrderViolation",
+    "LockOrderWatchdog", "Report", "SourceFile", "check_paths",
+    "default_baseline_path", "install", "install_from_env",
+    "load_tree", "run_rules", "uninstall",
+]

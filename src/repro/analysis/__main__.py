@@ -1,0 +1,53 @@
+"""CLI: ``python -m repro.analysis src/ [more paths] [options]``.
+
+Exit status 0 when clean, 1 on live violations OR stale baseline
+entries. Stdlib-only — safe to run in the lint stage before any
+project dependency is installed.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis.checker import (ALL_RULES, check_paths,
+                                    default_baseline_path)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="project-specific static checks (R1-R5); see "
+                    "docs/analysis.md for the rule catalog")
+    ap.add_argument("paths", nargs="+",
+                    help="files or directory roots to scan (a root is "
+                         "treated as a sys.path entry for module-name "
+                         "resolution, e.g. src/)")
+    ap.add_argument("--rules", default=",".join(ALL_RULES),
+                    help="comma-separated subset, e.g. R1,R4 "
+                         "(default: all)")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline JSON (default: "
+                         "analysis_baseline.json next to the first "
+                         "scan root)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore any baseline file (report raw)")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable report on stdout")
+    args = ap.parse_args(argv)
+
+    rules = tuple(r.strip() for r in args.rules.split(",") if r.strip())
+    bad = [r for r in rules if r not in ALL_RULES]
+    if bad:
+        ap.error(f"unknown rule(s) {bad}; known: {', '.join(ALL_RULES)}")
+
+    baseline = None
+    if not args.no_baseline:
+        baseline = args.baseline or default_baseline_path(args.paths)
+
+    rep = check_paths(args.paths, rules=rules, baseline_path=baseline)
+    print(rep.to_json() if args.as_json else rep.render())
+    return 1 if rep.failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,119 @@
+"""Checker orchestration: load the tree, run R1–R5, apply inline
+suppressions and the baseline, render a report."""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+from repro.analysis.core import Baseline, Finding, SourceFile, load_tree
+from repro.analysis.imports import check_daemon_closure
+from repro.analysis.locks import check_lock_order
+from repro.analysis.rules import check_blocking_in_async, check_raw_clocks
+from repro.analysis.wire import check_wire_ops
+
+ALL_RULES = ("R1", "R2", "R3", "R4", "R5")
+
+
+@dataclass
+class Report:
+    live: List[Finding] = field(default_factory=list)
+    suppressed_inline: List[Finding] = field(default_factory=list)
+    suppressed_baseline: List[Finding] = field(default_factory=list)
+    stale_baseline: List[dict] = field(default_factory=list)
+    n_files: int = 0
+
+    @property
+    def failed(self) -> bool:
+        return bool(self.live or self.stale_baseline)
+
+    def render(self) -> str:
+        lines: List[str] = []
+        for f in sorted(self.live,
+                        key=lambda f: (f.path, f.line, f.rule)):
+            lines.append(f.render())
+        for e in self.stale_baseline:
+            lines.append(
+                f"baseline: STALE entry {e['rule']}/{e['key']} "
+                f"({e['reason']!r}) no longer matches any violation — "
+                f"delete it so the baseline can only shrink")
+        lines.append(
+            f"repro.analysis: {self.n_files} files, "
+            f"{len(self.live)} violation(s), "
+            f"{len(self.suppressed_inline)} inline-allowed, "
+            f"{len(self.suppressed_baseline)} baselined, "
+            f"{len(self.stale_baseline)} stale baseline entr"
+            f"{'y' if len(self.stale_baseline) == 1 else 'ies'}"
+            f" -> {'FAIL' if self.failed else 'OK'}")
+        return "\n".join(lines)
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "failed": self.failed,
+            "n_files": self.n_files,
+            "live": [f.__dict__ for f in self.live],
+            "suppressed_inline": [f.__dict__
+                                  for f in self.suppressed_inline],
+            "suppressed_baseline": [f.__dict__
+                                    for f in self.suppressed_baseline],
+            "stale_baseline": self.stale_baseline,
+        }, indent=2, sort_keys=True)
+
+
+def run_rules(files: Sequence[SourceFile],
+              rules: Sequence[str] = ALL_RULES) -> List[Finding]:
+    files = list(files)
+    findings: List[Finding] = []
+    if "R1" in rules:
+        findings.extend(check_daemon_closure(files))
+    for sf in files:
+        if "R2" in rules:
+            findings.extend(check_blocking_in_async(sf))
+        if "R3" in rules:
+            findings.extend(check_raw_clocks(sf))
+    if "R4" in rules:
+        findings.extend(check_wire_ops(files))
+    if "R5" in rules:
+        findings.extend(check_lock_order(files))
+    return findings
+
+
+def check_paths(paths: Sequence[str],
+                rules: Sequence[str] = ALL_RULES,
+                baseline_path: Optional[str] = None) -> Report:
+    files: List[SourceFile] = []
+    by_path: Dict[str, SourceFile] = {}
+    for p in paths:
+        for sf in load_tree(p):
+            files.append(sf)
+            by_path[sf.path] = sf
+
+    findings = run_rules(files, rules)
+
+    # inline suppressions first: an allowed line never reaches the
+    # baseline, so `# repro: allow[...]` and baseline entries cannot
+    # shadow each other
+    kept: List[Finding] = []
+    inline: List[Finding] = []
+    for f in findings:
+        sf = by_path.get(f.path)
+        if sf is not None and sf.allowed(f.rule, f.line):
+            inline.append(f)
+        else:
+            kept.append(f)
+
+    baseline = Baseline.load(baseline_path)
+    live, baselined, stale = baseline.apply(kept)
+    return Report(live, inline, baselined, stale, len(files))
+
+
+def default_baseline_path(paths: Sequence[str]) -> Optional[str]:
+    """``analysis_baseline.json`` next to the first scan root (for
+    ``python -m repro.analysis src/`` run from the repo root, that is
+    the repo root)."""
+    if not paths:
+        return None
+    root = os.path.normpath(paths[0])
+    parent = os.path.dirname(root) or "."
+    return os.path.join(parent, "analysis_baseline.json")

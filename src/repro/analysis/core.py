@@ -1,0 +1,150 @@
+"""Shared plumbing for the project static checker.
+
+One :class:`SourceFile` per ``.py`` file (parsed once, shared by every
+rule), :class:`Finding` as the single violation currency, inline
+suppressions, and the checked-in baseline.
+
+Suppression syntax (one rule, one line)::
+
+    t0 = time.monotonic()   # repro: allow[R3] clock-source definition
+
+The comment silences exactly the named rule on exactly that physical
+line. Anything broader — a whole-file or whole-class exception — goes
+in the baseline file instead, where it carries a reason and is checked
+for staleness: a baseline entry that no longer matches a live violation
+FAILS the run, so the baseline can only shrink, never rot.
+"""
+from __future__ import annotations
+
+import ast
+import json
+import os
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set
+
+_ALLOW_RE = re.compile(r"#\s*repro:\s*allow\[(R\d+)\]\s*(.*)")
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One rule violation.
+
+    ``key`` is the stable identity used for baseline matching: it never
+    contains line numbers, so unrelated edits can't detach a baseline
+    entry from the violation it documents.
+    """
+
+    rule: str                  # "R1".."R5"
+    path: str                  # path as scanned (repo-relative in CI)
+    line: int                  # 1-based; 0 = file/graph-level finding
+    message: str
+    key: str
+
+    def render(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        return f"{loc}: {self.rule} {self.message}"
+
+
+@dataclass
+class SourceFile:
+    path: str                  # filesystem path
+    relpath: str               # path relative to the scan root
+    modname: str               # dotted module name ("" outside a package)
+    source: str
+    tree: ast.AST
+    # line -> rules inline-allowed on that line
+    allow: Dict[int, Set[str]] = field(default_factory=dict)
+
+    @classmethod
+    def load(cls, path: str, relpath: str, modname: str) -> "SourceFile":
+        with open(path, "r", encoding="utf-8") as f:
+            source = f.read()
+        tree = ast.parse(source, filename=path)
+        allow: Dict[int, Set[str]] = {}
+        for i, text in enumerate(source.splitlines(), start=1):
+            m = _ALLOW_RE.search(text)
+            if m:
+                allow.setdefault(i, set()).add(m.group(1))
+        return cls(path, relpath, modname, source, tree, allow)
+
+    def allowed(self, rule: str, line: int) -> bool:
+        return rule in self.allow.get(line, ())
+
+
+def iter_py_files(root: str):
+    """Yield (path, relpath) for every ``.py`` under ``root`` (which may
+    itself be a single file), skipping caches."""
+    root = os.path.normpath(root)
+    if os.path.isfile(root):
+        yield root, os.path.basename(root)
+        return
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = sorted(d for d in dirnames
+                             if d not in ("__pycache__", ".git"))
+        for fn in sorted(filenames):
+            if fn.endswith(".py"):
+                path = os.path.join(dirpath, fn)
+                yield path, os.path.relpath(path, root)
+
+
+def modname_for(root: str, relpath: str) -> str:
+    """Dotted module name of ``relpath`` when ``root`` is on sys.path
+    (the ``src/`` layout); ``foo/__init__.py`` -> ``foo``."""
+    parts = relpath.replace(os.sep, "/").split("/")
+    if parts[-1] == "__init__.py":
+        parts = parts[:-1]
+    else:
+        parts[-1] = parts[-1][:-3]
+    return ".".join(p for p in parts if p)
+
+
+def load_tree(root: str) -> List[SourceFile]:
+    out = []
+    for path, relpath in iter_py_files(root):
+        out.append(SourceFile.load(path, relpath,
+                                   modname_for(root, relpath)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# baseline
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Baseline:
+    """Checked-in intentional exceptions: ``{"entries": [{"rule", "key",
+    "reason"}, ...]}``. Matching is exact on (rule, key)."""
+
+    entries: List[dict] = field(default_factory=list)
+    path: Optional[str] = None
+
+    @classmethod
+    def load(cls, path: Optional[str]) -> "Baseline":
+        if path is None or not os.path.exists(path):
+            return cls([], path)
+        with open(path, "r", encoding="utf-8") as f:
+            data = json.load(f)
+        entries = list(data.get("entries", []))
+        for e in entries:
+            if not (isinstance(e, dict) and e.get("rule")
+                    and e.get("key") and e.get("reason")):
+                raise ValueError(
+                    f"baseline entry needs rule/key/reason: {e!r}")
+        return cls(entries, path)
+
+    def apply(self, findings: Sequence[Finding]):
+        """Split findings into (live, suppressed) and return the stale
+        baseline entries (matched nothing — they must be deleted)."""
+        by_key = {(e["rule"], e["key"]): e for e in self.entries}
+        live, suppressed, hit = [], [], set()
+        for f in findings:
+            e = by_key.get((f.rule, f.key))
+            if e is None:
+                live.append(f)
+            else:
+                suppressed.append(f)
+                hit.add((f.rule, f.key))
+        stale = [e for e in self.entries
+                 if (e["rule"], e["key"]) not in hit]
+        return live, suppressed, stale

@@ -1,0 +1,136 @@
+"""R1 — the daemon import closure stays JAX/numpy-free.
+
+A cache-peer daemon (``python -m repro.core.net.daemon``) must start in
+milliseconds and never drag an ML runtime into the fleet: one stray
+module-level ``import jax`` anywhere in its transitive import closure
+would cost every peer process hundreds of MB and seconds of startup.
+
+This is a *static* walk of module-level imports (function-level lazy
+imports are deliberately excluded — they are the sanctioned escape
+hatch, paid only when the symbol is actually used), so it covers every
+module the interpreter would execute at daemon import time, not just
+the ones a smoke test happened to touch.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.core import Finding, SourceFile
+
+BANNED_ROOTS = ("jax", "jaxlib", "numpy")
+DAEMON_MODULE = "repro.core.net.daemon"
+
+
+def module_level_imports(sf: SourceFile) -> List[Tuple[str, int]]:
+    """(imported module name, line) for every import executed at module
+    import time — anywhere outside a function body, including inside
+    module-level ``if``/``try`` blocks and class bodies."""
+    out: List[Tuple[str, int]] = []
+
+    def walk(node: ast.AST) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda)):
+                continue
+            if isinstance(child, ast.Import):
+                for alias in child.names:
+                    out.append((alias.name, child.lineno))
+            elif isinstance(child, ast.ImportFrom):
+                base = _resolve_from(sf.modname, child)
+                if base is None:
+                    continue
+                out.append((base, child.lineno))
+                for alias in child.names:
+                    if alias.name != "*":
+                        # ``from pkg import sub`` may bind a submodule
+                        out.append((f"{base}.{alias.name}",
+                                    child.lineno))
+            else:
+                walk(child)
+
+    walk(sf.tree)
+    return out
+
+
+def _resolve_from(modname: str, node: ast.ImportFrom) -> Optional[str]:
+    if node.level == 0:
+        return node.module
+    # relative import: resolve against this module's package
+    parts = modname.split(".")
+    # a package's __init__ has modname == package name; the mapping from
+    # SourceFile always names modules, so drop `level` trailing parts
+    # (for modules, level=1 means "my package")
+    if len(parts) < node.level:
+        return None
+    base = parts[:len(parts) - node.level]
+    if node.module:
+        base = base + node.module.split(".")
+    return ".".join(base) if base else None
+
+
+class ImportGraph:
+    """Static module-level import graph over one scanned tree."""
+
+    def __init__(self, files: Iterable[SourceFile]):
+        self.by_mod: Dict[str, SourceFile] = {
+            sf.modname: sf for sf in files if sf.modname}
+
+    def _expand(self, name: str) -> List[str]:
+        """A dotted import touches the module AND every ancestor
+        package (``import a.b.c`` executes a, a.b, a.b.c)."""
+        parts = name.split(".")
+        return [".".join(parts[:i + 1]) for i in range(len(parts))]
+
+    def closure(self, start: str) -> Dict[str, Tuple[str, int]]:
+        """Modules reachable from ``start`` via module-level imports,
+        mapped to (importer module, import line) — the edge that first
+        reached them (for "how did this get here" reporting)."""
+        seen: Dict[str, Tuple[str, int]] = {start: ("", 0)}
+        stack = [start]
+        while stack:
+            mod = stack.pop()
+            sf = self.by_mod.get(mod)
+            if sf is None:
+                continue
+            for name, line in module_level_imports(sf):
+                for cand in self._expand(name):
+                    if cand in self.by_mod and cand not in seen:
+                        seen[cand] = (mod, line)
+                        stack.append(cand)
+        return seen
+
+    def chain(self, closure: Dict[str, Tuple[str, int]],
+              mod: str) -> List[str]:
+        out = [mod]
+        while True:
+            parent, _ = closure.get(out[-1], ("", 0))
+            if not parent:
+                break
+            out.append(parent)
+        return list(reversed(out))
+
+
+def check_daemon_closure(files: List[SourceFile],
+                         start: str = DAEMON_MODULE,
+                         banned: Tuple[str, ...] = BANNED_ROOTS,
+                         ) -> List[Finding]:
+    graph = ImportGraph(files)
+    if start not in graph.by_mod:
+        return []                      # tree does not contain the daemon
+    closure = graph.closure(start)
+    findings: List[Finding] = []
+    for mod in sorted(closure):
+        sf = graph.by_mod[mod]
+        flagged: Set[str] = set()
+        for name, line in module_level_imports(sf):
+            root = name.split(".")[0]
+            if root in banned and root not in flagged:
+                flagged.add(root)
+                via = " -> ".join(graph.chain(closure, mod))
+                findings.append(Finding(
+                    "R1", sf.path, line,
+                    f"daemon-reachable module {mod!r} imports {root!r} "
+                    f"at module level (reached via {via})",
+                    key=f"{mod}:{root}"))
+    return findings

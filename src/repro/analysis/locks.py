@@ -1,0 +1,198 @@
+"""R5 — static lock-order graph over nested ``with <lock>`` scopes.
+
+Locks are identified by *class*, lockdep-style: ``ClassName.attr`` for
+``self.attr = threading.Lock()`` (every instance of the class shares
+one node) or ``module.NAME`` for module-level locks. Edges come from:
+
+* syntactic nesting — ``with self.a: ... with self.b: ...`` adds
+  ``a -> b`` (and multi-item ``with a, b:`` acquires left-to-right);
+* one interprocedural hop — a ``self.method()`` call made while a lock
+  is held adds edges to every lock ``method`` itself acquires (same
+  class only; deeper chains and cross-object calls are the runtime
+  watchdog's job).
+
+A cycle in the resulting digraph means two code paths can acquire the
+same pair of lock classes in opposite orders — the classic ABBA
+deadlock, reported with one witness edge per direction. Nesting the
+*same* plain-Lock attribute is reported as a self-deadlock (an RLock
+self-edge is legal reentrancy and ignored).
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.core import Finding, SourceFile
+
+
+@dataclass(frozen=True)
+class LockDef:
+    lock_id: str                   # "mod.Class.attr" or "mod.NAME"
+    kind: str                      # "Lock" | "RLock"
+
+
+def _lock_ctor_kind(v: ast.AST) -> Optional[str]:
+    if (isinstance(v, ast.Call) and isinstance(v.func, ast.Attribute)
+            and isinstance(v.func.value, ast.Name)
+            and v.func.value.id == "threading"
+            and v.func.attr in ("Lock", "RLock")):
+        return v.func.attr
+    return None
+
+
+class _ClassScan:
+    """Per-class view: lock attrs, and per-method (locks acquired,
+    with-nesting edges)."""
+
+    def __init__(self, sf: SourceFile, cls: ast.ClassDef):
+        self.sf = sf
+        self.cls = cls
+        prefix = f"{sf.modname}.{cls.name}" if sf.modname else cls.name
+        self.prefix = prefix
+        self.locks: Dict[str, LockDef] = {}      # attr -> def
+        for node in ast.walk(cls):
+            if isinstance(node, ast.Assign):
+                kind = _lock_ctor_kind(node.value)
+                if kind:
+                    for t in node.targets:
+                        if isinstance(t, ast.Attribute) \
+                                and isinstance(t.value, ast.Name) \
+                                and t.value.id == "self":
+                            self.locks[t.attr] = LockDef(
+                                f"{prefix}.{t.attr}", kind)
+
+    def lock_for(self, expr: ast.AST) -> Optional[LockDef]:
+        if isinstance(expr, ast.Attribute) \
+                and isinstance(expr.value, ast.Name) \
+                and expr.value.id == "self":
+            return self.locks.get(expr.attr)
+        return None
+
+
+Edge = Tuple[str, str]                 # (held lock_id, acquired lock_id)
+
+
+def _scan_methods(scan: _ClassScan,
+                  edges: Dict[Edge, Tuple[str, int]],
+                  self_deadlocks: List[Finding]) -> Dict[str, Set[str]]:
+    """Collect nesting edges per method; return {method name: set of
+    lock_ids the method may acquire anywhere in its body}."""
+    acquires: Dict[str, Set[str]] = {}
+    calls_while_held: List[Tuple[str, str, int]] = []  # (held, meth, line)
+
+    for item in scan.cls.body:
+        if not isinstance(item, ast.FunctionDef):
+            continue
+
+        held: List[LockDef] = []
+        meth_acquires: Set[str] = set()
+
+        def visit(node: ast.AST) -> None:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)) and node is not item:
+                return
+            if isinstance(node, ast.With):
+                pushed = 0
+                for w in node.items:
+                    ld = scan.lock_for(w.context_expr)
+                    if ld is None:
+                        continue
+                    meth_acquires.add(ld.lock_id)
+                    for h in held:
+                        if h.lock_id == ld.lock_id:
+                            if ld.kind == "Lock":
+                                self_deadlocks.append(Finding(
+                                    "R5", scan.sf.path, node.lineno,
+                                    f"nested `with` on plain Lock "
+                                    f"{ld.lock_id} — self-deadlock "
+                                    f"(a Lock is not reentrant)",
+                                    key=f"self:{ld.lock_id}"))
+                        else:
+                            edges.setdefault(
+                                (h.lock_id, ld.lock_id),
+                                (scan.sf.path, node.lineno))
+                    held.append(ld)
+                    pushed += 1
+                for child in node.body:
+                    visit(child)
+                for _ in range(pushed):
+                    held.pop()
+                return
+            if isinstance(node, ast.Call) and held \
+                    and isinstance(node.func, ast.Attribute) \
+                    and isinstance(node.func.value, ast.Name) \
+                    and node.func.value.id == "self":
+                calls_while_held.append(
+                    (held[-1].lock_id, node.func.attr, node.lineno))
+            for child in ast.iter_child_nodes(node):
+                visit(child)
+
+        for stmt in item.body:
+            visit(stmt)
+        acquires[item.name] = meth_acquires
+
+    # one interprocedural hop: self.meth() under a held lock
+    for held_id, meth, line in calls_while_held:
+        for lock_id in acquires.get(meth, ()):
+            if lock_id != held_id:
+                edges.setdefault((held_id, lock_id),
+                                 (scan.sf.path, line))
+    return acquires
+
+
+def _find_cycle(edges: Set[Edge]) -> Optional[List[str]]:
+    graph: Dict[str, List[str]] = {}
+    for a, b in sorted(edges):
+        graph.setdefault(a, []).append(b)
+    WHITE, GRAY, BLACK = 0, 1, 2
+    color: Dict[str, int] = {}
+    stack: List[str] = []
+
+    def dfs(n: str) -> Optional[List[str]]:
+        color[n] = GRAY
+        stack.append(n)
+        for m in graph.get(n, ()):
+            c = color.get(m, WHITE)
+            if c == GRAY:
+                return stack[stack.index(m):] + [m]
+            if c == WHITE:
+                cyc = dfs(m)
+                if cyc:
+                    return cyc
+        stack.pop()
+        color[n] = BLACK
+        return None
+
+    for n in sorted(graph):
+        if color.get(n, WHITE) == WHITE:
+            cyc = dfs(n)
+            if cyc:
+                return cyc
+    return None
+
+
+def check_lock_order(files: List[SourceFile]) -> List[Finding]:
+    edges: Dict[Edge, Tuple[str, int]] = {}
+    findings: List[Finding] = []
+    for sf in files:
+        if sf.modname.startswith("repro.analysis"):
+            continue
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.ClassDef):
+                scan = _ClassScan(sf, node)
+                if scan.locks:
+                    _scan_methods(scan, edges, findings)
+
+    cycle = _find_cycle(set(edges))
+    if cycle:
+        hops = []
+        for a, b in zip(cycle, cycle[1:]):
+            path, line = edges[(a, b)]
+            hops.append(f"{a} -> {b} (at {path}:{line})")
+        first_path, first_line = edges[(cycle[0], cycle[1])]
+        findings.append(Finding(
+            "R5", first_path, first_line,
+            "lock-order cycle: " + "; ".join(hops),
+            key="cycle:" + "->".join(sorted(set(cycle)))))
+    return findings

@@ -1,0 +1,210 @@
+"""R2/R3 — per-file AST rules for the serving fabric.
+
+R2: no blocking calls inside ``async def`` bodies. The gateway's HTTP
+front door and the peer TCP server run their event loops on dedicated
+threads; one ``time.sleep`` (or sync socket/file/subprocess call, or a
+threading-lock ``acquire``) in a coroutine stalls every connection on
+that loop. Blocking work belongs on the loop's executor
+(``await loop.run_in_executor(...)``) — callables merely *passed* to
+the executor are not flagged, and nested sync ``def``s are skipped
+(they run wherever they are dispatched, not on the loop).
+
+R3: no raw ``time.time()`` / ``time.perf_counter()`` /
+``time.monotonic()`` on serving paths — every duration must come from
+:mod:`repro.obs.clock` so all timings share one mockable monotonic
+source. Offline tooling (launch/training/benchmarks) is out of scope;
+``obs/clock.py`` is the single sanctioned call site.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from repro.analysis.core import Finding, SourceFile
+
+# R2 blocklist -------------------------------------------------------------
+# module-attribute calls that block the calling thread
+BLOCKING_MODULE_CALLS = {
+    "time": {"sleep"},
+    "subprocess": {"run", "call", "check_call", "check_output", "Popen"},
+    "socket": {"create_connection", "getaddrinfo", "gethostbyname"},
+    "os": {"system", "popen", "waitpid"},
+}
+# builtins that block (sync file I/O)
+BLOCKING_BUILTINS = {"open"}
+# method names that block regardless of receiver (sync lock protocol);
+# ``await x.acquire()`` (asyncio primitives) is exempt
+BLOCKING_METHODS = {"acquire"}
+
+# R3 ----------------------------------------------------------------------
+RAW_CLOCK_ATTRS = {"time", "perf_counter", "monotonic",
+                   "time_ns", "perf_counter_ns", "monotonic_ns"}
+# serving-path scope: everything scanned EXCEPT these relpath prefixes
+R3_EXCLUDE_PREFIXES = (
+    "repro/obs/clock.py",              # the sanctioned clock source
+    "repro/launch/", "repro/training/", "repro/data/",
+    "repro/models/", "repro/kernels/", "repro/configs/",
+    "repro/roofline/", "repro/analysis/",
+)
+
+
+def _time_bindings(tree: ast.AST) -> Set[str]:
+    """Names in this file bound (at any scope) by ``from time import X``
+    for a raw-clock ``X`` — plain ``import time`` is handled by matching
+    attribute calls on the name ``time`` directly."""
+    names: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and node.module == "time" \
+                and node.level == 0:
+            for alias in node.names:
+                if alias.name in RAW_CLOCK_ATTRS | {"sleep"}:
+                    names.add(alias.asname or alias.name)
+    return names
+
+
+class _QualnameWalker(ast.NodeVisitor):
+    """Base visitor tracking the enclosing def/class qualname."""
+
+    def __init__(self) -> None:
+        self.stack: List[str] = []
+
+    @property
+    def qualname(self) -> str:
+        return ".".join(self.stack) or "<module>"
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self.stack.append(node.name)
+        self.generic_visit(node)
+        self.stack.pop()
+
+    def _visit_def(self, node) -> None:
+        self.stack.append(node.name)
+        self.generic_visit(node)
+        self.stack.pop()
+
+    visit_FunctionDef = _visit_def
+    visit_AsyncFunctionDef = _visit_def
+
+
+def _call_name(node: ast.Call) -> str:
+    f = node.func
+    if isinstance(f, ast.Attribute):
+        base = f.value
+        if isinstance(base, ast.Name):
+            return f"{base.id}.{f.attr}"
+        return f".{f.attr}"
+    if isinstance(f, ast.Name):
+        return f.id
+    return "<dynamic>"
+
+
+# ---------------------------------------------------------------------------
+# R2
+# ---------------------------------------------------------------------------
+
+def _blocking_reason(call: ast.Call, awaited: bool,
+                     from_time: Set[str]) -> str:
+    f = call.func
+    if isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name):
+        mod, attr = f.value.id, f.attr
+        if attr in BLOCKING_MODULE_CALLS.get(mod, ()):
+            return f"blocking call {mod}.{attr}()"
+    if isinstance(f, ast.Attribute) and f.attr in BLOCKING_METHODS \
+            and not awaited:
+        return (f"sync lock protocol .{f.attr}() (await an asyncio "
+                "primitive or run on the executor)")
+    if isinstance(f, ast.Name):
+        if f.id in BLOCKING_BUILTINS:
+            return f"blocking builtin {f.id}()"
+        if f.id in from_time and f.id.startswith("sleep"):
+            return "blocking call sleep() (use asyncio.sleep)"
+    return ""
+
+
+def check_blocking_in_async(sf: SourceFile) -> List[Finding]:
+    findings: List[Finding] = []
+    from_time = _time_bindings(sf.tree)
+
+    class V(_QualnameWalker):
+        def __init__(self) -> None:
+            super().__init__()
+            self.async_depth = 0
+
+        def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+            # a nested sync def does not run on the event loop
+            saved, self.async_depth = self.async_depth, 0
+            self._visit_def(node)
+            self.async_depth = saved
+
+        def visit_AsyncFunctionDef(self, node) -> None:
+            self.async_depth += 1
+            self._visit_def(node)
+            self.async_depth -= 1
+
+        def visit_Lambda(self, node: ast.Lambda) -> None:
+            pass                       # passed elsewhere, not run inline
+
+        def visit_Await(self, node: ast.Await) -> None:
+            if isinstance(node.value, ast.Call):
+                self._check(node.value, awaited=True)
+                for child in ast.iter_child_nodes(node.value):
+                    self.visit(child)
+            else:
+                self.generic_visit(node)
+
+        def visit_Call(self, node: ast.Call) -> None:
+            self._check(node, awaited=False)
+            self.generic_visit(node)
+
+        def _check(self, node: ast.Call, awaited: bool) -> None:
+            if not self.async_depth:
+                return
+            reason = _blocking_reason(node, awaited, from_time)
+            if reason:
+                findings.append(Finding(
+                    "R2", sf.path, node.lineno,
+                    f"{reason} inside `async def {self.stack[-1]}` — "
+                    f"dispatch to an executor instead",
+                    key=f"{sf.relpath}:{self.qualname}:"
+                        f"{_call_name(node)}"))
+
+    V().visit(sf.tree)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# R3
+# ---------------------------------------------------------------------------
+
+def _r3_in_scope(relpath: str) -> bool:
+    rel = relpath.replace("\\", "/")
+    return not any(rel.startswith(p) for p in R3_EXCLUDE_PREFIXES)
+
+
+def check_raw_clocks(sf: SourceFile) -> List[Finding]:
+    if not _r3_in_scope(sf.relpath):
+        return []
+    findings: List[Finding] = []
+    from_time = {n for n in _time_bindings(sf.tree) if n != "sleep"}
+
+    class V(_QualnameWalker):
+        def visit_Call(self, node: ast.Call) -> None:
+            f = node.func
+            bad = ""
+            if isinstance(f, ast.Attribute) \
+                    and isinstance(f.value, ast.Name) \
+                    and f.value.id == "time" \
+                    and f.attr in RAW_CLOCK_ATTRS:
+                bad = f"time.{f.attr}()"
+            elif isinstance(f, ast.Name) and f.id in from_time:
+                bad = f"{f.id}()"
+            if bad:
+                findings.append(Finding(
+                    "R3", sf.path, node.lineno,
+                    f"raw clock {bad} on a serving path — use "
+                    f"repro.obs.clock.monotonic()/wall()",
+                    key=f"{sf.relpath}:{self.qualname}:{bad}"))
+            self.generic_visit(node)
+
+    V().visit(sf.tree)
+    return findings

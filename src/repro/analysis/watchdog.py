@@ -1,0 +1,319 @@
+"""Runtime lock-order watchdog (opt-in: ``REPRO_LOCK_WATCHDOG=1``).
+
+The static R5 pass sees syntactic nesting inside one class; this
+watchdog sees what actually happens: it wraps ``threading.Lock`` /
+``threading.RLock`` so every acquisition records, per thread, which
+lock *classes* were already held. Lock classes are lockdep-style —
+identified by their creation site (``file:line`` of the ``Lock()``
+call), so all instances born at one line share a node and an order
+proven on any instance pair constrains all of them.
+
+Two violation kinds are recorded (never raised in-line — a detector
+that crashes the serving path it watches would mask the bug):
+
+* **cycle** — a new held->acquired edge closes a cycle in the global
+  lock-order graph: two threads can acquire the same lock classes in
+  opposite orders (ABBA deadlock), reported with one witness per edge;
+* **blocking-while-held** — ``time.sleep`` called while holding a
+  watched lock (stalls every thread contending for it).
+
+Same-class edges (two *instances* of one creation site nested, e.g.
+in-proc peer A delegating to peer B) are not recorded: without lockdep
+nesting annotations they cannot be told apart from reentrancy-safe
+patterns, and the false-positive cost outweighs it.
+
+Use :func:`install` / :func:`uninstall` (or the conftest hook), then
+:func:`report` / :func:`check` at teardown. Locks created while the
+watchdog is installed stay functional after ``uninstall`` — the
+wrapper delegates to a real ``_thread`` lock underneath, and
+``__getattr__`` forwarding keeps ``threading.Condition`` internals
+(``_release_save`` / ``_acquire_restore`` / ``_is_owned``) working.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import threading
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Set, Tuple
+
+import _thread
+
+ENV_VAR = "REPRO_LOCK_WATCHDOG"
+
+_WATCHDOG_FILES = (os.sep + "analysis" + os.sep + "watchdog.py",)
+
+
+def _creation_site() -> str:
+    """file:line of the frame that called ``threading.Lock()`` —
+    the lock's lockdep class."""
+    f = sys._getframe(2)
+    while f is not None and f.f_code.co_filename.endswith(
+            _WATCHDOG_FILES):
+        f = f.f_back
+    if f is None:
+        return "<unknown>"
+    return f"{os.path.basename(f.f_code.co_filename)}:{f.f_lineno}"
+
+
+def _acquire_site() -> str:
+    f = sys._getframe(2)
+    while f is not None and f.f_code.co_filename.endswith(
+            _WATCHDOG_FILES):
+        f = f.f_back
+    if f is None:
+        return "<unknown>"
+    return f"{f.f_code.co_filename}:{f.f_lineno}"
+
+
+@dataclass
+class Violation:
+    kind: str                      # "cycle" | "blocking-while-held"
+    detail: str
+    thread: str
+    site: str
+
+    def render(self) -> str:
+        return (f"[{self.kind}] {self.detail} "
+                f"(thread {self.thread}, at {self.site})")
+
+
+class LockOrderWatchdog:
+    def __init__(self) -> None:
+        # leaf-only internal lock: a raw _thread lock so the watchdog
+        # can never participate in the graphs it builds
+        self._mu = _thread.allocate_lock()
+        # (held class, acquired class) -> (thread, site) first witness
+        self.edges: Dict[Tuple[str, str], Tuple[str, str]] = {}
+        self.violations: List[Violation] = []
+        self._cycles_seen: Set[frozenset] = set()
+        self._tls = threading.local()
+        self.n_acquires = 0
+
+    # -- per-thread held stack -----------------------------------------
+    def _held(self) -> List[Tuple[str, int]]:
+        st = getattr(self._tls, "stack", None)
+        if st is None:
+            st = self._tls.stack = []
+        return st
+
+    def on_acquired(self, class_id: str, inst_id: int) -> None:
+        held = self._held()
+        reentrant = any(i == inst_id for _, i in held)
+        if not reentrant and held:
+            site = _acquire_site()
+            tname = threading.current_thread().name
+            new_edges = []
+            with self._mu:
+                self.n_acquires += 1
+                for hcls, hinst in held:
+                    if hcls == class_id:
+                        continue       # same-class: see module docstring
+                    e = (hcls, class_id)
+                    if e not in self.edges:
+                        self.edges[e] = (tname, site)
+                        new_edges.append(e)
+                if new_edges:
+                    self._check_cycles_locked()
+        else:
+            with self._mu:
+                self.n_acquires += 1
+        held.append((class_id, inst_id))
+
+    def on_released(self, inst_id: int) -> None:
+        held = self._held()
+        for i in range(len(held) - 1, -1, -1):
+            if held[i][1] == inst_id:
+                del held[i]
+                return
+
+    def on_blocking_call(self, what: str) -> None:
+        held = self._held()
+        if not held:
+            return
+        classes = ", ".join(sorted({c for c, _ in held}))
+        with self._mu:
+            self.violations.append(Violation(
+                "blocking-while-held",
+                f"{what} while holding lock(s) {classes}",
+                threading.current_thread().name, _acquire_site()))
+
+    # -- cycle detection (called with self._mu held) --------------------
+    def _check_cycles_locked(self) -> None:
+        graph: Dict[str, List[str]] = {}
+        for a, b in self.edges:
+            graph.setdefault(a, []).append(b)
+        color: Dict[str, int] = {}
+        stack: List[str] = []
+
+        def dfs(n: str) -> Optional[List[str]]:
+            color[n] = 1
+            stack.append(n)
+            for m in graph.get(n, ()):
+                c = color.get(m, 0)
+                if c == 1:
+                    return stack[stack.index(m):] + [m]
+                if c == 0:
+                    cyc = dfs(m)
+                    if cyc:
+                        return cyc
+            stack.pop()
+            color[n] = 2
+            return None
+
+        for n in sorted(graph):
+            if color.get(n, 0) == 0:
+                cyc = dfs(n)
+                if cyc:
+                    ident = frozenset(cyc)
+                    if ident in self._cycles_seen:
+                        return
+                    self._cycles_seen.add(ident)
+                    hops = []
+                    for a, b in zip(cyc, cyc[1:]):
+                        t, s = self.edges[(a, b)]
+                        hops.append(f"{a} -> {b} [{t} at {s}]")
+                    self.violations.append(Violation(
+                        "cycle", "lock-order cycle: " + "; ".join(hops),
+                        threading.current_thread().name,
+                        _acquire_site()))
+                    return
+
+    # -- reporting ------------------------------------------------------
+    def snapshot(self) -> dict:
+        with self._mu:
+            return {"n_acquires": self.n_acquires,
+                    "n_edges": len(self.edges),
+                    "violations": [v.render() for v in self.violations]}
+
+    def report(self) -> str:
+        snap = self.snapshot()
+        lines = [f"lock watchdog: {snap['n_acquires']} acquisitions, "
+                 f"{snap['n_edges']} order edges, "
+                 f"{len(snap['violations'])} violation(s)"]
+        lines.extend("  " + v for v in snap["violations"])
+        return "\n".join(lines)
+
+    def check(self) -> None:
+        """Raise if any violation was recorded."""
+        if self.violations:
+            raise LockOrderViolation(self.report())
+
+
+class LockOrderViolation(AssertionError):
+    pass
+
+
+# ---------------------------------------------------------------------------
+# instrumented lock wrappers
+# ---------------------------------------------------------------------------
+
+class _WatchedLockBase:
+    _factory = staticmethod(_thread.allocate_lock)
+
+    def __init__(self, wd: LockOrderWatchdog):
+        self._wd = wd
+        self._inner = self._factory()
+        self._class_id = _creation_site()
+
+    def acquire(self, blocking: bool = True, timeout: float = -1):
+        got = self._inner.acquire(blocking, timeout)
+        if got:
+            self._wd.on_acquired(self._class_id, id(self))
+        return got
+
+    def release(self) -> None:
+        self._inner.release()
+        self._wd.on_released(id(self))
+
+    def locked(self) -> bool:
+        return self._inner.locked()
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+    def __getattr__(self, name: str):
+        # Condition internals (_release_save/_acquire_restore/_is_owned
+        # on RLock) and anything else exotic go straight to the real
+        # lock; a waiting thread runs no code while our bookkeeping is
+        # briefly stale, so order recording stays sound.
+        if name in ("_inner", "_wd", "_class_id"):
+            raise AttributeError(name)
+        return getattr(self._inner, name)
+
+    def __repr__(self) -> str:
+        return (f"<watched {type(self).__name__} "
+                f"class={self._class_id} inner={self._inner!r}>")
+
+
+class _WatchedLock(_WatchedLockBase):
+    pass
+
+
+class _WatchedRLock(_WatchedLockBase):
+    _factory = staticmethod(_thread.RLock)
+
+
+# ---------------------------------------------------------------------------
+# install / uninstall
+# ---------------------------------------------------------------------------
+
+_active: Optional[LockOrderWatchdog] = None
+_saved: dict = {}
+
+
+def active() -> Optional[LockOrderWatchdog]:
+    return _active
+
+
+def install() -> LockOrderWatchdog:
+    """Patch ``threading.Lock``/``RLock`` and ``time.sleep``. Returns
+    the watchdog; idempotent while installed."""
+    global _active
+    if _active is not None:
+        return _active
+    wd = LockOrderWatchdog()
+    _saved["Lock"] = threading.Lock
+    _saved["RLock"] = threading.RLock
+    real_sleep = _saved["sleep"] = time.sleep
+
+    def make_lock():
+        return _WatchedLock(wd)
+
+    def make_rlock():
+        return _WatchedRLock(wd)
+
+    def watched_sleep(seconds):
+        wd.on_blocking_call(f"time.sleep({seconds!r})")
+        return real_sleep(seconds)
+
+    threading.Lock = make_lock
+    threading.RLock = make_rlock
+    time.sleep = watched_sleep
+    _active = wd
+    return wd
+
+
+def uninstall() -> Optional[LockOrderWatchdog]:
+    """Restore the real primitives; returns the (now inert) watchdog.
+    Already-created watched locks keep working — they own their inner
+    lock and only append to the watchdog's records."""
+    global _active
+    if _active is None:
+        return None
+    threading.Lock = _saved.pop("Lock")
+    threading.RLock = _saved.pop("RLock")
+    time.sleep = _saved.pop("sleep")
+    wd, _active = _active, None
+    return wd
+
+
+def install_from_env() -> Optional[LockOrderWatchdog]:
+    if os.environ.get(ENV_VAR, "") not in ("", "0"):
+        return install()
+    return None

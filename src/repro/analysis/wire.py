@@ -1,0 +1,247 @@
+"""R4 — wire-op consistency between senders and ``handle`` branches.
+
+The cluster speaks a tiny string-op RPC: clients and peers send
+``transport.request(op, payload)`` / ``directory.request(peer_id, op,
+payload)`` / ``other.handle(op, payload)``; servers dispatch in
+``handle(op, payload)`` methods (``CacheServer`` -> ``CachePeer`` ->
+``DaemonHandler`` form a fall-through chain, so the handled set is the
+union over every ``handle`` method in the tree).
+
+Three drift modes are caught statically:
+
+* an op *sent* with a string literal that no ``handle`` branch matches
+  (a typo'd op returns ``{"ok": False, "error": "unknown op"}`` at
+  runtime — silently, as a cache miss);
+* an op *handled* but never sent from ``src/`` (dead wire surface —
+  either delete the branch or baseline it with a reason, e.g. ops kept
+  for operators/tests);
+* payload-key drift: a send site with a **dict-literal** payload that
+  omits a key the handler unconditionally subscripts
+  (``payload["key"]`` raises ``KeyError`` server-side; ``.get`` calls
+  are optional by construction and not required).
+
+Send sites whose op or payload is a variable are skipped — dynamic
+dispatch (e.g. the replication pump's ``kind`` variable) is invisible
+to this rule and belongs in the baseline on the handler side.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.core import Finding, SourceFile
+
+SEND_METHODS = ("request", "request_stream", "handle")
+HANDLER_METHOD = "handle"
+
+
+@dataclass
+class SendSite:
+    op: str
+    path: str
+    relpath: str
+    line: int
+    # None => payload not a plain dict literal (unknown keys, skip drift)
+    payload_keys: Optional[Set[str]] = None
+
+
+@dataclass
+class HandlerBranch:
+    op: str
+    path: str
+    relpath: str
+    line: int
+    owner: str                     # e.g. "CacheServer.handle"
+    required_keys: Set[str] = field(default_factory=set)
+
+
+def _literal_str(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None
+
+
+def _dict_literal_keys(node: ast.AST) -> Optional[Set[str]]:
+    """Keys of a plain dict literal; None if not a literal or if it has
+    computed keys / ``**`` spreads (full key set unknowable)."""
+    if not isinstance(node, ast.Dict):
+        return None
+    keys: Set[str] = set()
+    for k in node.keys:
+        if k is None:                  # **spread
+            return None
+        s = _literal_str(k)
+        if s is None:
+            return None
+        keys.add(s)
+    return keys
+
+
+def collect_send_sites(sf: SourceFile) -> List[SendSite]:
+    out: List[SendSite] = []
+    for node in ast.walk(sf.tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in SEND_METHODS):
+            continue
+        # a ``handle`` *definition* body never calls self-dotted sends;
+        # op is the first string literal among the first two positional
+        # args (covers both request(op, ...) and request(peer_id, op, ...))
+        op_idx = None
+        for i, arg in enumerate(node.args[:2]):
+            if _literal_str(arg) is not None:
+                op_idx = i
+                break
+        if op_idx is None:
+            continue                   # dynamic op — out of scope
+        op = _literal_str(node.args[op_idx])
+        payload_keys = None
+        if len(node.args) > op_idx + 1:
+            payload_keys = _dict_literal_keys(node.args[op_idx + 1])
+        out.append(SendSite(op, sf.path, sf.relpath, node.lineno,
+                            payload_keys))
+    return out
+
+
+def _op_literals(test: ast.AST) -> List[str]:
+    """Ops matched by an ``if`` test of the form ``op == "x"`` or
+    ``op in ("x", "y")`` (possibly ``or``-joined)."""
+    ops: List[str] = []
+    if isinstance(test, ast.BoolOp) and isinstance(test.op, ast.Or):
+        for v in test.values:
+            ops.extend(_op_literals(v))
+        return ops
+    if isinstance(test, ast.Compare) and len(test.ops) == 1 \
+            and isinstance(test.left, ast.Name) \
+            and test.left.id == "op":
+        cmp, right = test.ops[0], test.comparators[0]
+        if isinstance(cmp, ast.Eq):
+            s = _literal_str(right)
+            if s is not None:
+                ops.append(s)
+        elif isinstance(cmp, ast.In) \
+                and isinstance(right, (ast.Tuple, ast.List, ast.Set)):
+            for elt in right.elts:
+                s = _literal_str(elt)
+                if s is not None:
+                    ops.append(s)
+    return ops
+
+
+def _mentions(node: ast.AST, name: str) -> bool:
+    return any(isinstance(n, ast.Name) and n.id == name
+               for n in ast.walk(node))
+
+
+def _required_keys(body: List[ast.stmt], param: str) -> Set[str]:
+    """Keys the branch subscripts unconditionally. An ``if`` whose test
+    itself inspects the payload (``if payload.get("ring"):``) guards
+    optional keys — its body is excluded."""
+    keys: Set[str] = set()
+
+    def visit(node: ast.AST) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            return
+        if isinstance(node, ast.If) and _mentions(node.test, param):
+            return                     # payload-guarded => optional keys
+        if isinstance(node, ast.Subscript) \
+                and isinstance(node.value, ast.Name) \
+                and node.value.id == param:
+            s = _literal_str(node.slice)
+            if s is not None:
+                keys.add(s)
+        for child in ast.iter_child_nodes(node):
+            visit(child)
+
+    for stmt in body:
+        visit(stmt)
+    return keys
+
+
+def collect_handler_branches(sf: SourceFile) -> List[HandlerBranch]:
+    out: List[HandlerBranch] = []
+    for node in ast.walk(sf.tree):
+        if not (isinstance(node, ast.FunctionDef)
+                and node.name == HANDLER_METHOD):
+            continue
+        params = [a.arg for a in node.args.args]
+        if len(params) < 3 or params[1] != "op":
+            continue                   # not the wire dispatch signature
+        payload_param = params[2]
+        owner = node.name
+        # find enclosing class for a readable owner label
+        for parent in ast.walk(sf.tree):
+            if isinstance(parent, ast.ClassDef) \
+                    and node in ast.walk(parent):
+                owner = f"{parent.name}.{node.name}"
+                break
+        for stmt in ast.walk(node):
+            if not isinstance(stmt, ast.If):
+                continue
+            for op in _op_literals(stmt.test):
+                out.append(HandlerBranch(
+                    op, sf.path, sf.relpath, stmt.lineno, owner,
+                    _required_keys(stmt.body, payload_param)))
+    return out
+
+
+def check_wire_ops(files: List[SourceFile]) -> List[Finding]:
+    sends: List[SendSite] = []
+    branches: List[HandlerBranch] = []
+    for sf in files:
+        # skip the analysis package itself (op literals in docstrings
+        # of helper code would self-trigger) and fixtures
+        if sf.modname.startswith("repro.analysis"):
+            continue
+        sends.extend(collect_send_sites(sf))
+        branches.extend(collect_handler_branches(sf))
+    if not branches:
+        return []                      # no wire surface in this tree
+
+    handled: Dict[str, List[HandlerBranch]] = {}
+    for b in branches:
+        handled.setdefault(b.op, []).append(b)
+    sent_ops = {s.op for s in sends}
+
+    findings: List[Finding] = []
+    seen_unknown: Set[Tuple[str, str]] = set()
+    for s in sends:
+        if s.op not in handled:
+            k = (s.op, s.relpath)
+            if k in seen_unknown:
+                continue
+            seen_unknown.add(k)
+            findings.append(Finding(
+                "R4", s.path, s.line,
+                f"wire op {s.op!r} is sent here but no handle() branch "
+                f"matches it — at runtime this is a silent "
+                f"'unknown op' error",
+                key=f"sent:{s.op}"))
+            continue
+        if s.payload_keys is None:
+            continue
+        required = set()
+        for b in handled[s.op]:
+            required |= b.required_keys
+        missing = sorted(required - s.payload_keys)
+        if missing:
+            owners = ", ".join(sorted({b.owner for b in handled[s.op]}))
+            findings.append(Finding(
+                "R4", s.path, s.line,
+                f"payload for wire op {s.op!r} omits key(s) "
+                f"{missing} required by {owners}",
+                key=f"drift:{s.op}:{','.join(missing)}:{s.relpath}"))
+
+    for op in sorted(handled):
+        if op in sent_ops:
+            continue
+        b = min(handled[op], key=lambda b: (b.relpath, b.line))
+        findings.append(Finding(
+            "R4", b.path, b.line,
+            f"wire op {op!r} is handled by {b.owner} but never sent "
+            f"from the scanned tree — dead wire surface (delete the "
+            f"branch or baseline it with a reason)",
+            key=f"handled:{op}"))
+    return findings

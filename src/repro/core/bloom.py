@@ -6,13 +6,16 @@ Configured like the paper: capacity 1M entries at 1% target FP ratio
 Hashing uses the double-hashing scheme (Kirsch & Mitzenmacher): two 64-bit
 halves of blake2b(key) combine as h1 + i*h2 mod m — matching libbloom's
 approach and cheap enough for edge devices.
+
+Stdlib-only on purpose: the catalog rides inside every cache-peer
+daemon, whose import closure must stay free of ML runtimes (analysis
+rule R1) — a ``bytearray`` bit vector with big-int merge/popcount is
+plenty fast at catalog sizes and costs zero imports.
 """
 from __future__ import annotations
 
 import hashlib
 import math
-
-import numpy as np
 
 
 class BloomFilter:
@@ -24,7 +27,7 @@ class BloomFilter:
         ln2 = math.log(2.0)
         self.m = max(64, int(math.ceil(-capacity * math.log(fp_rate) / ln2 ** 2)))
         self.k = max(1, int(round(self.m / capacity * ln2)))
-        self.bits = np.zeros((self.m + 7) // 8, dtype=np.uint8)
+        self.bits = bytearray((self.m + 7) // 8)
         self.n_added = 0
 
     # -- hashing ---------------------------------------------------------
@@ -47,29 +50,33 @@ class BloomFilter:
     def merge(self, other: "BloomFilter") -> None:
         if (self.m, self.k) != (other.m, other.k):
             raise ValueError("incompatible bloom parameters")
-        np.bitwise_or(self.bits, other.bits, out=self.bits)
+        merged = (int.from_bytes(self.bits, "little")
+                  | int.from_bytes(other.bits, "little"))
+        self.bits[:] = merged.to_bytes(len(self.bits), "little")
         self.n_added += other.n_added
 
     def clear(self) -> None:
-        self.bits[:] = 0
+        self.bits[:] = bytes(len(self.bits))
         self.n_added = 0
 
     # -- wire format -----------------------------------------------------
     @property
     def size_bytes(self) -> int:
-        return self.bits.nbytes
+        return len(self.bits)
 
     def to_bytes(self) -> bytes:
-        return self.bits.tobytes()
+        return bytes(self.bits)
 
     def load_bytes(self, raw: bytes) -> None:
-        arr = np.frombuffer(raw, dtype=np.uint8)
-        if arr.shape != self.bits.shape:
+        if len(raw) != len(self.bits):
             raise ValueError("bloom size mismatch")
-        self.bits = arr.copy()
+        self.bits = bytearray(raw)
 
     # -- analytics -------------------------------------------------------
     def expected_fp_rate(self) -> float:
         """FP probability at the current fill level."""
-        frac = np.unpackbits(self.bits).mean() if self.n_added else 0.0
+        if not self.n_added:
+            return 0.0
+        ones = int.from_bytes(self.bits, "little").bit_count()
+        frac = ones / (len(self.bits) * 8)
         return float(frac) ** self.k

@@ -11,8 +11,6 @@ import hashlib
 from dataclasses import dataclass
 from typing import Sequence
 
-import numpy as np
-
 
 def model_meta(cfg, dtype_name: str) -> bytes:
     fields = (cfg.name, cfg.family, cfg.n_layers, cfg.d_model, cfg.n_heads,
@@ -29,11 +27,16 @@ class PromptKey:
     @classmethod
     def for_prefix(cls, meta: bytes, token_ids: Sequence[int],
                    n: int) -> "PromptKey":
-        ids = np.asarray(token_ids[:n], dtype=np.int32)
+        # explicit little-endian int32 encoding: byte-identical to the
+        # former np.int32 tobytes() on LE hosts, deterministic on all,
+        # and keeps this module out of the daemon's numpy ban (R1) —
+        # token_ids may be a list or any integer ndarray
+        ids = b"".join(int(t).to_bytes(4, "little", signed=True)
+                       for t in token_ids[:n])
         h = hashlib.blake2b(digest_size=32)
         h.update(meta)
         h.update(n.to_bytes(4, "little"))
-        h.update(ids.tobytes())
+        h.update(ids)
         return cls(h.digest(), n)
 
     @property

@@ -247,6 +247,13 @@ def main(argv=None) -> int:
     ap.add_argument("--drain-timeout", type=float, default=5.0)
     args = ap.parse_args(argv)
 
+    # opt-in lock-order watchdog, inherited via env from the test
+    # session / supervisor: install BEFORE any peer lock exists so the
+    # daemon's own acquisition order is watched too (repro.analysis is
+    # stdlib-only, so this keeps the daemon JAX/numpy-free)
+    from repro.analysis import watchdog as _watchdog
+    wd = _watchdog.install_from_env()
+
     stop_event = threading.Event()
     peer = CachePeer(args.peer_id, CacheConfig(
         max_store_bytes=args.max_store_bytes))
@@ -269,6 +276,10 @@ def main(argv=None) -> int:
     stop_event.wait()
     handler.save_estimator()           # learned links survive restarts
     server.close(graceful=True)        # drain in-flight, then exit
+    if wd is not None:
+        print(f"PEER-WATCHDOG {args.peer_id} {wd.report()}", flush=True)
+        if wd.violations:
+            return 4                   # surfaces in the supervisor tail
     return 0
 
 

@@ -30,6 +30,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.net.link import TCPPeerLink
 from repro.core.transport import TransportError
+from repro.obs import clock as oclock
 
 
 @dataclass
@@ -375,9 +376,9 @@ class PeerSupervisor:
         """Poll until every live peer can advertise every digest (its
         csync covers them) — used by tests to bound gossip settling
         instead of sleeping."""
-        deadline = time.monotonic() + timeout_s
+        deadline = oclock.monotonic() + timeout_s
         want = {bytes(d) for d in digests}
-        while time.monotonic() < deadline:
+        while oclock.monotonic() < deadline:
             ok = True
             for pid, pp in self.procs.items():
                 if not pp.alive:
@@ -395,6 +396,8 @@ class PeerSupervisor:
                     break
             if ok:
                 return True
+            # raw sleep on purpose: polling *remote* process state over
+            # sockets — there is no local condition to wait on
             time.sleep(0.05)
         return False
 
@@ -407,9 +410,9 @@ class PeerSupervisor:
         within gossip cadence, not eventually-never."""
         from repro.core.cluster.placement import PlacementPolicy
         placement = PlacementPolicy(sorted(self.procs))
-        deadline = time.monotonic() + timeout_s
+        deadline = oclock.monotonic() + timeout_s
         todo = {bytes(d) for d in digests}
-        while time.monotonic() < deadline:
+        while oclock.monotonic() < deadline:
             for d in list(todo):
                 pid = placement.primary(d)
                 try:
@@ -421,5 +424,5 @@ class PeerSupervisor:
                     todo.discard(d)
             if not todo:
                 return True
-            time.sleep(0.05)
+            time.sleep(0.05)   # remote-state poll, same as above
         return False

@@ -33,8 +33,8 @@ class WallClock:
         pass                           # real time advances itself
 
     def now(self) -> float:
-        import time
-        return time.monotonic()
+        from repro.obs import clock as oclock
+        return oclock.monotonic()
 
 
 @dataclass

@@ -27,6 +27,7 @@ from typing import Optional, Tuple
 
 from repro.core.netsim import SimClock, SimNetwork
 from repro.core.server import CacheServer
+from repro.obs import clock as oclock
 
 
 class TransportError(ConnectionError):
@@ -161,10 +162,8 @@ class TCPTransport:
 
     def request(self, op: str, payload: dict,
                 advance_clock: bool = True) -> Tuple[dict, float, int]:
-        import time
-
         from repro.core.net import frames
-        t0 = time.perf_counter()
+        t0 = oclock.monotonic()
         with self.lock:
             if self.sock is None:    # lazy connect / previous failure
                 self._connect()      # poisoned the stream: fresh one
@@ -181,7 +180,7 @@ class TCPTransport:
                     self.sock = None
                 raise TransportError(
                     f"request {op!r} to {self.addr} failed: {e}") from e
-        dt = time.perf_counter() - t0
+        dt = oclock.monotonic() - t0
         return resp, dt, n_up + n_down
 
     def request_stream(self, op: str, payload: dict, on_chunk,
@@ -196,10 +195,8 @@ class TCPTransport:
         of a half-read stream must never mis-pair with a later request)
         and surfaces as :class:`TransportError` / the original error.
         Returns (header_response, total_wall_seconds, total_bytes)."""
-        import time
-
         from repro.core.net import frames
-        t0 = time.perf_counter()
+        t0 = oclock.monotonic()
         with self.lock:
             if self.sock is None:
                 self._connect()
@@ -210,10 +207,10 @@ class TCPTransport:
                 total = n_up + n_down
                 n_chunks = int(header.get("n_chunks", 0)) \
                     if isinstance(header, dict) else 0
-                t_prev = time.perf_counter()
+                t_prev = oclock.monotonic()
                 for i in range(n_chunks):
                     msg, nb = frames.recv_frame_with_size(self.sock)
-                    now = time.perf_counter()
+                    now = oclock.monotonic()
                     total += nb
                     chunk = msg.get("chunk") if isinstance(msg, dict) \
                         else None
@@ -237,7 +234,7 @@ class TCPTransport:
                 finally:
                     self.sock = None
                 raise
-        return header, time.perf_counter() - t0, total
+        return header, oclock.monotonic() - t0, total
 
     def close(self):
         with self.lock:

@@ -25,7 +25,6 @@ from __future__ import annotations
 import itertools
 import queue
 import threading
-import time
 from collections import OrderedDict
 from typing import Dict, List, Optional, Tuple
 
@@ -307,12 +306,19 @@ class PrefixFetcher:
 
     def flush_uploads(self, timeout_s: float = 10.0) -> bool:
         """Block until every queued PUT has drained (benchmarks that
-        want bytes_up to be final). Returns False on timeout."""
+        want bytes_up to be final). Returns False on timeout.
+
+        Waits on the queue's ``all_tasks_done`` condition — the same
+        one ``task_done()`` notifies — instead of a sleep/poll loop,
+        so the caller wakes the moment the drain completes."""
         deadline = oclock.monotonic() + timeout_s
-        while self._upq.unfinished_tasks \
-                and oclock.monotonic() < deadline:
-            time.sleep(0.01)
-        return not self._upq.unfinished_tasks
+        with self._upq.all_tasks_done:
+            while self._upq.unfinished_tasks:
+                remaining = deadline - oclock.monotonic()
+                if remaining <= 0:
+                    return False
+                self._upq.all_tasks_done.wait(remaining)
+        return True
 
     def close(self) -> None:
         self._upq.put(None)

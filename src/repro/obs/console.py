@@ -29,6 +29,8 @@ import urllib.error
 import urllib.request
 from typing import Dict, List, Optional, Tuple
 
+from repro.obs import clock as oclock
+
 
 def _http_json(url: str, timeout: float = 2.0) -> Optional[dict]:
     try:
@@ -63,7 +65,7 @@ class FleetPoller:
         self._links: Dict[str, object] = {}
 
     def poll(self) -> dict:
-        snap: dict = {"t": time.time(), "gateway": None,
+        snap: dict = {"t": oclock.wall(), "gateway": None,
                       "decisions": None, "flight": None, "peers": {}}
         if self.gateway:
             base = f"http://{self.gateway}"

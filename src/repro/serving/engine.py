@@ -19,7 +19,6 @@ padded to power-of-two buckets to bound recompilation.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from functools import partial
 from typing import Any, Callable, Dict, Optional, Sequence
@@ -28,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import clock as oclock
 from repro.serving.sampler import greedy
 
 
@@ -127,17 +127,17 @@ class InferenceEngine:
             raise NotImplementedError(
                 f"layer-streamed resume unsupported for family "
                 f"{self.model.cfg.family!r}")
-        t0 = time.perf_counter()
+        t0 = oclock.monotonic()
         padded, true_n = self._pad_inputs(inputs)
         if self.model.cfg.window:      # ring caches cannot take padding
             padded, true_n = inputs, inputs[
                 "embeds" if "embeds" in inputs else "tokens"].shape[1]
         compute = 0.0
-        tc = time.perf_counter()
+        tc = oclock.monotonic()
         x, positions, eff_start = self._stream_embed(
             self.params, padded, n_prefix)
         jax.block_until_ready(x)
-        compute += time.perf_counter() - tc
+        compute += oclock.monotonic() - tc
         n_segs = len(self.model.segments)
         new_segs = [[] for _ in range(n_segs)]
         next_layer = [0] * n_segs
@@ -146,11 +146,11 @@ class InferenceEngine:
                 raise ValueError(
                     f"stream group (seg {si}, layers {lo}:{hi}) out of "
                     f"order (expected layer {next_layer[si] if 0 <= si < n_segs else '?'})")
-            tc = time.perf_counter()
+            tc = oclock.monotonic()
             x, nc = self._group_fn(si, lo, hi)(
                 self.params, x, positions, cache_group, eff_start)
             jax.block_until_ready(x)
-            compute += time.perf_counter() - tc
+            compute += oclock.monotonic() - tc
             new_segs[si].append(nc)
             next_layer[si] = hi
         for si, seg in enumerate(self.model.segments):
@@ -158,10 +158,10 @@ class InferenceEngine:
                 raise ValueError(
                     f"stream ended with segment {si} at layer "
                     f"{next_layer[si]}/{seg.n_layers}")
-        tc = time.perf_counter()
+        tc = oclock.monotonic()
         logits = self._stream_head(self.params, x, true_n - 1)
         logits = np.asarray(jax.block_until_ready(logits))
-        compute += time.perf_counter() - tc
+        compute += oclock.monotonic() - tc
         cache = {"segments": [
             jax.tree.map(lambda *parts: jnp.concatenate(parts, axis=0),
                          *parts_list) if len(parts_list) > 1
@@ -171,7 +171,7 @@ class InferenceEngine:
                          last_logits=logits)
         st.timings["prefill_wall"] = compute
         st.timings["prefill_tokens"] = true_n
-        st.timings["stream_wall"] = time.perf_counter() - t0
+        st.timings["stream_wall"] = oclock.monotonic() - t0
         return st
 
     def _group_fn(self, si: int, lo: int, hi: int):
@@ -182,7 +182,7 @@ class InferenceEngine:
         return self._stream_group[key]
 
     def _run_prefill(self, inputs, cache, start_pos, *, resume):
-        t0 = time.perf_counter()
+        t0 = oclock.monotonic()
         padded, true_n = self._pad_inputs(inputs)
         # padding beyond the true prompt writes junk KV at positions
         # >= start_pos + true_n; they are never attended (causal) as long as
@@ -194,7 +194,7 @@ class InferenceEngine:
         fn = self._prefill_jit(resume)
         logits, cache = fn(self.params, padded, cache, start_pos, true_n - 1)
         logits = np.asarray(jax.block_until_ready(logits))
-        wall = time.perf_counter() - t0
+        wall = oclock.monotonic() - t0
         st = EngineState(cache=cache, pos=start_pos + true_n,
                          last_logits=logits)
         st.timings["prefill_wall"] = wall
@@ -214,7 +214,7 @@ class InferenceEngine:
     def generate(self, st: EngineState, max_tokens: int,
                  sampler: Callable = greedy, eos_id: Optional[int] = None,
                  rng=None) -> np.ndarray:
-        t0 = time.perf_counter()
+        t0 = oclock.monotonic()
         out = []
         logits = st.last_logits
         for _ in range(max_tokens):
@@ -223,7 +223,7 @@ class InferenceEngine:
             if eos_id is not None and np.all(tok == eos_id):
                 break
             logits = self.decode_one(st, tok[:, None])
-        st.timings["decode_wall"] = time.perf_counter() - t0
+        st.timings["decode_wall"] = oclock.monotonic() - t0
         st.timings["decode_tokens"] = len(out)
         st.tokens.extend(int(t[0]) for t in out)
         return np.stack(out, axis=1)

@@ -7,6 +7,15 @@ os.environ.pop("XLA_FLAGS", None)
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+# Opt-in lock-order watchdog (REPRO_LOCK_WATCHDOG=1): instrument
+# threading.Lock/RLock BEFORE jax/repro import so every lock the suite
+# creates is watched; the session fails at teardown on any
+# acquisition-order cycle or blocking-call-while-holding-a-lock. Child
+# processes (peer daemons) inherit the env var and install their own.
+from repro.analysis import watchdog as _watchdog
+
+_WATCHDOG = _watchdog.install_from_env()
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -48,3 +57,15 @@ def tiny_setup():
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     return cfg, model, params
+
+
+def pytest_terminal_summary(terminalreporter, exitstatus, config):
+    if _WATCHDOG is None:
+        return
+    terminalreporter.write_line(_WATCHDOG.report())
+
+
+def pytest_sessionfinish(session, exitstatus):
+    if _WATCHDOG is not None and _WATCHDOG.violations:
+        session.exitstatus = 3
+        print(_WATCHDOG.report(), file=sys.stderr)

@@ -1,0 +1,16 @@
+"""Clean twin of ``blocking_coroutine.py``: the blocking work runs on
+the loop's executor (a nested sync def is exempt from R2 — it does not
+run on the event loop), and no lock is held across it."""
+import asyncio
+import time
+
+
+def _blocking_work():
+    time.sleep(0.001)
+
+
+async def drain(item):
+    loop = asyncio.get_running_loop()
+    await loop.run_in_executor(None, _blocking_work)
+    await asyncio.sleep(0)
+    return item

@@ -1,0 +1,16 @@
+"""Deliberate blocking-in-coroutine — R2/watchdog regression fixture.
+``drain`` calls ``time.sleep`` on the event loop (stalling every
+connection sharing it) while holding a lock (stalling every *thread*
+contending for it). The static checker must flag the sleep (R2), and
+the watchdog must record blocking-while-held when the coroutine runs.
+Clean twin: ``async_clean.py``."""
+import threading
+import time
+
+_state_lock = threading.Lock()
+
+
+async def drain(item):
+    with _state_lock:
+        time.sleep(0.005)
+    return item

@@ -1,0 +1,21 @@
+"""Clean twin of ``lock_inversion.py``: both methods acquire src
+before dst, so the lock-order graph is acyclic and neither the static
+checker nor the watchdog may report anything."""
+import threading
+
+
+class Consistent:
+    def __init__(self):
+        self._src = threading.Lock()
+        self._dst = threading.Lock()
+        self.balance = 0
+
+    def transfer(self):
+        with self._src:
+            with self._dst:
+                self.balance += 1
+
+    def refund(self):
+        with self._src:
+            with self._dst:
+                self.balance -= 1

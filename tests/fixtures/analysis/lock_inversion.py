@@ -1,0 +1,24 @@
+"""Deliberate ABBA lock-order inversion — R5/watchdog regression
+fixture. ``transfer`` takes src->dst, ``refund`` takes dst->src: two
+threads running one each can deadlock. The static checker must report
+an R5 cycle on this file, and the runtime watchdog must record a cycle
+when both methods run (see tests/test_analysis.py). Clean twin:
+``lock_clean.py``."""
+import threading
+
+
+class Inverted:
+    def __init__(self):
+        self._src = threading.Lock()
+        self._dst = threading.Lock()
+        self.balance = 0
+
+    def transfer(self):
+        with self._src:
+            with self._dst:
+                self.balance += 1
+
+    def refund(self):
+        with self._dst:
+            with self._src:
+                self.balance -= 1

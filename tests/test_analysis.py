@@ -1,0 +1,414 @@
+"""Tests for repro.analysis: the R1–R5 static checker, suppression and
+baseline semantics, the regression fixtures, and the runtime
+lock-order watchdog."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import threading
+
+import pytest
+
+from repro.analysis import (Baseline, LockOrderWatchdog, check_paths,
+                            run_rules)
+from repro.analysis.core import load_tree
+from repro.analysis.watchdog import (_WatchedLock, active, install,
+                                     uninstall)
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+REPO = os.path.dirname(HERE)
+SRC = os.path.join(REPO, "src")
+FIXTURES = os.path.join(HERE, "fixtures", "analysis")
+
+
+def _write_tree(tmp_path, files):
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    return str(tmp_path)
+
+
+def _rules(findings):
+    return sorted({f.rule for f in findings})
+
+
+# ---------------------------------------------------------------------------
+# the regression fixtures (satellite: checker flags them, twins stay quiet)
+# ---------------------------------------------------------------------------
+
+def test_fixture_lock_inversion_flagged_statically():
+    rep = check_paths([os.path.join(FIXTURES, "lock_inversion.py")])
+    assert [f.rule for f in rep.live] == ["R5"]
+    assert "cycle" in rep.live[0].message
+    assert rep.failed
+
+
+def test_fixture_blocking_coroutine_flagged_statically():
+    rep = check_paths([os.path.join(FIXTURES, "blocking_coroutine.py")])
+    assert [f.rule for f in rep.live] == ["R2"]
+    assert "time.sleep" in rep.live[0].message
+    assert rep.failed
+
+
+def test_fixture_clean_twins_stay_quiet():
+    rep = check_paths([os.path.join(FIXTURES, "lock_clean.py"),
+                       os.path.join(FIXTURES, "async_clean.py")])
+    assert rep.live == [] and not rep.failed
+
+
+def test_cli_nonzero_on_fixture_and_zero_on_twin():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    bad = subprocess.run(
+        [sys.executable, "-m", "repro.analysis",
+         os.path.join(FIXTURES, "lock_inversion.py"),
+         os.path.join(FIXTURES, "blocking_coroutine.py"),
+         "--no-baseline"],
+        env=env, capture_output=True, text=True, timeout=120)
+    assert bad.returncode == 1, bad.stdout + bad.stderr
+    good = subprocess.run(
+        [sys.executable, "-m", "repro.analysis",
+         os.path.join(FIXTURES, "lock_clean.py"),
+         os.path.join(FIXTURES, "async_clean.py"), "--no-baseline"],
+        env=env, capture_output=True, text=True, timeout=120)
+    assert good.returncode == 0, good.stdout + good.stderr
+
+
+# ---------------------------------------------------------------------------
+# acceptance: the real tree is clean under the checked-in baseline
+# ---------------------------------------------------------------------------
+
+def test_whole_repo_passes_with_baseline():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "src", "--json"],
+        env=env, capture_output=True, text=True, timeout=300, cwd=REPO)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    rep = json.loads(proc.stdout)
+    assert rep["live"] == []
+    assert rep["stale_baseline"] == []
+    # the three documented dead wire ops are baselined, nothing else
+    assert {e["key"] for e in rep["suppressed_baseline"]} == {
+        "handled:ping", "handled:rstats", "handled:handoff"}
+
+
+# ---------------------------------------------------------------------------
+# R1: daemon import closure
+# ---------------------------------------------------------------------------
+
+def test_r1_flags_jax_in_daemon_closure(tmp_path):
+    root = _write_tree(tmp_path, {
+        "repro/__init__.py": "",
+        "repro/core/__init__.py": "",
+        "repro/core/net/__init__.py": "",
+        "repro/core/net/daemon.py": "from repro.core import helper\n",
+        "repro/core/helper.py": "import jax\n",
+    })
+    findings = run_rules(load_tree(root), rules=("R1",))
+    assert _rules(findings) == ["R1"]
+    (f,) = findings
+    assert f.key == "repro.core.helper:jax"
+    assert "repro.core.net.daemon" in f.message   # the reach chain
+
+
+def test_r1_ignores_function_level_imports(tmp_path):
+    root = _write_tree(tmp_path, {
+        "repro/__init__.py": "",
+        "repro/core/__init__.py": "",
+        "repro/core/net/__init__.py": "",
+        "repro/core/net/daemon.py": "from repro.core import helper\n",
+        "repro/core/helper.py": (
+            "def lazy():\n    import jax\n    return jax\n"),
+    })
+    assert run_rules(load_tree(root), rules=("R1",)) == []
+
+
+def test_r1_real_tree_daemon_closure_is_clean():
+    assert run_rules(load_tree(SRC), rules=("R1",)) == []
+
+
+# ---------------------------------------------------------------------------
+# R3
+# ---------------------------------------------------------------------------
+
+def test_r3_flags_raw_clock_and_from_import(tmp_path):
+    root = _write_tree(tmp_path, {"serve.py": """
+        import time
+        from time import perf_counter
+
+        def tick():
+            return time.monotonic() + perf_counter()
+    """})
+    findings = run_rules(load_tree(root), rules=("R3",))
+    assert len(findings) == 2
+    assert {f.key.split(":")[-1] for f in findings} == {
+        "time.monotonic()", "perf_counter()"}
+
+
+# ---------------------------------------------------------------------------
+# R4: wire-op consistency
+# ---------------------------------------------------------------------------
+
+WIRE_TREE = {
+    "server.py": """
+        class Server:
+            def handle(self, op, payload):
+                if op == "put":
+                    return {"v": payload["key"], "b": payload["blob"]}
+                if op == "get":
+                    return {"b": payload["key"]}
+                if op == "flush":
+                    return {"ok": True}
+                return {"ok": False}
+    """,
+    "client.py": """
+        def run(tr):
+            tr.request("get", {"key": b"x"})
+            tr.request("putt", {"key": b"x", "blob": b"y"})
+            tr.request("put", {"key": b"x"})
+    """,
+}
+
+
+def test_r4_reports_unknown_dead_and_drifted_ops(tmp_path):
+    root = _write_tree(tmp_path, WIRE_TREE)
+    findings = run_rules(load_tree(root), rules=("R4",))
+    keys = {f.key for f in findings}
+    assert "sent:putt" in keys                    # typo'd op
+    assert "handled:flush" in keys                # dead handler branch
+    assert any(k.startswith("drift:put:blob") for k in keys), keys
+    assert not any(k.startswith("drift:get") for k in keys)
+
+
+def test_r4_real_tree_only_baselined_dead_ops():
+    findings = run_rules(load_tree(SRC), rules=("R4",))
+    assert {f.key for f in findings} == {
+        "handled:ping", "handled:rstats", "handled:handoff"}
+
+
+# ---------------------------------------------------------------------------
+# suppression + baseline semantics (satellite)
+# ---------------------------------------------------------------------------
+
+def test_inline_allow_silences_one_rule_on_one_line(tmp_path):
+    root = _write_tree(tmp_path, {"clocky.py": """
+        import time
+
+        def a():
+            return time.monotonic()  # repro: allow[R3] legacy probe
+
+        def b():
+            return time.monotonic()
+    """})
+    rep = check_paths([root])
+    # the allowed line is suppressed, the other line still fails
+    assert len(rep.suppressed_inline) == 1
+    assert len(rep.live) == 1
+    assert rep.live[0].key.endswith("b:time.monotonic()")
+
+
+def test_inline_allow_is_rule_specific(tmp_path):
+    root = _write_tree(tmp_path, {"srv.py": """
+        import time
+
+        async def h():
+            time.sleep(0.1)  # repro: allow[R3] wrong rule named
+    """})
+    rep = check_paths([root])
+    # allow[R3] must NOT silence the R2 violation on that line
+    assert [f.rule for f in rep.live] == ["R2"]
+
+
+def test_stale_baseline_entry_fails_run(tmp_path):
+    root = _write_tree(tmp_path, {"ok.py": "X = 1\n"})
+    bl = tmp_path / "analysis_baseline.json"
+    bl.write_text(json.dumps({"entries": [
+        {"rule": "R4", "key": "handled:gone",
+         "reason": "was removed long ago"}]}))
+    rep = check_paths([root], baseline_path=str(bl))
+    assert rep.live == []
+    assert len(rep.stale_baseline) == 1
+    assert rep.failed                  # stale entries can't rot silently
+    assert "STALE" in rep.render()
+
+
+def test_baseline_suppresses_exact_rule_key_match(tmp_path):
+    root = _write_tree(tmp_path, {"srv.py": """
+        class S:
+            def handle(self, op, payload):
+                if op == "zap":
+                    return {}
+                return {}
+    """})
+    bl = tmp_path / "bl.json"
+    bl.write_text(json.dumps({"entries": [
+        {"rule": "R4", "key": "handled:zap", "reason": "test-only op"}]}))
+    rep = check_paths([root], baseline_path=str(bl))
+    assert rep.live == [] and rep.stale_baseline == [] and not rep.failed
+    assert len(rep.suppressed_baseline) == 1
+
+
+def test_baseline_rejects_entries_without_reason(tmp_path):
+    bl = tmp_path / "bl.json"
+    bl.write_text(json.dumps({"entries": [{"rule": "R4",
+                                           "key": "handled:x"}]}))
+    with pytest.raises(ValueError):
+        Baseline.load(str(bl))
+
+
+# ---------------------------------------------------------------------------
+# runtime watchdog
+# ---------------------------------------------------------------------------
+
+def _watched_pair(wd):
+    la, lb = _WatchedLock(wd), _WatchedLock(wd)
+    lb._class_id = la._class_id + "#b"   # distinct lockdep classes
+    return la, lb
+
+
+def test_watchdog_detects_synthetic_lock_order_inversion():
+    wd = LockOrderWatchdog()
+    la, lb = _watched_pair(wd)
+
+    def ab():
+        with la:
+            with lb:
+                pass
+
+    def ba():
+        with lb:
+            with la:
+                pass
+
+    for fn in (ab, ba):
+        t = threading.Thread(target=fn)
+        t.start()
+        t.join()
+    kinds = [v.kind for v in wd.violations]
+    assert kinds == ["cycle"], wd.report()
+    assert "lock-order cycle" in wd.violations[0].detail
+    with pytest.raises(AssertionError):
+        wd.check()
+
+
+def test_watchdog_quiet_on_consistent_order():
+    wd = LockOrderWatchdog()
+    la, lb = _watched_pair(wd)
+    for _ in range(3):
+        with la:
+            with lb:
+                pass
+    assert wd.violations == []
+    wd.check()                         # does not raise
+
+
+def test_watchdog_rlock_reentrancy_is_not_a_cycle():
+    wd = LockOrderWatchdog()
+    from repro.analysis.watchdog import _WatchedRLock
+    rl = _WatchedRLock(wd)
+    with rl:
+        with rl:
+            pass
+    assert wd.violations == []
+
+
+def test_watchdog_flags_fixture_inversion_at_runtime():
+    """The lock_inversion fixture deadlocks for real; run its two
+    methods sequentially under an installed watchdog so the cycle is
+    observed without ever risking the deadlock itself."""
+    if active() is not None:
+        pytest.skip("session-wide watchdog active; cannot nest install")
+    import importlib.util
+    wd = install()
+    try:
+        spec = importlib.util.spec_from_file_location(
+            "lock_inversion_fixture",
+            os.path.join(FIXTURES, "lock_inversion.py"))
+        mod = importlib.util.module_from_spec(spec)
+        spec.loader.exec_module(mod)
+        inv = mod.Inverted()
+        for fn in (inv.transfer, inv.refund):
+            t = threading.Thread(target=fn)
+            t.start()
+            t.join()
+        assert [v.kind for v in wd.violations] == ["cycle"], wd.report()
+    finally:
+        uninstall()
+
+
+def test_watchdog_flags_blocking_coroutine_at_runtime():
+    if active() is not None:
+        pytest.skip("session-wide watchdog active; cannot nest install")
+    import asyncio
+    import importlib.util
+    wd = install()
+    try:
+        spec = importlib.util.spec_from_file_location(
+            "blocking_coroutine_fixture",
+            os.path.join(FIXTURES, "blocking_coroutine.py"))
+        mod = importlib.util.module_from_spec(spec)
+        spec.loader.exec_module(mod)
+        asyncio.run(mod.drain(None))
+        kinds = [v.kind for v in wd.violations]
+        assert kinds == ["blocking-while-held"], wd.report()
+    finally:
+        uninstall()
+
+
+def test_watchdog_clean_twins_quiet_at_runtime():
+    if active() is not None:
+        pytest.skip("session-wide watchdog active; cannot nest install")
+    import asyncio
+    import importlib.util
+    wd = install()
+    try:
+        for name in ("lock_clean.py", "async_clean.py"):
+            spec = importlib.util.spec_from_file_location(
+                name[:-3] + "_fixture", os.path.join(FIXTURES, name))
+            mod = importlib.util.module_from_spec(spec)
+            spec.loader.exec_module(mod)
+            if hasattr(mod, "Consistent"):
+                c = mod.Consistent()
+                c.transfer()
+                c.refund()
+            else:
+                asyncio.run(mod.drain(None))
+        assert wd.violations == [], wd.report()
+    finally:
+        uninstall()
+
+
+def test_watchdog_condition_and_queue_still_work():
+    """Watched locks must stay drop-in: Condition wait/notify and
+    queue.Queue join() (which ride lock internals like _release_save)
+    must behave under instrumentation."""
+    if active() is not None:
+        pytest.skip("session-wide watchdog active; cannot nest install")
+    import queue
+    install()
+    try:
+        cond = threading.Condition(threading.Lock())
+        hit = []
+
+        def waiter():
+            with cond:
+                cond.wait(5.0)
+                hit.append(1)
+
+        t = threading.Thread(target=waiter)
+        t.start()
+        import time
+        time.sleep(0.05)
+        with cond:
+            cond.notify_all()
+        t.join(5.0)
+        assert hit == [1]
+
+        q = queue.Queue()
+        q.put("x")
+        assert q.get() == "x"
+        q.task_done()
+        q.join()
+    finally:
+        uninstall()
