@@ -1,0 +1,307 @@
+"""Chaos drill: continuous churn over a real TCP fleet under a seeded
+fault schedule.
+
+A 3-daemon ``PeerSupervisor`` fleet serves an MMLU-style prompt stream
+while a :class:`~repro.chaos.FaultDriver` replays a deterministic
+:class:`~repro.chaos.FaultSchedule` against it — peer kills, asymmetric
+partitions, chunk corruption, stalled streams, silent bandwidth
+collapse, delayed acks — each fault paired with a heal a few steps
+later. The graceful-degradation stack (circuit breakers, hedged
+fetches, deadlines, the cancel frame, supervised restarts under the
+storm guard) is what keeps the drill inside its envelope.
+
+Hard assertions (the drill FAILS, not just reports):
+
+* token identity — every churn response matches the cache-off anchor
+* zero hangs — every request bounded, whole drill bounded
+* >= 6 faults applied, spanning kill / partition / corrupt / stall
+* replay determinism — regenerating the schedule from the same seed
+  yields the same event order (and a JSON round-trip preserves it)
+* bounded repair — the fleet is fully healthy again within a fixed
+  number of supervision rounds after the schedule drains
+* degradation machinery visibly engaged — breaker-open flight dump,
+  hedged fetch, server-acked stream cancel, deadline-stamped ledger
+  records
+
+Emits ``BENCH_chaos_drill.json``. Usage::
+
+    PYTHONPATH=src python -m benchmarks.chaos_drill [--quick]
+"""
+from __future__ import annotations
+
+import sys
+import threading
+import time
+
+from benchmarks.common import csv_line, make_world, write_bench
+from repro.chaos import FaultDriver, FaultSchedule
+from repro.config import CacheConfig
+from repro.core import CacheServer, SimClock, SimNetwork
+from repro.core.client import EdgeClient
+from repro.core.net.supervisor import PeerSupervisor
+from repro.core.transport import (InProcTransport, StreamCancelled,
+                                  TransportError)
+from repro.obs import REGISTRY
+from repro.obs.flight import BREAKER_OPEN, FLIGHT
+from repro.obs.ledger import LEDGER
+from repro.serving.engine import InferenceEngine
+
+SEED = 20260809
+N_PEERS = 3
+MAX_NEW = 4
+REQUEST_WALL_BOUND_S = 60.0          # any single request over this = hang
+DRILL_WALL_BOUND_S = 420.0           # whole churn loop, hard ceiling
+MAX_REPAIR_ROUNDS = 8                # supervision sweeps to full health
+DEADLINE_S = 30.0                    # generous e2e budget per request
+FAULT_KINDS = ("kill", "partition", "corrupt", "stall", "bandwidth",
+               "delay_ack")
+
+
+def _counter(name: str) -> float:
+    fam = REGISTRY.get(name)
+    if fam is None:
+        return 0.0
+    snap = fam.snapshot()
+    if isinstance(snap, dict):
+        return float(sum(snap.values()))
+    return float(snap)
+
+
+def _fleet_cancels(sup: PeerSupervisor) -> int:
+    total = 0
+    for pid in sup.procs:
+        try:
+            st = sup.request(pid, "health", {})
+        except TransportError:
+            continue
+        total += int(st.get("transport", {}).get("cancels", 0))
+    return total
+
+
+def _peer_keys(sup: PeerSupervisor, pid: str):
+    try:
+        return list(sup.request(pid, "sync", {"since": 0})["keys"])
+    except TransportError:
+        return []
+
+
+def run_drill(quick: bool) -> dict:
+    n_steps = 12 if quick else 24
+    w = make_world("low")
+    engine = InferenceEngine(w.model, w.params, max_len=1024)
+    domains = ("anatomy", "virology", "astronomy")
+    pool = [w.gen.prompt(d, q).segments for d in domains
+            for q in range(2)]
+    churn = [pool[i % len(pool)] for i in range(n_steps)]
+
+    # -- cache-off anchor: every prompt prefills locally ---------------
+    off = EdgeClient("chaos-off", engine,
+                     InProcTransport(CacheServer(CacheConfig()),
+                                     SimNetwork(), SimClock()),
+                     CacheConfig())
+    anchor = [off.infer(p, max_new_tokens=MAX_NEW,
+                        upload_on_miss=False).output_tokens
+              for p in pool]
+    want = [anchor[i % len(pool)] for i in range(n_steps)]
+
+    report: dict = {"seed": SEED, "n_steps": n_steps,
+                    "n_peers": N_PEERS, "quick": quick}
+    with PeerSupervisor.fleet(N_PEERS, request_timeout_s=2.0,
+                              restart_backoff_s=0.2,
+                              restart_backoff_max_s=2.0,
+                              restart_stable_s=5.0) as sup:
+        sup.wire_gossip()
+        d = sup.directory(suspect_cooldown_s=1.0, breaker_threshold=2,
+                          breaker_backoff_s=0.3, hot_threshold=1,
+                          hedge_floor_s=0.05)
+        client = EdgeClient("chaos-drill", engine, d, CacheConfig())
+
+        # -- seed the fleet (and a clean-TTFT reference pass) ----------
+        for p in pool:
+            d.last_sync_t = -1e18
+            client.sync_catalog()
+            client.infer(p, max_new_tokens=MAX_NEW)
+        clean_walls = []
+        for p in pool:
+            d.last_sync_t = -1e18
+            client.sync_catalog()
+            t0 = time.perf_counter()
+            r = client.infer(p, max_new_tokens=MAX_NEW)
+            clean_walls.append(time.perf_counter() - t0)
+            assert r.output_tokens == anchor[pool.index(p)]
+        clean_mean = sum(clean_walls) / len(clean_walls)
+
+        # -- seeded fault schedule: deterministic + replayable ---------
+        peers = list(sup.procs)
+        sched = FaultSchedule.generate(SEED, peers, n_steps=n_steps,
+                                       n_faults=12, heal_after=3)
+        replay = FaultSchedule.generate(SEED, peers, n_steps=n_steps,
+                                        n_faults=12, heal_after=3)
+        assert sched.event_order() == replay.event_order(), \
+            "same seed must reproduce the same fault event order"
+        assert (FaultSchedule.from_json(sched.to_json()).event_order()
+                == sched.event_order())
+        driver = FaultDriver(sup, sched)
+
+        # -- churn loop under injected faults --------------------------
+        walls, repairs, mismatches = [], 0, []
+        t_drill = time.perf_counter()
+        for step, p in enumerate(churn):
+            driver.advance(step)
+            repairs += len(sup.check_and_restart())
+            d.last_sync_t = -1e18
+            client.sync_catalog()
+            t0 = time.perf_counter()
+            r = client.infer(p, max_new_tokens=MAX_NEW,
+                             deadline_s=DEADLINE_S)
+            wall = time.perf_counter() - t0
+            walls.append(wall)
+            assert wall < REQUEST_WALL_BOUND_S, \
+                f"request at step {step} took {wall:.1f}s — a hang"
+            if r.output_tokens != want[step]:
+                mismatches.append(step)
+        drill_wall = time.perf_counter() - t_drill
+        driver.finish()
+        driver.heal_all()
+
+        assert not mismatches, \
+            f"token mismatch vs cache-off at steps {mismatches}"
+        assert drill_wall < DRILL_WALL_BOUND_S, \
+            f"drill took {drill_wall:.0f}s (bound {DRILL_WALL_BOUND_S})"
+
+        # -- fault coverage --------------------------------------------
+        applied = [e for e in driver.applied if e.kind in FAULT_KINDS]
+        kinds = {e.kind for e in applied}
+        assert len(applied) >= 6, \
+            f"only {len(applied)} faults applied (skipped: " \
+            f"{[e.fingerprint() for e in driver.skipped]})"
+        for must in ("kill", "partition", "corrupt", "stall"):
+            assert must in kinds, f"no {must!r} fault was applied"
+
+        # -- bounded repair: fleet fully healthy again -----------------
+        rounds = 0
+        while rounds < MAX_REPAIR_ROUNDS:
+            if all(sup.health().values()):
+                break
+            sup.check_and_restart()
+            rounds += 1
+            time.sleep(0.4)
+        assert all(sup.health().values()), \
+            f"fleet not healthy after {MAX_REPAIR_ROUNDS} repair rounds"
+
+        # -- degradation probes: breaker / hedge / cancel, on demand ---
+        # breaker: kill a peer and let two consecutive failures trip it
+        victim = peers[0]
+        sup.kill(victim, hard=True)
+        for _ in range(int(d.links[victim].breaker.fail_threshold)):
+            try:
+                d.request(victim, "ping", {})
+            except TransportError:
+                pass   # expected: dead peer; breaker counts it
+        assert d.breaker_states()[victim]["state"] == "open"
+        assert any(dmp["reason"] == BREAKER_OPEN
+                   for dmp in FLIGHT.dumps()), \
+            "breaker open produced no flight dump"
+        sup.restart(victim)
+
+        # cancel: stall a stream server-side, abort it via the cancel
+        # frame before the first chunk leaves
+        holder = next((pid for pid in peers if _peer_keys(sup, pid)),
+                      None)
+        assert holder is not None, "no peer holds any key after churn"
+        key = _peer_keys(sup, holder)[0]
+        sup.inject_faults(holder, chaos={"stall_chunk_s": 0.4})
+        ev = threading.Event()
+        ev.set()
+        try:
+            d.request_stream(holder, "get_chunks", {"key": key},
+                             lambda b, dt, nb: None, cancel=ev)
+        except StreamCancelled:
+            pass
+        sup.inject_faults(holder, reset=True)
+        cancels = _fleet_cancels(sup)
+        assert cancels >= 1, "cancel frame was never acked by a peer"
+
+        # hedge: replicate every stored key onto every peer, slow every
+        # ack, and let the client's patience run out on the primary —
+        # the plan's #2 candidate gets the duplicate GET
+        seen: dict = {}
+        for pid in peers:
+            for k in _peer_keys(sup, pid):
+                seen.setdefault(bytes(k), []).append(pid)
+        for k, holders in seen.items():
+            blob = d.request(holders[0], "get", {"key": k})[0]["blob"]
+            for pid in peers:
+                if pid not in holders:
+                    d.request(pid, "put", {"key": k, "blob": blob})
+        for pid in peers:
+            sup.inject_faults(pid, chaos={"delay_ack_s": 0.4})
+        hedges_before = _counter("client_hedge_total")
+        d.last_sync_t = -1e18
+        client.sync_catalog()
+        r_hot = client.infer(churn[0], max_new_tokens=MAX_NEW)
+        assert r_hot.output_tokens == want[0]
+        for pid in peers:
+            sup.inject_faults(pid, reset=True)
+        hedges = _counter("client_hedge_total")
+        report["hedges_fired"] = hedges - hedges_before
+        assert hedges > hedges_before, "hedged fetch never fired"
+
+        # deadline visibility: every churn request carried its budget
+        # into the decision ledger
+        stamped = sum(1 for rec in LEDGER.records(512)
+                      if rec.get("deadline_s"))
+        assert stamped >= 1, "no ledger record carries a deadline"
+
+        # -- report ----------------------------------------------------
+        churn_mean = sum(walls) / len(walls)
+        report.update({
+            "event_order": sched.event_order(),
+            "applied_order": driver.applied_order(),
+            "n_faults_applied": len(applied),
+            "fault_kinds_applied": sorted(kinds),
+            "n_skipped": len(driver.skipped),
+            "supervised_restarts": repairs,
+            "repair_rounds_to_healthy": rounds,
+            "drill_wall_s": drill_wall,
+            "clean_mean_wall_s": clean_mean,
+            "churn_mean_wall_s": churn_mean,
+            "churn_max_wall_s": max(walls),
+            "ttft_degradation_x": churn_mean / max(clean_mean, 1e-9),
+            "breaker_states": d.breaker_states(),
+            "restart_states": sup.restart_states(),
+            "cancels_acked": cancels,
+            "ledger_deadline_records": stamped,
+            "flight_dump_reasons": [dmp["reason"]
+                                    for dmp in FLIGHT.dumps()],
+        })
+        # degradation envelope: churn may be slower (it pays timeouts
+        # and local prefills) but must stay within a bounded multiple
+        # of the clean pass plus absolute slack for backoffs
+        assert churn_mean <= clean_mean * 100.0 + 10.0, \
+            f"TTFT degraded {report['ttft_degradation_x']:.0f}x " \
+            f"under churn — outside the envelope"
+    return report
+
+
+def main():
+    quick = "--quick" in sys.argv
+    report = run_drill(quick)
+    csv_line("chaos_drill_faults_applied",
+             report["n_faults_applied"], "count")
+    csv_line("chaos_drill_churn_mean",
+             report["churn_mean_wall_s"] * 1e6, "us_wall")
+    csv_line("chaos_drill_ttft_degradation",
+             report["ttft_degradation_x"], "x_vs_clean")
+    csv_line("chaos_drill_repair_rounds",
+             report["repair_rounds_to_healthy"], "rounds")
+    write_bench("BENCH_chaos_drill.json", report)
+    print(f"# chaos_drill: {report['n_faults_applied']} faults "
+          f"({', '.join(report['fault_kinds_applied'])}), "
+          f"{report['supervised_restarts']} supervised restarts, "
+          f"degradation {report['ttft_degradation_x']:.1f}x",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

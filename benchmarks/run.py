@@ -22,6 +22,7 @@ MODULES = [
     "benchmarks.workload_sim",         # full 6434-prompt workload (§5.1)
     "benchmarks.blob_pipeline",        # v3 chunk pipeline: overlap + 1-pass
     "benchmarks.cluster_sweep",        # multi-peer fabric vs single box
+    "benchmarks.chaos_drill",          # seeded fault schedule, real fleet
     "benchmarks.gossip_convergence",   # epidemic fanout vs full mesh, N=16
     "benchmarks.engine_micro",         # substrate microbenchmarks
     "benchmarks.serving_throughput",   # continuous batching + sessions

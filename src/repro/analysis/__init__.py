@@ -3,7 +3,7 @@
 Stdlib-only (importable from the lint stage and from the JAX-free
 daemon fleet). Two halves:
 
-* ``python -m repro.analysis src/`` — AST/import-graph checks R1–R5
+* ``python -m repro.analysis src/`` — AST/import-graph checks R1–R6
   (daemon import hygiene, blocking-in-coroutine, raw clocks, wire-op
   consistency, static lock-order cycles). See ``docs/analysis.md``.
 * :mod:`repro.analysis.watchdog` — opt-in runtime lock-order watchdog

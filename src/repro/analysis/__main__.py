@@ -16,7 +16,7 @@ from repro.analysis.checker import (ALL_RULES, check_paths,
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
-        description="project-specific static checks (R1-R5); see "
+        description="project-specific static checks (R1-R6); see "
                     "docs/analysis.md for the rule catalog")
     ap.add_argument("paths", nargs="+",
                     help="files or directory roots to scan (a root is "

@@ -1,4 +1,4 @@
-"""Checker orchestration: load the tree, run R1–R5, apply inline
+"""Checker orchestration: load the tree, run R1–R6, apply inline
 suppressions and the baseline, render a report."""
 from __future__ import annotations
 
@@ -10,10 +10,12 @@ from typing import Dict, List, Optional, Sequence
 from repro.analysis.core import Baseline, Finding, SourceFile, load_tree
 from repro.analysis.imports import check_daemon_closure
 from repro.analysis.locks import check_lock_order
-from repro.analysis.rules import check_blocking_in_async, check_raw_clocks
+from repro.analysis.rules import (check_blocking_in_async,
+                                  check_raw_clocks,
+                                  check_silent_swallows)
 from repro.analysis.wire import check_wire_ops
 
-ALL_RULES = ("R1", "R2", "R3", "R4", "R5")
+ALL_RULES = ("R1", "R2", "R3", "R4", "R5", "R6")
 
 
 @dataclass
@@ -72,6 +74,8 @@ def run_rules(files: Sequence[SourceFile],
             findings.extend(check_blocking_in_async(sf))
         if "R3" in rules:
             findings.extend(check_raw_clocks(sf))
+        if "R6" in rules:
+            findings.extend(check_silent_swallows(sf))
     if "R4" in rules:
         findings.extend(check_wire_ops(files))
     if "R5" in rules:

@@ -1,4 +1,4 @@
-"""R2/R3 — per-file AST rules for the serving fabric.
+"""R2/R3/R6 — per-file AST rules for the serving fabric.
 
 R2: no blocking calls inside ``async def`` bodies. The gateway's HTTP
 front door and the peer TCP server run their event loops on dedicated
@@ -14,6 +14,18 @@ R3: no raw ``time.time()`` / ``time.perf_counter()`` /
 :mod:`repro.obs.clock` so all timings share one mockable monotonic
 source. Offline tooling (launch/training/benchmarks) is out of scope;
 ``obs/clock.py`` is the single sanctioned call site.
+
+R6: no silent swallows of the fabric's failure contract. Every
+``except TransportError`` / ``except ChunkError`` handler on a serving
+path must visibly *do something with the failure*: fall down the plan
+(``raise`` / ``continue`` / ``break`` / ``return``), use the bound
+exception (``except ... as e`` with ``e`` referenced), or record an
+outcome (a ``FLIGHT.record/trigger``, metrics ``inc/observe``,
+``mark_suspect``, ledger ``note_attempt/commit``, or a logger
+``warning/error/exception`` call). A handler that only rebinds state
+(``st = None``) or ``pass``es erases the failure from every artifact
+the chaos drills assert on — the degradation happened but nothing can
+ever show why.
 """
 from __future__ import annotations
 
@@ -46,6 +58,15 @@ R3_EXCLUDE_PREFIXES = (
     "repro/models/", "repro/kernels/", "repro/configs/",
     "repro/roofline/", "repro/analysis/",
 )
+
+# R6 ----------------------------------------------------------------------
+# exception names whose handlers must visibly handle (matched by the
+# final name segment, so `state_io.ChunkError` counts)
+R6_SWALLOWABLE = {"TransportError", "ChunkError"}
+# call names (attr or bare) that count as recording an outcome
+R6_HANDLED_CALLS = {"trigger", "record", "inc", "observe",
+                    "mark_suspect", "note_attempt", "commit",
+                    "warning", "error", "exception"}
 
 
 def _time_bindings(tree: ast.AST) -> Set[str]:
@@ -204,6 +225,73 @@ def check_raw_clocks(sf: SourceFile) -> List[Finding]:
                     f"raw clock {bad} on a serving path — use "
                     f"repro.obs.clock.monotonic()/wall()",
                     key=f"{sf.relpath}:{self.qualname}:{bad}"))
+            self.generic_visit(node)
+
+    V().visit(sf.tree)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# R6
+# ---------------------------------------------------------------------------
+
+def _caught_names(handler: ast.ExceptHandler) -> Set[str]:
+    """Final name segments of the exception types a handler catches."""
+    t = handler.type
+    elts = list(t.elts) if isinstance(t, ast.Tuple) else \
+        ([t] if t is not None else [])
+    names: Set[str] = set()
+    for e in elts:
+        if isinstance(e, ast.Name):
+            names.add(e.id)
+        elif isinstance(e, ast.Attribute):
+            names.add(e.attr)
+    return names
+
+
+def _handler_handles(handler: ast.ExceptHandler) -> bool:
+    """True when the handler body visibly handles the failure: control
+    flow down the plan (raise/continue/break/return), any use of the
+    bound exception name, or a call that records an outcome."""
+    bound = handler.name
+    for stmt in handler.body:
+        for node in ast.walk(stmt):
+            if isinstance(node, (ast.Raise, ast.Continue, ast.Break,
+                                 ast.Return)):
+                return True
+            if bound and isinstance(node, ast.Name) \
+                    and node.id == bound:
+                return True
+            if isinstance(node, ast.Call):
+                f = node.func
+                name = (f.attr if isinstance(f, ast.Attribute)
+                        else f.id if isinstance(f, ast.Name) else "")
+                if name in R6_HANDLED_CALLS:
+                    return True
+    return False
+
+
+def check_silent_swallows(sf: SourceFile) -> List[Finding]:
+    """R6: ``except TransportError/ChunkError`` on a serving path must
+    fall down the plan or record a flight/metrics/ledger outcome —
+    never swallow the fabric's failure contract silently."""
+    if not _r3_in_scope(sf.relpath):
+        return []
+    findings: List[Finding] = []
+
+    class V(_QualnameWalker):
+        def visit_ExceptHandler(self, node: ast.ExceptHandler) -> None:
+            caught = sorted(_caught_names(node) & R6_SWALLOWABLE)
+            if caught and not _handler_handles(node):
+                what = "/".join(caught)
+                findings.append(Finding(
+                    "R6", sf.path, node.lineno,
+                    f"`except {what}` swallows the failure silently — "
+                    f"fall down the plan (raise/continue/break/return) "
+                    f"or record it (FLIGHT.record/trigger, metrics "
+                    f"inc/observe, mark_suspect, ledger note_attempt/"
+                    f"commit, logger warning/error)",
+                    key=f"{sf.relpath}:{self.qualname}:{what}"))
             self.generic_visit(node)
 
     V().visit(sf.tree)

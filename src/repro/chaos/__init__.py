@@ -1,0 +1,26 @@
+"""Deterministic fault-injection fabric (the chaos layer).
+
+Faults are *data*, not code paths: a :class:`FaultSchedule` is a
+seed-generated, JSON-serializable list of :class:`FaultEvent` entries
+(peer kills/revives, asymmetric partitions, silent bandwidth
+collapse, chunk corruption, stalled streams, delayed acks) that a
+:class:`FaultDriver` replays against a live
+:class:`~repro.core.net.supervisor.PeerSupervisor` fleet — the same
+schedule (same seed) always produces the same events in the same
+order, so every chaos failure is replayable from one integer.
+
+For in-process fabrics there are wrapper injectors
+(:class:`ChaosLink`, :class:`ChaosSimNetwork`) that corrupt or drop
+at the transport boundary without any real sockets.
+
+The drill that exercises all of it end to end lives in
+``benchmarks/chaos_drill.py``; the graceful-degradation machinery it
+validates (circuit breakers, deadline propagation, hedged fetches,
+mid-stream cancel) lives in the core — see ``docs/robustness.md``.
+"""
+from repro.chaos.driver import FaultDriver
+from repro.chaos.injectors import ChaosLink, ChaosSimNetwork
+from repro.chaos.schedule import FaultEvent, FaultSchedule
+
+__all__ = ["FaultDriver", "FaultEvent", "FaultSchedule",
+           "ChaosLink", "ChaosSimNetwork"]

@@ -1,0 +1,122 @@
+"""In-process chaos injectors: fault wrappers for fabrics without
+real sockets.
+
+On the TCP fabric, faults are injected server-side (the daemon's
+``inject`` op mutates ``PeerServer.chaos``) because that is where
+real failures live. In-process fabrics (``Fabric.sim``, unit tests)
+have no daemon to inject into, so these wrappers apply the same fault
+vocabulary at the transport boundary instead:
+
+* :class:`ChaosLink` wraps any peer link / transport (``TCPPeerLink``,
+  ``PeerTransport``, ``InProcTransport``) and can drop requests
+  (``TransportError``), delay them, or corrupt streamed chunks before
+  the client's integrity checks see them.
+* :class:`ChaosSimNetwork` wraps a
+  :class:`~repro.core.netsim.SimNetwork` and degrades its modeled
+  bandwidth/RTT by a factor — silent congestion for the simulated
+  fabric, visible only through the estimator's calibration drift.
+
+Both mutate live (set attributes mid-test) and default to
+transparent passthrough, so wrapping is free until a fault is armed.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core.transport import TransportError
+from repro.obs.flight import FLIGHT
+
+
+class ChaosLink:
+    """Transparent proxy over a peer link with armable faults.
+
+    ``drop_requests`` — raise :class:`TransportError` on every request
+    (an unreachable peer); ``fail_next`` — raise on the next N
+    requests then auto-disarm (a flapping peer); ``corrupt_chunks`` —
+    flip the first byte of the next N streamed chunks;
+    ``delay_s`` — advance the wrapped clock / sleep before each
+    request (only meaningful on wall links).
+    """
+
+    def __init__(self, link):
+        self._link = link
+        self.drop_requests = False
+        self.fail_next = 0
+        self.corrupt_chunks = 0
+        self.delay_s = 0.0
+
+    # attribute passthrough keeps the wrapper drop-in for the
+    # directory (peer_id, net, catalog wiring, close, ...)
+    def __getattr__(self, name):
+        return getattr(self._link, name)
+
+    def _gate(self, op: str) -> None:
+        if self.delay_s:
+            import time
+            time.sleep(self.delay_s)
+        if self.drop_requests or self.fail_next > 0:
+            if self.fail_next > 0:
+                self.fail_next -= 1
+            FLIGHT.record("chaos.fault", kind="drop_request", op=op,
+                          peer=getattr(self._link, "peer_id", "?"))
+            raise TransportError(
+                f"chaos: injected drop for op {op!r}")
+
+    def request(self, op, payload, **kw):
+        self._gate(op)
+        return self._link.request(op, payload, **kw)
+
+    def request_stream(self, op, payload, on_chunk, **kw):
+        self._gate(op)
+
+        def tap(chunk, dt, nb):
+            if self.corrupt_chunks > 0 and chunk.get("chunk"):
+                self.corrupt_chunks -= 1
+                b = bytes(chunk["chunk"])
+                chunk = dict(chunk,
+                             chunk=bytes([b[0] ^ 0xFF]) + b[1:])
+                FLIGHT.record("chaos.fault", kind="corrupt_chunk",
+                              op=op,
+                              peer=getattr(self._link, "peer_id", "?"))
+            on_chunk(chunk, dt, nb)
+
+        return self._link.request_stream(op, payload, tap, **kw)
+
+
+class ChaosSimNetwork:
+    """A :class:`SimNetwork` view with degradable bandwidth/RTT.
+
+    ``degrade(bw_factor, rtt_factor)`` scales the modeled link;
+    ``heal()`` restores nominal. The planner keeps pricing from the
+    estimator's (stale) beliefs while modeled transfers slow down —
+    exactly the silent-bandwidth-collapse miscalibration the drift
+    alarm exists to catch."""
+
+    def __init__(self, net):
+        self._net = net
+        self.bw_factor = 1.0
+        self.rtt_factor = 1.0
+
+    @property
+    def bandwidth_bps(self) -> float:
+        return self._net.bandwidth_bps * self.bw_factor
+
+    @property
+    def rtt_s(self) -> float:
+        return self._net.rtt_s * self.rtt_factor
+
+    def transfer_time(self, nbytes: int) -> float:
+        return self.rtt_s + nbytes * 8.0 / max(self.bandwidth_bps, 1.0)
+
+    def degrade(self, bw_factor: float = 0.1,
+                rtt_factor: Optional[float] = None) -> None:
+        self.bw_factor = bw_factor
+        if rtt_factor is not None:
+            self.rtt_factor = rtt_factor
+        FLIGHT.record("chaos.fault", kind="sim_degrade",
+                      bw_factor=self.bw_factor,
+                      rtt_factor=self.rtt_factor)
+
+    def heal(self) -> None:
+        self.bw_factor = 1.0
+        self.rtt_factor = 1.0

@@ -39,13 +39,15 @@ from repro.obs.trace import Tracer, current_span
 from repro.core.catalog import Catalog
 from repro.core.cluster.directory import PeerDirectory
 from repro.core.cluster.planner import FetchAttempt, FetchPlanner
+from repro.core.deadline import attach as deadline_attach
+from repro.core.deadline import current_deadline, deadline_scope
 from repro.core.fetch_policy import FetchPolicy
 from repro.core.keys import PromptKey, model_meta
 from repro.core.metrics import Breakdown, InferResult
 from repro.core.perfmodel import DevicePerfModel
 from repro.core.segments import PromptSegments
 from repro.core import sizing, state_io
-from repro.core.transport import TransportError
+from repro.core.transport import StreamCancelled, TransportError
 from repro.serving.engine import InferenceEngine
 from repro.serving.sampler import greedy
 
@@ -72,6 +74,15 @@ class EdgeClient:
         self._m_attempts = REGISTRY.counter(
             "client_fetch_attempts_total",
             "per-(peer,range) fetch attempts by result", ("result",))
+        self._m_hedges = REGISTRY.counter(
+            "client_hedge_total",
+            "hedged fetches fired (duplicate GET to the plan's #2)")
+        self._m_hedge_wins = REGISTRY.counter(
+            "client_hedge_wins_total",
+            "hedged fetches where the secondary's response won")
+        self._m_stream_cancels = REGISTRY.counter(
+            "client_stream_cancel_total",
+            "chunk streams aborted mid-flight via the cancel frame")
         self.engine = engine
         self.transport = transport
         self.cache_cfg = cache_cfg
@@ -133,25 +144,36 @@ class EdgeClient:
             return
         try:
             self.catalog.maybe_sync(self.transport, now)
-        except TransportError:
-            pass                 # server unreachable: stale catalog is
-            # fine — lookups degrade into misses / §3.3 false positives
+        except TransportError as e:
+            # server unreachable: stale catalog is fine — lookups
+            # degrade into misses / §3.3 false positives
+            FLIGHT.record("catalog.sync_failed", client=self.name,
+                          error=repr(e))
 
     # ------------------------------------------------------------------
     def infer(self, prompt: PromptSegments, max_new_tokens: int = 16,
               sampler: Callable = greedy, rng=None,
               upload_on_miss: Optional[bool] = None,
-              parent=None) -> InferResult:
+              parent=None,
+              deadline_s: Optional[float] = None) -> InferResult:
         """Run one request. ``parent`` (a Span or SpanContext) stitches
         this request's span tree under a caller's — the explicit
         cross-thread handoff. The returned result's *wall* Breakdown is
         projected from the spans recorded here (Table-3 ``component``
-        attributes), so tracing and accounting cannot drift apart."""
+        attributes), so tracing and accounting cannot drift apart.
+
+        ``deadline_s`` installs an end-to-end latency budget for this
+        request: the planner prunes candidates that cannot finish
+        inside it, attempts that would blow the remainder are skipped
+        (ledger result ``"deadline"``), and the remaining budget rides
+        every op payload to the peers. An ambient
+        :func:`~repro.core.deadline.deadline_scope` opened by a caller
+        (the gateway) applies the same way without this argument."""
         root = self.tracer.start("infer", parent=parent,
                                  attrs={"client": self.name,
                                         "prompt_tokens":
                                         len(prompt.token_ids)})
-        with root:
+        with root, deadline_scope(deadline_s, clock=self.clock):
             res = self._infer_traced(prompt, max_new_tokens, sampler,
                                      rng, upload_on_miss)
         spans = self.tracer.trace(root.trace_id) or []
@@ -182,9 +204,12 @@ class EdgeClient:
         min_match = self.cache_cfg.min_match_tokens \
             if self.policy.min_match_tokens is None \
             else self.policy.min_match_tokens
+        ddl = current_deadline()
         if self.directory is not None:
             plan = self.planner.plan(keys, n, min_match=min_match,
-                                     use_catalog=self.use_catalog)
+                                     use_catalog=self.use_catalog,
+                                     deadline_s=ddl.remaining()
+                                     if ddl is not None else None)
             tr.add("bloom", oclock.monotonic() - t0, t0=t0,
                    component="bloom", candidates=len(plan))
             if self.perf and self.use_catalog:
@@ -218,6 +243,20 @@ class EdgeClient:
         hit = False
         for att in plan:                # best estimated total time first
             cand = att.key
+            if ddl is not None and att.est_fetch_s >= ddl.remaining():
+                # the remaining budget can't even cover the transfer:
+                # starting this attempt could only blow the deadline
+                # harder than falling to local prefill right now
+                self._m_attempts.labels(result="deadline").inc()
+                LEDGER.note_attempt(
+                    rec, peer=att.peer_id or "server",
+                    range_tokens=cand.n_tokens, result="deadline",
+                    est_fetch_s=att.est_fetch_s)
+                FLIGHT.record("fetch.deadline_skip", client=self.name,
+                              peer=att.peer_id or "server",
+                              est_fetch_s=att.est_fetch_s,
+                              remaining_s=ddl.remaining())
+                continue
             n_attempts += 1
             fetched = None
             # one span per (peer, range) fetch attempt: the planner's
@@ -234,8 +273,18 @@ class EdgeClient:
                         and self.engine.supports_layer_stream:
                     fetched = self._fetch_streamed(att, prompt)
                 if fetched is None:
-                    fetched = self._fetch(cand, att.peer_id)
+                    hedge = self._hedge_candidate(plan, att)
+                    fetched = (self._fetch_hedged(att, hedge)
+                               if hedge is not None
+                               else self._fetch(cand, att.peer_id))
                 resp, dt, nb, was_shared, template = fetched
+                # hedged fetch: the response carries which candidate
+                # actually served it — account the winner, not the
+                # attempt the plan nominated
+                srv_peer, srv_est = att.peer_id, att.est_fetch_s
+                if isinstance(resp, dict) and "_served_by" in resp:
+                    srv_peer = resp.pop("_served_by")
+                    srv_est = resp.pop("_est_fetch_s", att.est_fetch_s)
                 chunks_down += int(resp.get("_chunks", 0) or 0)
                 # on a streamed wall-link hit, dt is the transfer-
                 # VISIBLE time (wall minus overlapped compute) — right
@@ -281,17 +330,20 @@ class EdgeClient:
                               peer=att.peer_id or "server",
                               range_tokens=cand.n_tokens, hit=hit,
                               dead=bool(resp.get("dead")))
+                result = ("dead" if resp.get("dead")
+                          else "hit" if hit
+                          else "deadline" if resp.get("deadline_exceeded")
+                          else "cancelled" if resp.get("cancelled")
+                          else "corrupt" if resp.get("error")
+                          else "miss")
                 self._m_attempts.labels(result=(
-                    "dead" if resp.get("dead")
-                    else "hit" if hit else "miss")).inc()
+                    result if result in ("dead", "hit", "deadline",
+                                         "cancelled") else "miss")).inc()
                 LEDGER.note_attempt(
-                    rec, peer=att.peer_id or "server",
+                    rec, peer=srv_peer or "server",
                     range_tokens=cand.n_tokens,
-                    result=("dead" if resp.get("dead")
-                            else "hit" if hit
-                            else "corrupt" if resp.get("error")
-                            else "miss"),
-                    est_fetch_s=att.est_fetch_s, actual_s=actual_cost,
+                    result=result,
+                    est_fetch_s=srv_est, actual_s=actual_cost,
                     shared=was_shared)
                 if hit and rec is not None:
                     if was_shared:
@@ -307,7 +359,13 @@ class EdgeClient:
                     # a hang
                     dead += 1
                     continue
-                if self.directory is not None and att.peer_id is not None \
+                if result in ("cancelled", "deadline"):
+                    # a deliberately aborted or budget-refused attempt
+                    # is neither a Bloom FP nor a usable link sample:
+                    # fall down the plan without polluting the catalog
+                    # stats or the estimator
+                    continue
+                if self.directory is not None and srv_peer is not None \
                         and not was_shared:
                     # shared (broker-deduped) adoptions put no bytes on
                     # the wire — only the leader's GET is accounted per
@@ -316,10 +374,11 @@ class EdgeClient:
                     # estimates when the blob transfer was charged from
                     # analytic sizing.
                     self.directory.record_get(
-                        att.peer_id, hit, att.est_fetch_s, actual_cost,
+                        srv_peer, hit, srv_est, actual_cost,
                         len(resp.get("blob") or b"") if hit else 0,
                         basis_bytes=basis_bytes,
-                        predicted_present=self.use_catalog)
+                        predicted_present=self.use_catalog,
+                        digest=cand.digest)
                 if hit:
                     blob = resp["blob"]
                     shared = was_shared
@@ -339,9 +398,9 @@ class EdgeClient:
                             payload, template)
                         state = (cache, n_eff, logits)
                     matched = cand.n_tokens
-                    if att.peer_id is not None:
-                        served_by = att.peer_id
-                        est_fetch = att.est_fetch_s
+                    if srv_peer is not None:
+                        served_by = srv_peer
+                        est_fetch = srv_est
                         actual_fetch = actual_cost
                         if not was_shared:
                             # hot keys replicate to the fastest other
@@ -349,7 +408,7 @@ class EdgeClient:
                             # leader of a deduped transfer counts — N
                             # pooled adoptions are one fetch, not N
                             self.directory.note_fetch(cand.digest, blob,
-                                                      att.peer_id)
+                                                      srv_peer)
                     break
                 else:
                     false_pos = True  # catalog said yes, server said no
@@ -515,6 +574,93 @@ class EdgeClient:
         return self.broker.fetch(broker_key, issue,
                                  prep=self.engine.new_cache)
 
+    # -- hedged fetches ------------------------------------------------
+    def _hedge_candidate(self, plan, att):
+        """The plan's next candidate holding the SAME range on a
+        *different* wall-link peer — the backup a hedged fetch fires
+        when the primary blows its calibrated patience bound. ``None``
+        when hedging does not apply: sim links (deterministic modeled
+        time — nothing to hedge against), broker-deduped fetches (the
+        leader hedging would fork the shared transfer), single-server
+        mode, or no alternative holder in the plan."""
+        if (self.directory is None or self.broker is not None
+                or att.peer_id is None
+                or self._link_net(att.peer_id) is not None):
+            return None
+        seen = False
+        for other in plan:
+            if other is att:
+                seen = True
+                continue
+            if not seen:
+                continue
+            if (other.key.digest == att.key.digest
+                    and other.peer_id is not None
+                    and other.peer_id != att.peer_id
+                    and self._link_net(other.peer_id) is None):
+                return other
+        return None
+
+    def _fetch_hedged(self, att, hedge):
+        """Single-frame GET with a tail-latency hedge: fire the plan's
+        primary, and if it is still outstanding past the calibrated
+        patience bound (``est * p95(actual/est)``, floored), fire the
+        backup too. First usable response wins; the loser's response is
+        discarded when it lands (a single-frame GET has no stream to
+        cancel — the cancel frame covers ``get_chunks``). The winning
+        candidate's identity rides back in ``_served_by`` /
+        ``_est_fetch_s`` so the caller accounts the peer that actually
+        served, not the one the plan nominated."""
+        cand = att.key
+        results: "queue.Queue" = queue.Queue()
+        caller_span = current_span()
+        ddl = current_deadline()
+
+        def issue(a, tag):
+            t0 = oclock.monotonic()
+            try:
+                with self.tracer.attach(caller_span), deadline_attach(ddl):
+                    resp, dt, nb = self.directory.request(
+                        a.peer_id, "get", {"key": cand.digest})
+            except TransportError as e:
+                resp = {"ok": False, "dead": True, "error": repr(e)}
+                dt, nb = oclock.monotonic() - t0, 0
+            results.put((tag, a, resp, dt, nb))
+
+        threading.Thread(target=issue, args=(att, "primary"),
+                         daemon=True).start()
+        delay = self.directory.hedge_delay_s(att.peer_id,
+                                             att.est_fetch_s)
+        hedged = False
+        try:
+            got = results.get(timeout=delay)
+        except queue.Empty:
+            hedged = True
+            self._m_hedges.inc()
+            FLIGHT.record("fetch.hedge", client=self.name,
+                          primary=att.peer_id, secondary=hedge.peer_id,
+                          est_fetch_s=att.est_fetch_s, waited_s=delay)
+            threading.Thread(target=issue, args=(hedge, "hedge"),
+                             daemon=True).start()
+            got = results.get()
+        if hedged:
+            tag, a, resp, dt, nb = got
+            if not (resp.get("ok") and resp.get("blob")):
+                # first finisher failed (dead / miss): the other leg is
+                # still in flight — give it its chance before falling
+                # down the plan
+                got = results.get()
+        tag, a, resp, dt, nb = got
+        if tag == "hedge":
+            self._m_hedge_wins.inc()
+            FLIGHT.record("fetch.hedge_win", client=self.name,
+                          primary=att.peer_id, winner=a.peer_id,
+                          actual_s=dt)
+        resp = dict(resp)
+        resp["_served_by"] = a.peer_id
+        resp["_est_fetch_s"] = a.est_fetch_s
+        return resp, dt, nb, False, None
+
     # ------------------------------------------------------------------
     def _fetch_streamed(self, att: FetchAttempt, prompt: PromptSegments):
         """Layer-streamed partial-hit fetch: GET the blob as v3 chunks
@@ -557,31 +703,70 @@ class EdgeClient:
         groups_q: "queue.Queue" = queue.Queue()
         info = {"chunks": 0, "bytes": 0, "dt": 0.0, "nb": 0,
                 "hdr": None, "err": None}
+        # mid-stream abort watchdog (wall links only — a sim stream's
+        # modeled time is deterministic, there is nothing to revise):
+        # project the stream's finish time from realized per-chunk pace
+        # and fire the cancel frame when the projection blows either
+        # the request's remaining deadline budget or the local-prefill
+        # bound the planner priced this attempt against
+        cancel_ev = threading.Event() if not sim_link else None
+        k_expected = max(sizing.stream_chunk_count(
+            self.engine.model.cfg, self.cache_cfg.chunk_layers), 1)
+        n_prompt = len(prompt.token_ids)
+        local_s = (self.perf.time_prefill(self.perf_cfg, n_prompt)
+                   if self.perf else LEDGER.baseline_s(n_prompt))
+        ddl = current_deadline()
+        t_w0 = oclock.monotonic()
 
         def on_chunk(chunk, dt, nb):
             info["chunks"] += 1
             if peer_id is not None:
                 self.directory.record_chunk(peer_id, nb, dt,
                                             observe=not sim_link)
+            if cancel_ev is not None and not cancel_ev.is_set() \
+                    and info["chunks"] >= 2:
+                elapsed = oclock.monotonic() - t_w0
+                per = elapsed / info["chunks"]
+                left_s = per * max(k_expected - info["chunks"], 0)
+                reason = None
+                if ddl is not None and left_s > ddl.remaining():
+                    reason = "deadline"
+                elif local_s is not None and att.est_total_s < local_s \
+                        and elapsed + left_s > local_s:
+                    reason = "estimator"
+                if reason is not None:
+                    cancel_ev.set()
+                    self._m_stream_cancels.inc()
+                    FLIGHT.record("fetch.cancel", client=self.name,
+                                  peer=peer_id or "server",
+                                  reason=reason, chunks=info["chunks"],
+                                  expected_chunks=k_expected,
+                                  projected_s=elapsed + left_s)
             for gid in restorer.feed(chunk):
                 groups_q.put(gid)
 
         # the pump runs on its own thread: hand the caller's ambient
         # span over explicitly so the directory's net.get_chunks span
-        # (and the folded peer-side spans) land in this request's tree
+        # (and the folded peer-side spans) land in this request's tree,
+        # and re-attach the deadline so the remaining budget rides the
+        # get_chunks payload
         caller_span = current_span()
 
         def pump():
             try:
-                with self.tracer.attach(caller_span):
+                with self.tracer.attach(caller_span), \
+                        deadline_attach(ddl):
                     if peer_id is not None:
                         hdr, dt, nb = self.directory.request_stream(
                             peer_id, "get_chunks", {"key": cand.digest},
-                            on_chunk)
+                            on_chunk, cancel=cancel_ev)
                     else:
                         hdr, dt, nb = tr.request_stream(
-                            "get_chunks", {"key": cand.digest}, on_chunk)
+                            "get_chunks", {"key": cand.digest}, on_chunk,
+                            cancel=cancel_ev)
                 info["hdr"], info["dt"], info["nb"] = hdr, dt, nb
+            except StreamCancelled as e:
+                info["err"] = ("cancelled", e)
             except TransportError as e:
                 info["err"] = ("dead", e)
             except (state_io.ChunkError, ValueError) as e:
@@ -618,8 +803,12 @@ class EdgeClient:
                                              resume_from, groups())
         except _StreamEnded:
             pass                       # miss / v2 blob / aborted stream
-        except (state_io.ChunkError, ValueError, NotImplementedError):
-            st = None                  # manifest/template mismatch
+        except (state_io.ChunkError, ValueError,
+                NotImplementedError) as e:
+            st = None                  # manifest/template mismatch:
+            # degrade to the whole-blob / next-attempt path below
+            FLIGHT.record("stream.resume_failed", client=self.name,
+                          peer=peer_id or "server", error=repr(e))
         worker.join()
         wall = oclock.monotonic() - t0
 
@@ -630,8 +819,12 @@ class EdgeClient:
                 # single-frame blob — restore it whole, resume normally
                 try:
                     state = restorer.result(template)
-                except (state_io.ChunkError, ValueError):
-                    state = None
+                except (state_io.ChunkError, ValueError) as e:
+                    state = None   # fall down the plan like a miss
+                    FLIGHT.record("stream.v2_restore_failed",
+                                  client=self.name,
+                                  peer=peer_id or "server",
+                                  error=repr(e))
             if st is not None or state is not None:
                 container = state_io.pack_container(restorer.raw_chunks())
                 resp = {"ok": True, "blob": container}
@@ -682,6 +875,11 @@ class EdgeClient:
                 resp["error"] = repr(info["err"][1])
             elif kind == "corrupt":
                 resp["error"] = repr(info["err"][1])
+            elif kind == "cancelled":
+                # deliberately aborted mid-flight (deadline / estimator
+                # revision): not a failure — the caller skips the
+                # catalog-FP and estimator accounting for this attempt
+                resp["cancelled"] = True
             if lead is not None:
                 pub = {k: v for k, v in resp.items() if k != "_chunks"}
                 self.broker.publish(broker_key, pub)

@@ -1,0 +1,146 @@
+"""Per-peer circuit breakers for the fetch fabric.
+
+A breaker sits between the :class:`~repro.core.cluster.PeerDirectory`
+and one peer's transport and cuts traffic to a peer that keeps
+failing, instead of paying a bounded-but-real :class:`TransportError`
+timeout on every plan that touches it. Classic three-state machine:
+
+* **closed** — healthy; every request allowed. ``fail_threshold``
+  *consecutive* failures trip it open (one success resets the count).
+* **open** — all requests refused for a backoff window. The window
+  grows exponentially with each consecutive open (jittered so a fleet
+  of clients doesn't re-probe a recovering peer in lockstep) up to
+  ``max_backoff_s``.
+* **half-open** — after the window, exactly ONE probe request is let
+  through. Success closes the breaker (full reset); failure re-opens
+  it with a doubled window. A probe that never reports back (caller
+  died on a non-transport error) is timed out after
+  ``probe_timeout_s`` so the breaker cannot wedge shut.
+
+Time is injected (``now`` is passed in), so unit tests drive the
+machine with a mocked clock, and jitter comes from a private
+``random.Random`` seeded from the peer id via CRC32 — NOT ``hash()``,
+which ``PYTHONHASHSEED`` would make non-reproducible across processes.
+
+Thread safety: the directory's request path and hedging threads hit
+the same breaker concurrently; every transition runs under an internal
+lock. State changes are returned to the caller (the directory) so the
+``repro_breaker_state`` gauge and the flight recorder are fed exactly
+once per transition, at the site that owns the metrics.
+"""
+from __future__ import annotations
+
+import random
+import threading
+import zlib
+from typing import Optional
+
+CLOSED = "closed"
+OPEN = "open"
+HALF_OPEN = "half_open"
+
+# gauge encoding for repro_breaker_state
+STATE_GAUGE = {CLOSED: 0.0, HALF_OPEN: 0.5, OPEN: 1.0}
+
+
+class CircuitBreaker:
+    """Three-state breaker for one peer. All methods take ``now``
+    (seconds, any monotonic source) so tests can mock time."""
+
+    def __init__(self, peer_id: str, fail_threshold: int = 3,
+                 base_backoff_s: float = 0.5,
+                 max_backoff_s: float = 30.0,
+                 jitter: float = 0.2,
+                 probe_timeout_s: float = 10.0):
+        self.peer_id = peer_id
+        self.fail_threshold = max(1, int(fail_threshold))
+        self.base_backoff_s = base_backoff_s
+        self.max_backoff_s = max_backoff_s
+        self.jitter = jitter
+        self.probe_timeout_s = probe_timeout_s
+        self._lock = threading.Lock()
+        self.state = CLOSED
+        self.failures = 0              # consecutive, while closed
+        self.opens = 0                 # consecutive open episodes
+        self.open_until = 0.0
+        self._probe_inflight = False
+        self._probe_t0 = 0.0
+        self._rng = random.Random(zlib.crc32(peer_id.encode()))
+
+    # -- queries -----------------------------------------------------------
+
+    def allow(self, now: float) -> bool:
+        """May a request go to this peer right now? Transitions
+        open→half-open when the backoff window has elapsed (the caller
+        making this query becomes the probe — pair with
+        :meth:`on_attempt`)."""
+        with self._lock:
+            if self.state == CLOSED:
+                return True
+            if self.state == OPEN:
+                if now < self.open_until:
+                    return False
+                self.state = HALF_OPEN
+                self._probe_inflight = False
+                return True
+            # half-open: one probe at a time, but a probe whose caller
+            # vanished must not wedge the breaker shut forever
+            if not self._probe_inflight:
+                return True
+            return (now - self._probe_t0) > self.probe_timeout_s
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {"state": self.state, "failures": self.failures,
+                    "opens": self.opens, "open_until": self.open_until}
+
+    # -- transitions -------------------------------------------------------
+
+    def on_attempt(self, now: float) -> None:
+        """A request allowed by :meth:`allow` is now in flight; in
+        half-open this claims the single probe slot."""
+        with self._lock:
+            if self.state == HALF_OPEN:
+                self._probe_inflight = True
+                self._probe_t0 = now
+
+    def record_success(self) -> bool:
+        """Request succeeded. Returns True when the breaker state
+        changed (half-open → closed) so the caller updates its gauge."""
+        with self._lock:
+            changed = self.state != CLOSED
+            self.state = CLOSED
+            self.failures = 0
+            self.opens = 0
+            self.open_until = 0.0
+            self._probe_inflight = False
+            return changed
+
+    def record_failure(self, now: float) -> Optional[dict]:
+        """Request failed with a transport error. Returns an
+        open-event dict when this failure tripped the breaker open
+        (from closed at threshold, or a failed half-open probe), else
+        ``None``."""
+        with self._lock:
+            if self.state == HALF_OPEN:
+                return self._open(now, probe_failed=True)
+            if self.state == OPEN:
+                return None            # already open; nothing new
+            self.failures += 1
+            if self.failures >= self.fail_threshold:
+                return self._open(now, probe_failed=False)
+            return None
+
+    def _open(self, now: float, probe_failed: bool) -> dict:
+        # caller holds the lock
+        self.opens += 1
+        backoff = min(self.max_backoff_s,
+                      self.base_backoff_s * (2.0 ** (self.opens - 1)))
+        backoff *= 1.0 + self.jitter * self._rng.random()
+        self.state = OPEN
+        self.open_until = now + backoff
+        self.failures = 0
+        self._probe_inflight = False
+        return {"peer": self.peer_id, "backoff_s": backoff,
+                "opens": self.opens, "probe_failed": probe_failed,
+                "open_until": self.open_until}

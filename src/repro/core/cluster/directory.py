@@ -47,8 +47,10 @@ from repro.core.cluster.peer import CachePeer, PeerTransport
 from repro.core.cluster.placement import HotKeyTracker, PlacementPolicy
 from repro.core.net.estimator import LinkEstimator
 from repro.core.transport import TransportError
+from repro.core.cluster.breaker import STATE_GAUGE, CircuitBreaker
+from repro.core.deadline import inject_deadline
 from repro.obs.calibrate import CalibrationTracker
-from repro.obs.flight import FLIGHT, PEER_DEATH
+from repro.obs.flight import BREAKER_OPEN, FLIGHT, PEER_DEATH
 from repro.obs.metrics import REGISTRY
 from repro.obs.trace import SPANS_KEY, inject_trace, phase
 
@@ -57,7 +59,8 @@ class PeerLink:
     """Everything the client tracks about one peer."""
 
     def __init__(self, peer_id: str, transport, cache_cfg: CacheConfig,
-                 peer: Optional[CachePeer] = None):
+                 peer: Optional[CachePeer] = None,
+                 breaker: Optional[CircuitBreaker] = None):
         self.peer_id = peer_id
         self.peer = peer               # in-proc fabric only; None on TCP
         self.transport = transport
@@ -66,6 +69,8 @@ class PeerLink:
         self.suspect_until = -1e18      # clock time; past = usable
         self.local_version = 0          # csync cursor into peer.key_log
         self.remote_version = 0         # csync cursor into peer.remote_log
+        self.breaker = breaker or CircuitBreaker(peer_id)
+        self._breaker_shown = self.breaker.state   # last gauged state
 
     @property
     def net(self):
@@ -87,7 +92,12 @@ class PeerDirectory:
                  adaptive: bool = True,
                  miss_sample_cap_s: float = 0.05,
                  repl_factor: int = 2,
-                 replica_gc_grace_s: float = 1.0):
+                 replica_gc_grace_s: float = 1.0,
+                 breaker_threshold: int = 3,
+                 breaker_backoff_s: float = 0.5,
+                 breaker_max_backoff_s: float = 30.0,
+                 read_repair_interval_s: float = 5.0,
+                 hedge_floor_s: float = 0.05):
         """``peers`` mixes :class:`CachePeer` objects (in-proc fabric:
         the directory builds the simulated ``PeerTransport``) and
         transport-like objects carrying a ``peer_id`` and
@@ -96,12 +106,21 @@ class PeerDirectory:
         self.cache_cfg = cache_cfg
         self.clock = clock or SimClock()
         self.links: Dict[str, PeerLink] = {}
+
+        def _breaker(pid):
+            return CircuitBreaker(pid,
+                                  fail_threshold=breaker_threshold,
+                                  base_backoff_s=breaker_backoff_s,
+                                  max_backoff_s=breaker_max_backoff_s)
+
         for p in peers:
             if isinstance(p, CachePeer):
                 link = PeerLink(p.peer_id, PeerTransport(p, self.clock),
-                                cache_cfg, peer=p)
+                                cache_cfg, peer=p,
+                                breaker=_breaker(p.peer_id))
             else:                       # transport-like (TCPPeerLink, ...)
-                link = PeerLink(p.peer_id, p, cache_cfg)
+                link = PeerLink(p.peer_id, p, cache_cfg,
+                                breaker=_breaker(p.peer_id))
             self.links[link.peer_id] = link
         self.placement = placement or PlacementPolicy(list(self.links))
         # replicas THIS directory minted: digest -> replica peer id
@@ -152,6 +171,24 @@ class PeerDirectory:
             "repro_catalog_fp_total",
             "catalog-predicted-present GETs that missed (stale Bloom)",
             ("peer",))
+        # per-peer circuit breaker state (0 closed, 0.5 half-open,
+        # 1 open) and targeted read-repair pushes fired on FP misses
+        self._m_breaker_state = REGISTRY.gauge(
+            "repro_breaker_state",
+            "per-peer circuit breaker (0 closed, .5 half-open, 1 open)",
+            ("peer",))
+        self._m_read_repair = REGISTRY.counter(
+            "repro_read_repair_total",
+            "targeted re-replication pushes fired on Bloom-FP misses",
+            ("peer",))
+        # FP read-repair: rate limit per digest so one hot stale key
+        # can't turn every miss into a repair push
+        self.read_repair_interval_s = read_repair_interval_s
+        self._repair_t: Dict[bytes, float] = {}
+        self.read_repairs = 0
+        # hedged fetches: fire the plan's #2 candidate once #1 exceeds
+        # this multiple-free calibrated bound (see hedge_delay_s)
+        self.hedge_floor_s = hedge_floor_s
         self._nominal: Dict[str, Tuple[float, float]] = {}
         for pid, ln in self.links.items():
             net = ln.net
@@ -172,13 +209,44 @@ class PeerDirectory:
 
     def usable_ids(self) -> List[str]:
         now = self.clock.now()
-        return [pid for pid, ln in self.links.items()
-                if ln.suspect_until <= now]
+        out = []
+        for pid, ln in self.links.items():
+            if ln.suspect_until > now:
+                continue
+            ok = ln.breaker.allow(now)   # may flip open -> half-open
+            self._gauge_breaker(ln)
+            if ok:
+                out.append(pid)
+        return out
 
     def mark_suspect(self, peer_id: str) -> None:
         ln = self.links[peer_id]
         ln.suspect_until = self.clock.now() + self.suspect_cooldown_s
         ln.stats.transport_errors += 1
+
+    # -- circuit breakers ----------------------------------------------
+    def _gauge_breaker(self, ln: PeerLink) -> None:
+        st = ln.breaker.state
+        if st != ln._breaker_shown:
+            ln._breaker_shown = st
+            self._m_breaker_state.labels(peer=ln.peer_id).set(
+                STATE_GAUGE[st])
+
+    def _breaker_success(self, ln: PeerLink) -> None:
+        ln.breaker.record_success()
+        self._gauge_breaker(ln)
+
+    def _breaker_failure(self, ln: PeerLink, op: str, err) -> None:
+        ev = ln.breaker.record_failure(self.clock.now())
+        self._gauge_breaker(ln)
+        if ev is not None:
+            # the breaker just tripped: freeze the flight ring so the
+            # black box shows what led up to cutting this peer off
+            FLIGHT.trigger(BREAKER_OPEN, op=op, error=repr(err), **ev)
+
+    def breaker_states(self) -> Dict[str, dict]:
+        return {pid: ln.breaker.snapshot()
+                for pid, ln in self.links.items()}
 
     # -- catalog -------------------------------------------------------
     def lookup(self, digest: bytes) -> List[str]:
@@ -232,12 +300,17 @@ class PeerDirectory:
         (``phase`` is a no-op otherwise): the request opens a
         ``net.<op>`` child span, injects its context into the payload
         envelope, and folds the peer's returned ``_spans`` descriptors
-        back under it — one tree across both processes."""
+        back under it — one tree across both processes. An ambient
+        :func:`~repro.core.deadline.deadline_scope` budget rides the
+        payload next to the trace envelope."""
+        ln = self.links[peer_id]
+        ln.breaker.on_attempt(self.clock.now())
         try:
             with phase(f"net.{op}", peer=peer_id) as sp:
                 if sp:
                     payload = inject_trace(payload, sp)
-                resp, dt, nb = self.links[peer_id].transport.request(
+                payload = inject_deadline(payload)
+                resp, dt, nb = ln.transport.request(
                     op, payload, advance_clock)
                 if sp:
                     sp.set(bytes=nb, transfer_s=dt).end()
@@ -246,29 +319,41 @@ class PeerDirectory:
                     if remote:
                         sp._tracer.fold_remote(sp, remote,
                                                proc=f"peer:{peer_id}")
+                self._breaker_success(ln)
                 return resp, dt, nb
         except TransportError as e:
             self.mark_suspect(peer_id)
+            self._breaker_failure(ln, op, e)
             FLIGHT.trigger(PEER_DEATH, peer=peer_id, op=op,
                            error=repr(e))
             raise
 
     def request_stream(self, peer_id: str, op: str, payload: dict,
-                       on_chunk, advance_clock: bool = True):
+                       on_chunk, advance_clock: bool = True,
+                       cancel=None):
         """Streamed request (one frame per chunk) to a peer; the same
         suspect-marking failure contract as :meth:`request`. Raises
         :class:`TransportError` for dead peers and transports without
-        streaming support."""
-        tr = self.links[peer_id].transport
+        streaming support. ``cancel`` (object with ``is_set()``)
+        aborts the stream mid-flight via the wire cancel frame —
+        :class:`~repro.core.transport.StreamCancelled` propagates
+        WITHOUT marking the peer suspect or feeding its breaker: a
+        cancelled stream is the client changing its mind about a
+        healthy peer, not a failure."""
+        ln = self.links[peer_id]
+        tr = ln.transport
         if not hasattr(tr, "request_stream"):
             raise TransportError(
                 f"peer {peer_id!r} transport does not stream")
+        ln.breaker.on_attempt(self.clock.now())
         try:
             with phase(f"net.{op}", peer=peer_id, stream=True) as sp:
                 if sp:
                     payload = inject_trace(payload, sp)
+                payload = inject_deadline(payload)
                 header, dt, nb = tr.request_stream(
-                    op, payload, on_chunk, advance_clock=advance_clock)
+                    op, payload, on_chunk, advance_clock=advance_clock,
+                    cancel=cancel)
                 if sp:
                     sp.set(bytes=nb, transfer_s=dt).end()
                     remote = header.get(SPANS_KEY) \
@@ -276,9 +361,11 @@ class PeerDirectory:
                     if remote:
                         sp._tracer.fold_remote(sp, remote,
                                                proc=f"peer:{peer_id}")
+                self._breaker_success(ln)
                 return header, dt, nb
         except TransportError as e:
             self.mark_suspect(peer_id)
+            self._breaker_failure(ln, op, e)
             FLIGHT.trigger(PEER_DEATH, peer=peer_id, op=op,
                            error=repr(e))
             raise
@@ -292,6 +379,16 @@ class PeerDirectory:
             return self.estimator.est_fetch_s(peer_id, nbytes)
         bw, rtt = self._nominal[peer_id]
         return rtt + nbytes * 8.0 / bw
+
+    def hedge_delay_s(self, peer_id: str, est_s: float) -> float:
+        """How long to wait on this peer before firing the plan's #2
+        candidate: the estimate scaled by the peer's calibrated p95
+        actual/est ratio (a peer that routinely runs 2x over its
+        estimate gets 2x the patience — hedges fire on *anomalies*,
+        not on a known-slow link), floored so sub-millisecond
+        estimates don't hedge on scheduler noise."""
+        ratio = self.calibration.p95_ratio(peer_id, default=1.5)
+        return max(est_s * ratio, self.hedge_floor_s)
 
     # -- placement -----------------------------------------------------
     def upload(self, digest: bytes, blob: bytes) -> int:
@@ -357,7 +454,9 @@ class PeerDirectory:
             resp, _, _ = self.request(
                 src_peer, "hot", {"key": digest, "target": target},
                 advance_clock=False)
-        except TransportError:
+        except TransportError as e:
+            FLIGHT.record("fetch.hint_failed", peer=src_peer,
+                          error=repr(e))
             return None
         if resp.get("ok"):
             self.links[src_peer].stats.hints += 1
@@ -373,7 +472,9 @@ class PeerDirectory:
                     target, "repl",
                     {"key": digest, "blob": blob, "origin": "client"},
                     advance_clock=False)
-            except TransportError:
+            except TransportError as e:
+                FLIGHT.record("fetch.repl_failed", peer=target,
+                              error=repr(e))
                 return None
             if not (resp.get("ok") and resp.get("stored", True)):
                 self.links[target].stats.store_rejects += 1
@@ -431,14 +532,18 @@ class PeerDirectory:
     def record_get(self, peer_id: str, hit: bool, est_s: float,
                    actual_s: float, nbytes: int,
                    basis_bytes: Optional[int] = None,
-                   predicted_present: bool = False) -> None:
+                   predicted_present: bool = False,
+                   digest: Optional[bytes] = None) -> None:
         """Account one GET and feed the link estimator. ``basis_bytes``
         is the byte count the planner's estimate was computed from
         (analytic blob sizing under perf emulation); it defaults to the
         wire bytes so real-TCP observations use what actually moved.
         ``predicted_present=True`` marks a GET the Bloom catalog said
         would hit — a miss then counts as a live catalog false positive
-        (``repro_catalog_fp_total{peer}``)."""
+        (``repro_catalog_fp_total{peer}``) and, when the caller passes
+        the ``digest``, fires a targeted read-repair push (another
+        holder re-replicates the blob to the peer that lied) instead of
+        only counting the lie."""
         st = self.links[peer_id].stats
         st.gets += 1
         if hit:
@@ -452,6 +557,8 @@ class PeerDirectory:
         else:
             if predicted_present:
                 self._m_catalog_fp.labels(peer=peer_id).inc()
+                if digest is not None:
+                    self._read_repair(peer_id, digest)
             st.misses += 1
             # a failed GET is a near-empty round trip — *usually* an
             # RTT sample. But a miss dominated by server-side handling
@@ -464,6 +571,43 @@ class PeerDirectory:
                 self.estimator.observe(peer_id, 256, actual_s)
             else:
                 st.miss_outliers += 1
+
+    def _read_repair(self, miss_peer: str, digest: bytes) -> bool:
+        """A catalog-predicted-present GET missed: some OTHER peer's
+        copy should be pushed to ``miss_peer`` so the stale Bloom entry
+        becomes true again instead of lying to every future plan. Uses
+        the existing peer-to-peer ``hot`` hint (the holder ships its
+        copy itself; the client spends one digest on the wire),
+        rate-limited per digest so one hot stale key cannot turn every
+        miss into a push storm. Best-effort: failures are recorded and
+        forgotten — the next FP miss after the rate-limit window
+        retries."""
+        now = self.clock.now()
+        last = self._repair_t.get(digest)
+        if last is not None \
+                and now - last < self.read_repair_interval_s:
+            return False
+        self._repair_t[digest] = now
+        holders = [pid for pid in self.lookup(digest)
+                   if pid != miss_peer]
+        if not holders:
+            return False               # nobody else claims it either
+        src = min(holders, key=lambda pid: self.est_fetch_s(pid, 1))
+        try:
+            resp, _, _ = self.request(
+                src, "hot", {"key": digest, "target": miss_peer},
+                advance_clock=False)
+        except TransportError as e:
+            FLIGHT.record("catalog.read_repair_failed", src=src,
+                          target=miss_peer, error=repr(e))
+            return False
+        if not resp.get("ok"):
+            return False               # holder can't push (unwired/evicted)
+        self.read_repairs += 1
+        self._m_read_repair.labels(peer=miss_peer).inc()
+        FLIGHT.record("catalog.read_repair", src=src,
+                      target=miss_peer)
+        return True
 
     def record_chunk(self, peer_id: str, nbytes: int, seconds: float,
                      observe: bool = True) -> None:

@@ -40,6 +40,8 @@ the stable contract served by the gateway's
      "t_open": <monotonic s>,
      "prompt_tokens": <int>,
      "local_est_s": <float|null>, # perf-model local-prefill baseline
+     "deadline_s": <float|null>,  # remaining budget the plan priced
+                                  # against (null = none carried)
      "candidates": [              # FULL priced set, pre-prune
         {"peer": "peer0", "range_tokens": <int>,
          "est_fetch_s": <float>, "est_total_s": <float>,
@@ -48,7 +50,7 @@ the stable contract served by the gateway's
         ...],
      "attempts": [                # walked by the caller, in order
         {"peer": "peer0", "range_tokens": <int>,
-         "result": "hit|miss|dead|corrupt",
+         "result": "hit|miss|dead|corrupt|deadline|cancelled",
          "est_fetch_s": <float>, "actual_s": <float>,
          "shared": <bool>},       # true = served from the dedup broker
         ...],
@@ -123,7 +125,13 @@ class FetchPlanner:
     # ------------------------------------------------------------------
     def plan(self, keys: Sequence[PromptKey], n_tokens: int,
              min_match: int = 0,
-             use_catalog: bool = True) -> List[FetchAttempt]:
+             use_catalog: bool = True,
+             deadline_s: Optional[float] = None) -> List[FetchAttempt]:
+        """``deadline_s`` is the request's *remaining* latency budget:
+        candidates whose estimated total cannot finish inside it are
+        pruned exactly like candidates that lose to local recompute —
+        a fetch that would blow the deadline is never worth starting,
+        even when it beats local prefill on raw seconds."""
         cfg, perf, d = self.perf_cfg, self.perf, self.directory
         attempts: List[FetchAttempt] = []
         for k in keys:
@@ -167,12 +175,16 @@ class FetchPlanner:
             kept.sort(
                 key=lambda a: (-a.key.n_tokens, a.est_fetch_s,
                                a.ring_rank))
-        self._open_decision(attempts, kept, local_s, n_tokens)
+        if deadline_s is not None:
+            kept = [a for a in kept if a.est_total_s < deadline_s]
+        self._open_decision(attempts, kept, local_s, n_tokens,
+                            deadline_s=deadline_s)
         return kept
 
     def _open_decision(self, priced: List[FetchAttempt],
                        kept: List[FetchAttempt],
-                       local_s: Optional[float], n_tokens: int) -> None:
+                       local_s: Optional[float], n_tokens: int,
+                       deadline_s: Optional[float] = None) -> None:
         """Open the ledger record for this plan (schema above)."""
         if not LEDGER.enabled:
             self.last_decision = None
@@ -188,4 +200,5 @@ class FetchPlanner:
         self.last_decision = LEDGER.open(
             client=self.owner, prompt_tokens=n_tokens,
             trace_id=sp.trace_id if sp is not None else "",
-            candidates=cands, local_est_s=local_s)
+            candidates=cands, local_est_s=local_s,
+            deadline_s=deadline_s)

@@ -1,0 +1,111 @@
+"""End-to-end deadline propagation for the fetch fabric.
+
+A request that enters with a latency budget (gateway ``deadline_s``
+field, or ``EdgeClient.infer(deadline_s=...)``) carries that budget
+down through planning, every fetch attempt, and across the wire:
+
+* client side: :func:`deadline_scope` installs a :class:`Deadline` in
+  a thread-local; the planner refuses candidates whose priced total
+  cannot beat local recompute *within the remaining budget*, and the
+  client walk skips attempts whose estimated fetch alone exceeds what
+  is left (ledger result ``"deadline"``).
+* wire side: :meth:`PeerDirectory.request`/``request_stream`` stamp
+  the remaining seconds into the op payload under
+  :data:`DEADLINE_KEY`, next to the ``_trace`` envelope. The peer
+  server pops it before dispatch and answers an already-expired
+  request with ``{"ok": False, "deadline_exceeded": True}`` without
+  running the handler — a fetch that cannot possibly be useful should
+  not occupy a peer's executor or its outbound link.
+
+The ambient scope is thread-local; code that hops threads (the stream
+pump in ``EdgeClient._fetch_streamed``) hands the deadline over
+explicitly with :func:`attach`, mirroring how tracer spans cross the
+same boundary. Time defaults to :func:`repro.obs.clock.monotonic` and
+accepts any object with a ``now()`` (``SimClock``), so sim runs
+price deadlines on sim time.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Optional
+
+from repro.obs import clock as oclock
+
+# payload key the remaining budget rides under (next to _trace)
+DEADLINE_KEY = "_deadline"
+
+_tls = threading.local()
+
+
+class Deadline:
+    """An absolute expiry on an injected clock."""
+
+    def __init__(self, budget_s: float, clock=None):
+        self._clock = clock
+        self.budget_s = float(budget_s)
+        self.t0 = self._now()
+        self.expires_at = self.t0 + self.budget_s
+
+    def _now(self) -> float:
+        if self._clock is not None:
+            return self._clock.now()
+        return oclock.monotonic()
+
+    def remaining(self) -> float:
+        return self.expires_at - self._now()
+
+    def expired(self) -> bool:
+        return self.remaining() <= 0.0
+
+    def __repr__(self) -> str:
+        return (f"Deadline(budget={self.budget_s:.3f}s, "
+                f"remaining={self.remaining():.3f}s)")
+
+
+def current_deadline() -> Optional[Deadline]:
+    """The ambient deadline for this thread, or None."""
+    return getattr(_tls, "deadline", None)
+
+
+@contextmanager
+def deadline_scope(budget_s: Optional[float], clock=None):
+    """Install a deadline for the duration of the block. A ``None``
+    budget is a no-op scope (yields None), so call sites don't need
+    their own conditionals."""
+    if budget_s is None:
+        yield None
+        return
+    dl = Deadline(budget_s, clock=clock)
+    prev = getattr(_tls, "deadline", None)
+    _tls.deadline = dl
+    try:
+        yield dl
+    finally:
+        _tls.deadline = prev
+
+
+@contextmanager
+def attach(dl: Optional[Deadline]):
+    """Re-install an existing deadline on *this* thread (explicit
+    cross-thread handoff for pump/hedge threads)."""
+    prev = getattr(_tls, "deadline", None)
+    _tls.deadline = dl
+    try:
+        yield dl
+    finally:
+        _tls.deadline = prev
+
+
+def inject_deadline(payload: dict) -> dict:
+    """Return a copy of ``payload`` stamped with the ambient
+    deadline's remaining seconds (or the payload itself when no
+    deadline is in scope). The absolute expiry never crosses the wire
+    — the two processes share no clock — only the remaining budget
+    does, mirroring gRPC's grpc-timeout header."""
+    dl = current_deadline()
+    if dl is None:
+        return payload
+    out = dict(payload)
+    out[DEADLINE_KEY] = dl.remaining()
+    return out

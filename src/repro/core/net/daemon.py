@@ -14,7 +14,7 @@ learns OS-assigned ports. The import footprint is deliberately tiny —
 config + cache + sockets, no JAX — so a fleet of daemons starts in
 milliseconds.
 
-On top of the peer's ops the daemon speaks four control ops:
+On top of the peer's ops the daemon speaks five control ops:
 
 * ``health``        — liveness + store occupancy + pid + replication
   stats (pending pushes, handoffs delivered, repaired leaks) + the
@@ -28,6 +28,15 @@ On top of the peer's ops the daemon speaks four control ops:
   silent-congestion drill in ``benchmarks/gateway_load.py`` uses this
   to degrade one live peer without restarting it and watch the
   client-side estimator-drift alarm fire.
+* ``inject``        — ``{chaos: {flag: value, ...}, reset: bool}``;
+  runtime fault injection for the chaos fabric
+  (``repro.chaos``). Flags merge into the live
+  :class:`~repro.core.net.server.PeerServer` ``chaos`` dict exactly
+  like ``set_throttle`` mutates pacing: ``corrupt_chunks`` /
+  ``stall_chunk_s`` / ``close_mid_stream`` / ``delay_ack_s`` /
+  ``partition_inbound``. A ``None`` value removes a flag;
+  ``reset: true`` heals everything. ``inject`` itself is exempt from
+  ``partition_inbound`` so a partitioned peer can always be healed.
 * ``set_neighbors`` — ``{peers: {peer_id: [host, port], ...},
   ring: [...], repl_factor: R}``; arms the epidemic gossip thread,
   which every ``--gossip-interval`` seconds pulls ``csync`` deltas from
@@ -146,8 +155,31 @@ class DaemonHandler:
                         len(getattr(srv, "tombstones", ()))),
                     "throttle_bps": getattr(self.server, "throttle_bps",
                                             None),
+                    "chaos": dict(getattr(self.server, "chaos",
+                                          None) or {}),
+                    "transport": dict(getattr(self.server, "stats",
+                                              None) or {}),
                     "metrics": REGISTRY.snapshot(),
                     "flight": FLIGHT.snapshot()}
+        if op == "inject":
+            # runtime fault injection (chaos fabric): merge flags into
+            # the live server's chaos dict the same way set_throttle
+            # mutates pacing — no restart, next request sees them. A
+            # None value removes that flag; {"reset": true} clears all.
+            from repro.obs import FLIGHT
+            if self.server is None:
+                return {"ok": False, "error": "no server attached"}
+            if payload.get("reset"):
+                self.server.chaos.clear()
+            for k, v in (payload.get("chaos") or {}).items():
+                if v is None:
+                    self.server.chaos.pop(k, None)
+                else:
+                    self.server.chaos[k] = v
+            FLIGHT.record("chaos.inject", peer=self.peer.peer_id,
+                          chaos=dict(self.server.chaos))
+            return {"ok": True, "peer": self.peer.peer_id,
+                    "chaos": dict(self.server.chaos)}
         if op == "set_throttle":
             bps = payload.get("bps")
             if self.server is None:

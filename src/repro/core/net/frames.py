@@ -26,6 +26,19 @@ decode/restore chunk *i* while chunk *i+1* is in flight. No new frame
 type exists on the wire; a v1 reader sees ordinary frames, and the
 count in the header (not a sentinel) bounds the stream, so a truncated
 stream is a :class:`FrameError` at the next read, never a hang.
+
+**Cancel frame** (wire format v3, client→server): while consuming a
+chunk stream the client may send one ordinary frame whose payload is
+exactly ``{"cancel": True}``. A server mid-stream cuts the stream
+short by sending ``{"cancelled": True}`` *in place of the next chunk
+frame* and stops — framing stays in sync because the client counts
+every received frame (ack included) against the announced
+``n_chunks``. A cancel that arrives after the stream already finished
+is *stale*: the server drops it silently and the client, having
+consumed all announced chunks, treats the stream as cancelled anyway.
+Either way the connection ends the exchange at a frame boundary and
+stays reusable — cancellation is an optimization (hedging losers,
+estimator-revised fetches, expired deadlines), never an error path.
 """
 from __future__ import annotations
 

@@ -28,7 +28,12 @@ from typing import Optional, Set
 from repro.obs import REGISTRY, clock
 from repro.obs.flight import FLIGHT
 from repro.obs.trace import SPANS_KEY, Tracer, extract_trace
+from repro.core.deadline import DEADLINE_KEY
 from repro.core.net import frames
+
+# sentinel returned by _stream_chunks when injected chaos aborted the
+# connection mid-stream (the client must see a truncated stream)
+_CONN_DROPPED = object()
 
 
 class PeerServer:
@@ -51,8 +56,18 @@ class PeerServer:
         # of a bandwidth-constrained link — the overlap benchmarks'
         # knob); None = send at socket speed
         self.throttle_bps = throttle_bps
+        # fault-injection flags, mutated live by the daemon's ``inject``
+        # control op (see repro.chaos): corrupt_chunks (flip a byte in
+        # the next k outgoing chunks), stall_chunk_s (sleep before each
+        # chunk frame), close_mid_stream (abort the connection after k
+        # chunks of a stream), delay_ack_s (sleep before non-stream
+        # replies), partition_inbound (drop data-plane requests without
+        # replying — the inbound half of an asymmetric partition; the
+        # ``inject`` op itself is exempt so drills can always heal)
+        self.chaos: dict = {}
         self.stats = {"connections": 0, "requests": 0, "frame_errors": 0,
-                      "bytes_in": 0, "bytes_out": 0, "chunks_out": 0}
+                      "bytes_in": 0, "bytes_out": 0, "chunks_out": 0,
+                      "cancels": 0}
         # server-side tracing: requests whose payload carries a
         # ``_trace`` envelope get a ``peer.<op>`` span (plus any
         # handler-side ambient phases) returned as relative-time
@@ -111,10 +126,21 @@ class PeerServer:
         self.stats["connections"] += 1
         self._writers.add(writer)
         loop = asyncio.get_event_loop()
+        # Persistent read-ahead task: while a chunk stream is being
+        # written, the next inbound frame may be a mid-flight
+        # ``{"cancel": True}`` from the client. The task survives
+        # across loop iterations so a read started during a stream is
+        # simply awaited by the main loop if it turns out to be an
+        # ordinary (pipelined) request, EOF, or a frame error.
+        pending: Optional[asyncio.Task] = None
         try:
             while not self._stopping:
+                if pending is None:
+                    pending = asyncio.ensure_future(
+                        frames.recv_frame_async(reader))
+                task, pending = pending, None
                 try:
-                    got = await frames.recv_frame_async(reader)
+                    got = await task
                 except frames.FrameError:
                     self.stats["frame_errors"] += 1
                     FLIGHT.record("peer.frame_error", host=self.host,
@@ -129,12 +155,25 @@ class PeerServer:
                     # violation, not a handler error
                     self.stats["frame_errors"] += 1
                     return
+                if set(msg) == {"cancel"}:
+                    # stale cancel: the stream it aimed at already
+                    # finished — drop it silently, framing stays in sync
+                    continue
                 # From here to the flush the request counts as in
                 # flight: a graceful close() waits for it.
                 self._inflight += 1
                 try:
                     self.stats["requests"] += 1
                     op = msg.pop("op", None)
+                    if self.chaos.get("partition_inbound") \
+                            and op != "inject":
+                        # asymmetric partition, inbound half: this peer
+                        # stops answering but its own outbound traffic
+                        # (gossip, replication) still flows
+                        FLIGHT.record("chaos.fault",
+                                      kind="partition_inbound",
+                                      op=str(op))
+                        return
                     # multi-frame streaming only happens when the CLIENT
                     # asked for it (request_stream sets "stream"): a
                     # plain request() reads exactly one frame, and
@@ -142,18 +181,35 @@ class PeerServer:
                     # later response on the connection
                     want_stream = bool(msg.pop("stream", False))
                     ctx = extract_trace(msg)
-                    try:
-                        resp = await loop.run_in_executor(
-                            None, self._dispatch, op, msg, ctx)
-                    except Exception as e:   # handler bug -> error reply
-                        FLIGHT.record("peer.op_error", op=str(op),
-                                      error=repr(e))
-                        resp = {"ok": False, "error": repr(e)}
+                    dl_rem = msg.pop(DEADLINE_KEY, None)
+                    if dl_rem is not None and float(dl_rem) <= 0.0:
+                        # already expired on arrival: answering with
+                        # data nobody can use would only occupy the
+                        # executor and the outbound link
+                        FLIGHT.record("peer.deadline_exceeded",
+                                      op=str(op), remaining_s=dl_rem)
+                        resp = {"ok": False,
+                                "error": "deadline exceeded",
+                                "deadline_exceeded": True}
+                    else:
+                        try:
+                            resp = await loop.run_in_executor(
+                                None, self._dispatch, op, msg, ctx)
+                        except Exception as e:  # handler bug -> error
+                            FLIGHT.record("peer.op_error", op=str(op),
+                                          error=repr(e))
+                            resp = {"ok": False, "error": repr(e)}
                     chunks = resp.pop("chunks", None) \
                         if (want_stream and isinstance(resp, dict)) \
                         else None
                     pace = {"t": loop.time()}   # per-response pacer
                     if chunks is None:
+                        delay = self.chaos.get("delay_ack_s")
+                        if delay:
+                            FLIGHT.record("chaos.fault",
+                                          kind="delay_ack",
+                                          op=str(op), delay_s=delay)
+                            await asyncio.sleep(delay)
                         self.stats["bytes_out"] += \
                             await self._send(writer, resp, pace)
                     else:
@@ -164,21 +220,85 @@ class PeerServer:
                         resp["n_chunks"] = len(chunks)
                         self.stats["bytes_out"] += \
                             await self._send(writer, resp, pace)
-                        for c in chunks:
-                            self.stats["bytes_out"] += \
-                                await self._send(writer, {"chunk": c},
-                                                 pace)
-                            self.stats["chunks_out"] += 1
+                        pending = await self._stream_chunks(
+                            reader, writer, str(op), chunks, pace,
+                            pending)
+                        if pending is _CONN_DROPPED:
+                            return
                 finally:
                     self._inflight -= 1
         except (ConnectionError, asyncio.CancelledError):
             pass
         finally:
+            if pending is not None and pending is not _CONN_DROPPED \
+                    and not pending.done():
+                pending.cancel()
             self._writers.discard(writer)
             try:
                 writer.close()
             except Exception:
                 pass
+
+    async def _stream_chunks(self, reader, writer, op: str, chunks,
+                             pace: dict,
+                             pending: Optional[asyncio.Task]
+                             ) -> "Optional[asyncio.Task]":
+        """Write a chunk stream, honoring mid-flight cancel frames and
+        injected chaos. Between chunk frames a read-ahead task watches
+        the socket: a ``{"cancel": True}`` frame from the client cuts
+        the stream short with a ``{"cancelled": True}`` ack in place of
+        the next chunk — the framing stays in sync because the client
+        counts every frame against the announced ``n_chunks``. Any
+        other inbound read result (EOF, error, pipelined request) is
+        handed back to the main loop untouched. Returns the surviving
+        read-ahead task (or ``_CONN_DROPPED`` when chaos aborted the
+        connection)."""
+        sent = 0
+        for c in chunks:
+            if pending is None:
+                pending = asyncio.ensure_future(
+                    frames.recv_frame_async(reader))
+            # yield once so the read-ahead task can make progress even
+            # when every write below completes without blocking
+            await asyncio.sleep(0)
+            if pending.done() and not pending.cancelled() \
+                    and pending.exception() is None:
+                got = pending.result()
+                if got is not None and isinstance(got[0], dict) \
+                        and set(got[0]) == {"cancel"}:
+                    pending = None
+                    self.stats["bytes_in"] += got[1]
+                    self.stats["cancels"] += 1
+                    self.stats["bytes_out"] += await self._send(
+                        writer, {"cancelled": True}, pace)
+                    return None
+                # EOF / frame error / pipelined request: main loop's job
+            ch = self.chaos
+            if ch.get("close_mid_stream") is not None \
+                    and sent >= int(ch["close_mid_stream"]):
+                ch.pop("close_mid_stream", None)
+                FLIGHT.record("chaos.fault", kind="close_mid_stream",
+                              op=op, after_chunks=sent)
+                if pending is not None and not pending.done():
+                    pending.cancel()
+                return _CONN_DROPPED   # client: FrameError mid-stream
+            stall = ch.get("stall_chunk_s")
+            if stall:
+                if sent == 0:
+                    FLIGHT.record("chaos.fault", kind="stall_chunks",
+                                  op=op, stall_s=stall)
+                await asyncio.sleep(stall)
+            if ch.get("corrupt_chunks", 0) > 0 and len(c) > 0:
+                ch["corrupt_chunks"] -= 1
+                FLIGHT.record("chaos.fault", kind="corrupt_chunk",
+                              op=op, chunk=sent)
+                b = bytes(c)
+                c = bytes([b[0] ^ 0xFF]) + b[1:]
+            self.stats["bytes_out"] += \
+                await self._send(writer, {"chunk": c}, pace)
+            self.stats["chunks_out"] += 1
+            sent += 1
+        return pending
 
     def _dispatch(self, op, payload: dict, ctx) -> dict:
         """Run the handler on the executor thread, metered. With a

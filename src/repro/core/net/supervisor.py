@@ -19,11 +19,13 @@ build their fleets through this class.
 from __future__ import annotations
 
 import os
+import random
 import signal
 import subprocess
 import sys
 import threading
 import time
+import zlib
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -31,6 +33,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro.core.net.link import TCPPeerLink
 from repro.core.transport import TransportError
 from repro.obs import clock as oclock
+from repro.obs.flight import FLIGHT, RESTART_CIRCUIT_OPEN
 
 
 @dataclass
@@ -52,6 +55,19 @@ class PeerProc:
         self.proc: Optional[subprocess.Popen] = None
         self.port: int = spec.port
         self.restarts = 0
+        # restart-storm guard state (supervised restarts via
+        # check_and_restart only — explicit .restart() calls by
+        # tests/drills bypass it): ``storm`` counts restarts since the
+        # peer last looked stable, ``backoff_until`` gates the next
+        # supervised respawn, ``circuit_open`` parks a peer that keeps
+        # crashing until an operator intervenes. Jitter is seeded from
+        # the peer id (crc32, NOT hash() — PYTHONHASHSEED-stable) so
+        # fleets desynchronize deterministically.
+        self.storm = 0
+        self.backoff_until = 0.0
+        self.last_restart_t = 0.0
+        self.circuit_open = False
+        self._rng = random.Random(zlib.crc32(spec.peer_id.encode()))
         # last few lines of child output (drained continuously so a
         # chatty daemon can never wedge on a full stdout pipe)
         self.tail: "deque[str]" = deque(maxlen=20)
@@ -77,13 +93,24 @@ class PeerSupervisor:
                  start_timeout_s: float = 30.0,
                  request_timeout_s: float = 5.0,
                  repl_factor: int = 2,
-                 state_dir: Optional[str] = None):
+                 state_dir: Optional[str] = None,
+                 restart_backoff_s: float = 0.5,
+                 restart_backoff_max_s: float = 30.0,
+                 restart_jitter: float = 0.2,
+                 max_restarts: int = 8,
+                 restart_stable_s: float = 60.0):
         if not specs:
             raise ValueError("need at least one PeerSpec")
         self.python = python
         self.start_timeout_s = start_timeout_s
         self.request_timeout_s = request_timeout_s
         self.repl_factor = repl_factor
+        # restart-storm guard knobs (see check_and_restart)
+        self.restart_backoff_s = restart_backoff_s
+        self.restart_backoff_max_s = restart_backoff_max_s
+        self.restart_jitter = restart_jitter
+        self.max_restarts = max_restarts
+        self.restart_stable_s = restart_stable_s
         # fleet state directory (ROADMAP: estimator persistence).
         # Daemons persist their gossip-link estimators under it across
         # restarts, and every client directory minted here warm-starts
@@ -178,8 +205,10 @@ class PeerSupervisor:
                 self.request(pid, "set_neighbors",
                              {"peers": addrs, "ring": ring,
                               "repl_factor": self.repl_factor})
-            except TransportError:
-                pass                   # it will be re-wired on restart
+            except TransportError as e:
+                # it will be re-wired on its next restart
+                FLIGHT.record("supervisor.rewire_failed", peer=pid,
+                              error=repr(e))
 
     # -- addressing / client views -------------------------------------
     def addresses(self) -> Dict[str, Tuple[str, int]]:
@@ -247,8 +276,10 @@ class PeerSupervisor:
                 out[pid] = bool(
                     self.request(pid, "health", {}, timeout=2.0)
                     .get("ok"))
-            except TransportError:
+            except TransportError as e:
                 out[pid] = False
+                FLIGHT.record("supervisor.peer_unreachable", peer=pid,
+                              error=repr(e))
         return out
 
     def fleet_metrics(self) -> Dict[str, object]:
@@ -282,22 +313,25 @@ class PeerSupervisor:
         the estimator-calibration loop, rendered by the fleet
         console."""
         out: Dict[str, object] = {}
+        restarts = self.restart_states()
         for pid, pp in self.procs.items():
             if not pp.alive:
-                out[pid] = {"alive": False}
+                out[pid] = {"alive": False, "restart": restarts[pid]}
                 continue
             try:
                 resp = self.request(pid, "health", {}, timeout=2.0)
             except TransportError:
-                out[pid] = {"alive": False}
+                out[pid] = {"alive": False, "restart": restarts[pid]}
                 continue
             if not resp.get("ok"):
-                out[pid] = {"alive": False}
+                out[pid] = {"alive": False, "restart": restarts[pid]}
                 continue
             out[pid] = {"alive": True,
                         "catalog_fp": resp.get("catalog_fp", {}),
                         "links": resp.get("links", {}),
                         "throttle_bps": resp.get("throttle_bps"),
+                        "chaos": resp.get("chaos", {}),
+                        "restart": restarts[pid],
                         "stored_bytes": resp.get("stored_bytes", 0),
                         "n_entries": resp.get("n_entries", 0)}
         return out
@@ -310,14 +344,77 @@ class PeerSupervisor:
         return self.request(peer_id, "set_throttle", {"bps": bps})
 
     def check_and_restart(self) -> List[str]:
-        """Health-check the fleet; restart every dead peer. Returns the
-        ids restarted."""
+        """Health-check the fleet; restart dead peers under the
+        restart-storm guard. The FIRST death restarts immediately (the
+        common one-off crash must heal at supervision cadence), but
+        repeated deaths back off exponentially with deterministic
+        per-peer jitter (capped at ``restart_backoff_max_s``), and
+        after ``max_restarts`` restarts without an intervening stable
+        period the peer's restart circuit opens: it stays down until an
+        operator calls :meth:`restart` explicitly. A peer that reports
+        healthy for ``restart_stable_s`` after its last restart is
+        forgiven (storm counter and circuit reset). Without this guard
+        a crash-looping daemon (bad config, poisoned store) turns the
+        supervision loop into a fork bomb. Returns the ids restarted
+        this sweep."""
         restarted = []
         for pid, ok in self.health().items():
-            if not ok:
-                self.restart(pid)
-                restarted.append(pid)
+            pp = self.procs[pid]
+            now = oclock.monotonic()
+            if ok:
+                if pp.storm and (now - pp.last_restart_t
+                                 >= self.restart_stable_s):
+                    pp.storm = 0
+                    pp.circuit_open = False
+                continue
+            if pp.circuit_open or now < pp.backoff_until:
+                continue
+            if pp.storm >= self.max_restarts:
+                pp.circuit_open = True
+                FLIGHT.trigger(RESTART_CIRCUIT_OPEN, peer=pid,
+                               restarts=pp.restarts, storm=pp.storm)
+                continue
+            self.restart(pid)
+            pp.storm += 1
+            pp.last_restart_t = oclock.monotonic()
+            delay = min(self.restart_backoff_max_s,
+                        self.restart_backoff_s * (2 ** (pp.storm - 1)))
+            delay *= 1.0 + self.restart_jitter * pp._rng.random()
+            pp.backoff_until = pp.last_restart_t + delay
+            FLIGHT.record("supervisor.restart", peer=pid,
+                          storm=pp.storm, next_backoff_s=delay)
+            restarted.append(pid)
         return restarted
+
+    def restart_states(self) -> Dict[str, dict]:
+        """Per-peer restart-storm guard state (fleet console / drill
+        assertions)."""
+        now = oclock.monotonic()
+        return {pid: {"restarts": pp.restarts, "storm": pp.storm,
+                      "circuit_open": pp.circuit_open,
+                      "backoff_remaining_s":
+                          max(pp.backoff_until - now, 0.0)}
+                for pid, pp in self.procs.items()}
+
+    def inject_faults(self, peer_id: str,
+                      chaos: Optional[dict] = None,
+                      reset: bool = False) -> dict:
+        """Runtime fault injection on a live daemon — the chaos
+        fabric's control hook. ``chaos`` flags are merged into the
+        peer server's live chaos dict (a ``None`` value removes that
+        flag); ``reset=True`` clears every fault first. Returns the
+        daemon's post-merge chaos view. Flags (see
+        ``PeerServer.chaos``): ``corrupt_chunks`` (flip a byte in the
+        next N stream chunks), ``stall_chunk_s`` (sleep before each
+        chunk), ``close_mid_stream`` (drop the connection after N
+        chunks), ``delay_ack_s`` (sleep before single-frame replies),
+        ``partition_inbound`` (drop every non-inject request)."""
+        payload: dict = {}
+        if reset:
+            payload["reset"] = True
+        if chaos is not None:
+            payload["chaos"] = chaos
+        return self.request(peer_id, "inject", payload)
 
     def restart(self, peer_id: str) -> None:
         """Respawn a peer on its previous port (clients' lazy links
@@ -344,7 +441,9 @@ class PeerSupervisor:
         else:
             try:
                 self.request(peer_id, "shutdown", {}, timeout=2.0)
-            except TransportError:
+            except TransportError as e:
+                FLIGHT.record("supervisor.drain_failed", peer=peer_id,
+                              error=repr(e))
                 pp.proc.terminate()
             try:
                 pp.proc.wait(timeout=10.0)

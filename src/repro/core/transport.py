@@ -37,6 +37,14 @@ class TransportError(ConnectionError):
     fallback)."""
 
 
+class StreamCancelled(Exception):
+    """A chunk stream was aborted mid-flight at the *client's* request
+    (hedging loser, estimator-revised fetch, expired deadline) via the
+    cancel frame. Deliberately NOT a :class:`ConnectionError`: the
+    socket is left clean at a frame boundary and the peer is healthy,
+    so callers must not mark it suspect or trip its breaker."""
+
+
 class InProcTransport:
     def __init__(self, server: CacheServer, net: SimNetwork,
                  clock: Optional[SimClock] = None):
@@ -55,7 +63,14 @@ class InProcTransport:
         runs produce the same cross-"process" trees the TCP fleet
         does, and payloads without the envelope are served untouched.
         """
+        from repro.core.deadline import DEADLINE_KEY
         from repro.obs.trace import SPANS_KEY, extract_trace
+        # deadline parity with PeerServer._conn: an expired budget is
+        # answered without running the handler
+        dl_rem = payload.pop(DEADLINE_KEY, None)
+        if dl_rem is not None and float(dl_rem) <= 0.0:
+            return {"ok": False, "error": "deadline exceeded",
+                    "deadline_exceeded": True}
         ctx = extract_trace(payload)
         if ctx is None:
             return self.server.handle(op, payload)
@@ -92,15 +107,18 @@ class InProcTransport:
         return resp, dt, nbytes
 
     def request_stream(self, op: str, payload: dict, on_chunk,
-                       advance_clock: bool = True
-                       ) -> Tuple[dict, float, int]:
+                       advance_clock: bool = True,
+                       cancel=None) -> Tuple[dict, float, int]:
         """Streamed request: the response's ``chunks`` are delivered one
         at a time through ``on_chunk(chunk_bytes, sim_dt, nbytes)``.
         Per-chunk sim time is the link's serialized transfer (RTT is
         paid once, on the header), so the total matches the equivalent
         single-frame transfer — only the *arrival pattern* changes,
         which is exactly what download/compute pipelining consumes.
-        Returns (header_response, total_sim_seconds, total_bytes)."""
+        ``cancel`` (an object with ``is_set()``) aborts between chunks
+        with :class:`StreamCancelled` — the sim analogue of the TCP
+        cancel frame. Returns (header_response, total_sim_seconds,
+        total_bytes)."""
         from repro.core.net import frames
         req = frames.pack_payload({"op": op, **payload})
         resp = self._serve(op, payload)
@@ -113,6 +131,10 @@ class InProcTransport:
             self.clock.advance(dt)
         total_dt, total_nb = dt, nbytes
         for c in chunks:
+            if cancel is not None and cancel.is_set():
+                raise StreamCancelled(
+                    f"stream {op!r} cancelled after "
+                    f"{total_nb - nbytes} chunk bytes")
             nb = len(c) + 16               # chunk frame overhead
             cdt = nb * 8.0 / self.net.bandwidth_bps
             if advance_clock:
@@ -184,8 +206,8 @@ class TCPTransport:
         return resp, dt, n_up + n_down
 
     def request_stream(self, op: str, payload: dict, on_chunk,
-                       advance_clock: bool = True
-                       ) -> Tuple[dict, float, int]:
+                       advance_clock: bool = True,
+                       cancel=None) -> Tuple[dict, float, int]:
         """Streamed request over the socket: the server answers with a
         header frame carrying ``n_chunks`` and then one frame per
         chunk; each is handed to ``on_chunk(chunk_bytes, wall_dt,
@@ -194,7 +216,16 @@ class TCPTransport:
         framing, or ``on_chunk`` failure poisons the connection (frames
         of a half-read stream must never mis-pair with a later request)
         and surfaces as :class:`TransportError` / the original error.
-        Returns (header_response, total_wall_seconds, total_bytes)."""
+
+        ``cancel`` (an object with ``is_set()``, e.g. a
+        ``threading.Event``) aborts the stream mid-flight: between
+        chunk frames the transport sends one ``{"cancel": True}`` frame
+        and keeps draining — discarding chunks — until the server's
+        ``{"cancelled": True}`` ack (or the announced chunk count)
+        arrives, then raises :class:`StreamCancelled` with the socket
+        clean at a frame boundary, NOT poisoned: the next request
+        reuses the connection. Returns (header_response,
+        total_wall_seconds, total_bytes)."""
         from repro.core.net import frames
         t0 = oclock.monotonic()
         with self.lock:
@@ -203,22 +234,43 @@ class TCPTransport:
             try:
                 n_up = frames.send_frame(
                     self.sock, {"op": op, "stream": True, **payload})
+                total = n_up
                 header, n_down = frames.recv_frame_with_size(self.sock)
-                total = n_up + n_down
+                total += n_down
                 n_chunks = int(header.get("n_chunks", 0)) \
                     if isinstance(header, dict) else 0
+                cancel_sent = False
                 t_prev = oclock.monotonic()
                 for i in range(n_chunks):
+                    if not cancel_sent and cancel is not None \
+                            and cancel.is_set():
+                        total += frames.send_frame(
+                            self.sock, {"cancel": True})
+                        cancel_sent = True
                     msg, nb = frames.recv_frame_with_size(self.sock)
                     now = oclock.monotonic()
                     total += nb
+                    if cancel_sent and isinstance(msg, dict) \
+                            and msg.get("cancelled"):
+                        # server cut the stream at a frame boundary in
+                        # direct response to our cancel: socket clean
+                        raise StreamCancelled(
+                            f"stream {op!r} cancelled after {i} chunks")
                     chunk = msg.get("chunk") if isinstance(msg, dict) \
                         else None
                     if chunk is None:
                         raise frames.FrameError(
                             f"stream frame {i} carries no chunk")
-                    on_chunk(bytes(chunk), now - t_prev, nb)
+                    if not cancel_sent:    # post-cancel chunks: drain
+                        on_chunk(bytes(chunk), now - t_prev, nb)
                     t_prev = now
+                if cancel is not None and n_chunks \
+                        and (cancel_sent or cancel.is_set()):
+                    # stale cancel: the server finished the stream
+                    # before reading it (it drops the frame silently);
+                    # the caller still asked to abort, so honor it
+                    raise StreamCancelled(
+                        f"stream {op!r} cancelled at stream end")
             except (OSError, frames.FrameError) as e:
                 try:
                     self.sock.close()
@@ -226,6 +278,8 @@ class TCPTransport:
                     self.sock = None
                 raise TransportError(
                     f"stream {op!r} to {self.addr} failed: {e}") from e
+            except StreamCancelled:
+                raise                  # socket is clean: no poison
             except Exception:
                 # on_chunk rejected the stream (e.g. integrity failure):
                 # unread frames make the socket unusable — poison it

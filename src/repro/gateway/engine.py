@@ -35,6 +35,8 @@ from repro.core import state_io
 from repro.core.catalog import Catalog
 from repro.core.cluster.directory import PeerDirectory
 from repro.core.cluster.planner import FetchAttempt, FetchPlanner
+from repro.core.deadline import attach as deadline_attach
+from repro.core.deadline import current_deadline, deadline_scope
 from repro.core.fetch_policy import FetchPolicy
 from repro.core.keys import model_meta
 from repro.core.metrics import ServingReport, merge_peer_stats
@@ -42,6 +44,7 @@ from repro.core.session_pool import FetchBroker
 from repro.core.transport import TransportError
 from repro.gateway.protocol import ParsedRequest
 from repro.obs import REGISTRY, clock as oclock
+from repro.obs.flight import FLIGHT
 from repro.obs.ledger import LEDGER, LEDGER_KEY
 from repro.obs.metrics import DEFAULT_BUCKETS
 from repro.obs.trace import NULL_SPAN, NULL_TRACER, Tracer, current_span
@@ -151,8 +154,10 @@ class PrefixFetcher:
             return
         try:
             self.catalog.maybe_sync(self.transport, now)
-        except TransportError:
-            pass                     # stale catalog degrades to misses
+        except TransportError as e:
+            # stale catalog degrades to misses
+            FLIGHT.record("catalog.sync_failed", client="gateway",
+                          error=repr(e))
 
     # ------------------------------------------------------------------
     def resolve(self, segments) -> Tuple[object, int, object, str]:
@@ -164,8 +169,11 @@ class PrefixFetcher:
                              self.cache_cfg.range_stride)
         n = len(segments.token_ids)
         min_match = self.cache_cfg.min_match_tokens
+        ddl = current_deadline()
         if self.directory is not None:
-            plan = self.planner.plan(keys, n, min_match=min_match)
+            plan = self.planner.plan(keys, n, min_match=min_match,
+                                     deadline_s=ddl.remaining()
+                                     if ddl is not None else None)
         else:
             plan = [FetchAttempt(None, k) for k in keys
                     if k.n_tokens >= min_match
@@ -177,6 +185,19 @@ class PrefixFetcher:
             if self.planner is not None else None
         self.last_decision = (rec, None, 0.0)
         for att in plan:
+            if ddl is not None and att.est_fetch_s >= ddl.remaining():
+                # remaining budget can't cover the transfer: fall to
+                # the next attempt / local prefill instead of blowing
+                # the deadline harder
+                LEDGER.note_attempt(
+                    rec, peer=att.peer_id or "server",
+                    range_tokens=att.key.n_tokens, result="deadline",
+                    est_fetch_s=att.est_fetch_s)
+                FLIGHT.record("fetch.deadline_skip", client="gateway",
+                              peer=att.peer_id or "server",
+                              est_fetch_s=att.est_fetch_s,
+                              remaining_s=ddl.remaining())
+                continue
             resp, dt, nb, shared, template = self._get(att)
             hit = bool(resp.get("ok") and resp.get("blob"))
             LEDGER.note_attempt(
@@ -231,15 +252,16 @@ class PrefixFetcher:
         # per-attempt net spans (and the peer's folded remote spans)
         # land in this request's trace
         caller = current_span()
+        ddl = current_deadline()
         if peer_id is not None:
             def issue():
-                with self.tracer.attach(caller):
+                with self.tracer.attach(caller), deadline_attach(ddl):
                     return self.directory.request(peer_id, "get",
                                                   {"key": cand.digest})
             key = (peer_id, cand.digest)
         else:
             def issue():
-                with self.tracer.attach(caller):
+                with self.tracer.attach(caller), deadline_attach(ddl):
                     return self.transport.request("get",
                                                   {"key": cand.digest})
             key = cand.digest
@@ -482,7 +504,11 @@ class GatewayEngine:
                 rs = (self.tracer.start("gw.resolve", parent=pctx,
                                         attrs={"prompt_tokens": n})
                       if pctx is not None else NULL_SPAN)
-                with rs:               # ambient: attempt spans nest here
+                # ambient: attempt spans nest here, and the request's
+                # remaining latency budget (wire extension field
+                # `deadline_s`) scopes the whole resolve — the planner
+                # prunes against it and the peers see the remainder
+                with rs, deadline_scope(job.parsed.deadline_s):
                     self.fetcher.sync()
                     cache1, matched, logits, served = \
                         self.fetcher.resolve(segs)

@@ -50,6 +50,10 @@ class ParsedRequest:
     stream: bool = False
     tenant: str = "default"
     model: str = ""
+    # end-to-end latency budget in seconds (extension field): the
+    # engine prices fetch plans against it, skips attempts that can't
+    # finish inside it, and rides the remaining budget to the peers
+    deadline_s: Optional[float] = None
     echo_meta: Dict[str, object] = field(default_factory=dict)
 
 
@@ -78,6 +82,12 @@ def _common_opts(body: dict, req: ParsedRequest,
     model = body.get("model", "")
     _require(isinstance(model, str), "'model' must be a string")
     req.model = model
+    ddl = body.get("deadline_s")
+    if ddl is not None:
+        _require(isinstance(ddl, (int, float))
+                 and not isinstance(ddl, bool) and float(ddl) > 0.0,
+                 "'deadline_s' must be a positive number")
+        req.deadline_s = float(ddl)
 
 
 def parse_completion(body: dict, max_tokens_cap: int = 256

@@ -40,7 +40,11 @@ _EPS = 1e-9
 
 class _PeerCal:
     __slots__ = ("n", "ewma", "abs_sum", "last_est_s", "last_actual_s",
-                 "last_bytes", "drift", "drift_events")
+                 "last_bytes", "drift", "drift_events", "ratios")
+
+    # recent actual/est ratios kept for the hedging p95: small and
+    # recency-biased on purpose — hedges must adapt to the link NOW
+    RATIO_WINDOW = 32
 
     def __init__(self):
         self.n = 0
@@ -51,6 +55,8 @@ class _PeerCal:
         self.last_bytes = 0
         self.drift = False
         self.drift_events = 0
+        from collections import deque
+        self.ratios = deque(maxlen=self.RATIO_WINDOW)
 
 
 class CalibrationTracker:
@@ -93,6 +99,7 @@ class CalibrationTracker:
                        else self.alpha * err + (1 - self.alpha) * pc.ewma)
             pc.last_est_s, pc.last_actual_s = est_s, actual_s
             pc.last_bytes = int(nbytes)
+            pc.ratios.append(actual_s / est_s)
             if pc.n >= self.min_obs:
                 if not pc.drift and abs(pc.ewma) >= self.band:
                     pc.drift = True
@@ -107,6 +114,19 @@ class CalibrationTracker:
         self._g_drift.labels(peer=peer).set(1.0 if drift else 0.0)
         if fire is not None:
             self._flight.trigger(ESTIMATOR_DRIFT, **fire)
+
+    def p95_ratio(self, peer: str, default: float = 1.5) -> float:
+        """The p95 of the peer's recent actual/est ratios — the
+        calibrated patience bound for hedged fetches: an attempt still
+        outstanding past ``est * p95_ratio`` is an anomaly worth firing
+        the plan's #2 candidate over. Falls back to ``default`` until
+        the window has a few samples."""
+        with self._lock:
+            pc = self._peers.get(peer)
+            if pc is None or len(pc.ratios) < 4:
+                return default
+            xs = sorted(pc.ratios)
+        return xs[min(len(xs) - 1, int(0.95 * len(xs)))]
 
     def drifted(self) -> list:
         """Peers currently flagged as drifted."""

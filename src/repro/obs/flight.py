@@ -40,6 +40,8 @@ CHUNK_ERROR = "chunk_error"
 SHED = "shed"
 PEER_DEATH = "peer_death"
 ESTIMATOR_DRIFT = "estimator_drift"
+BREAKER_OPEN = "breaker_open"
+RESTART_CIRCUIT_OPEN = "restart_circuit_open"
 
 
 class FlightRecorder:

@@ -78,10 +78,13 @@ class DecisionLedger:
     # -- record lifecycle ----------------------------------------------
     def open(self, *, client: str = "", prompt_tokens: int = 0,
              trace_id: str = "", candidates=(),
-             local_est_s: Optional[float] = None) -> Optional[dict]:
+             local_est_s: Optional[float] = None,
+             deadline_s: Optional[float] = None) -> Optional[dict]:
         """Open a record at plan time. ``candidates`` is the full
         priced set (pruned ones included, flagged); see planner.py for
-        the schema."""
+        the schema. ``deadline_s`` is the remaining latency budget the
+        plan was priced under (additive field; null when the request
+        carried none)."""
         if not self.enabled:
             return None
         rec = {"id": f"dec-{next(self._ids)}",
@@ -89,6 +92,7 @@ class DecisionLedger:
                "t_open": clock.monotonic(),
                "prompt_tokens": int(prompt_tokens),
                "local_est_s": local_est_s,
+               "deadline_s": deadline_s,
                "candidates": list(candidates),
                "attempts": [], "outcome": None}
         with self._lock:

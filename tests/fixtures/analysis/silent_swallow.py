@@ -1,0 +1,27 @@
+"""R6 regression fixture: serving-path handlers that swallow the
+fabric's failure contract silently. The checker must flag every
+handler here; the clean twin is ``swallow_clean.py``."""
+
+
+class TransportError(ConnectionError):
+    pass
+
+
+class ChunkError(ValueError):
+    pass
+
+
+def fetch_swallowed(link):
+    try:
+        return link.request("get", {})
+    except TransportError:
+        pass                       # failure erased: nothing recorded
+
+
+def restore_swallowed(restorer, template):
+    st = object()
+    try:
+        st = restorer.result(template)
+    except (ChunkError, ValueError):
+        st = None                  # rebinding state is not handling
+    return st

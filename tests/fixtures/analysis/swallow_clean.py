@@ -1,0 +1,48 @@
+"""Clean twin of ``silent_swallow.py``: the same handler shapes, each
+visibly handling the failure — R6 must stay quiet on all of them."""
+
+
+class TransportError(ConnectionError):
+    pass
+
+
+class ChunkError(ValueError):
+    pass
+
+
+class _Flight:
+    def record(self, ev, **fields):
+        pass
+
+
+FLIGHT = _Flight()
+
+
+def fetch_recorded(link):
+    try:
+        return link.request("get", {})
+    except TransportError as e:
+        FLIGHT.record("fetch.failed", error=repr(e))
+
+
+def fetch_falls_down_plan(links):
+    for link in links:
+        try:
+            return link.request("get", {})
+        except TransportError:
+            continue               # next attempt — never a hang
+    return None
+
+
+def restore_uses_exception(restorer, template):
+    try:
+        return restorer.result(template)
+    except (ChunkError, ValueError) as e:
+        return {"error": repr(e)}
+
+
+def probe_reraises(link):
+    try:
+        return link.request("health", {})
+    except TransportError:
+        raise

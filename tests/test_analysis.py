@@ -52,9 +52,18 @@ def test_fixture_blocking_coroutine_flagged_statically():
     assert rep.failed
 
 
+def test_fixture_silent_swallow_flagged_statically():
+    rep = check_paths([os.path.join(FIXTURES, "silent_swallow.py")])
+    assert [f.rule for f in rep.live] == ["R6", "R6"]
+    assert all("swallows the failure silently" in f.message
+               for f in rep.live)
+    assert rep.failed
+
+
 def test_fixture_clean_twins_stay_quiet():
     rep = check_paths([os.path.join(FIXTURES, "lock_clean.py"),
-                       os.path.join(FIXTURES, "async_clean.py")])
+                       os.path.join(FIXTURES, "async_clean.py"),
+                       os.path.join(FIXTURES, "swallow_clean.py")])
     assert rep.live == [] and not rep.failed
 
 

@@ -1,0 +1,462 @@
+"""Chaos fabric + graceful-degradation stack.
+
+Covers the robustness contract end to end at the unit level: the
+per-peer circuit breaker state machine under a mocked clock, the
+client->server cancel frame over real sockets (mid-stream abort that
+leaves the connection reusable), graceful drain while a chunk stream
+is in flight (finish or one bounded error — never a half frame),
+end-to-end deadline propagation and server-side rejection, the
+seed-replayable fault schedule (same seed => same event order), the
+FaultDriver kind->control-surface mapping, and the supervisor's
+restart-storm guard (capped backoff + max_restarts circuit).
+"""
+import json
+import threading
+import time
+
+import pytest
+
+from repro.chaos import FaultDriver, FaultSchedule
+from repro.chaos.schedule import FaultEvent
+from repro.core.cluster.breaker import (CLOSED, HALF_OPEN, OPEN,
+                                        CircuitBreaker)
+from repro.core.deadline import (DEADLINE_KEY, attach,
+                                 current_deadline, deadline_scope,
+                                 inject_deadline)
+from repro.core.net.link import TCPPeerLink
+from repro.core.net.server import serve_peer_tcp
+from repro.core.net.supervisor import PeerSpec, PeerSupervisor
+from repro.core.transport import StreamCancelled, TransportError
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker state machine (mocked clock)
+# ---------------------------------------------------------------------------
+
+def _breaker(**kw):
+    kw.setdefault("fail_threshold", 3)
+    kw.setdefault("base_backoff_s", 1.0)
+    kw.setdefault("jitter", 0.0)       # deterministic windows
+    return CircuitBreaker("p0", **kw)
+
+
+def test_breaker_trips_open_at_threshold():
+    b = _breaker()
+    assert b.record_failure(now=0.0) is None
+    assert b.record_failure(now=0.1) is None
+    assert b.state == CLOSED and b.allow(0.2)
+    ev = b.record_failure(now=0.2)     # third consecutive failure
+    assert ev is not None and ev["opens"] == 1
+    assert b.state == OPEN
+    assert not b.allow(0.3)
+    # one success anywhere resets the consecutive count while closed
+    b2 = _breaker()
+    b2.record_failure(now=0.0)
+    b2.record_failure(now=0.1)
+    b2.record_success()
+    assert b2.record_failure(now=0.2) is None
+    assert b2.state == CLOSED
+
+
+def test_breaker_half_open_probe_success_closes():
+    b = _breaker()
+    for t in (0.0, 0.1, 0.2):
+        b.record_failure(now=t)
+    assert not b.allow(0.5)            # window is base 1.0s from t=0.2
+    assert b.allow(1.5)                # window elapsed -> half-open
+    assert b.state == HALF_OPEN
+    b.on_attempt(1.5)
+    assert not b.allow(1.6)            # single probe slot claimed
+    assert b.record_success() is True  # state changed -> gauge update
+    assert b.state == CLOSED and b.allow(1.7)
+    assert b.snapshot()["opens"] == 0  # full reset
+
+
+def test_breaker_probe_failure_reopens_with_doubled_backoff():
+    b = _breaker()
+    for t in (0.0, 0.0, 0.0):
+        b.record_failure(now=t)
+    first_window = b.snapshot()["open_until"]       # 0.0 + 1.0
+    assert b.allow(first_window + 0.01)
+    b.on_attempt(first_window + 0.01)
+    ev = b.record_failure(now=first_window + 0.02)
+    assert ev is not None and ev["probe_failed"] and ev["opens"] == 2
+    # zero jitter: second window is exactly base * 2
+    assert ev["backoff_s"] == pytest.approx(2.0)
+    assert not b.allow(first_window + 1.0)
+
+
+def test_breaker_backoff_cap_and_jitter_bounds():
+    b = CircuitBreaker("p1", fail_threshold=1, base_backoff_s=1.0,
+                       max_backoff_s=4.0, jitter=0.2)
+    backoffs = []
+    t = 0.0
+    for _ in range(5):
+        assert b.allow(t)
+        b.on_attempt(t)
+        ev = b.record_failure(now=t)
+        backoffs.append(ev["backoff_s"])
+        t = b.snapshot()["open_until"] + 0.01
+    for i, bo in enumerate(backoffs):
+        raw = min(4.0, 1.0 * 2 ** i)
+        assert raw <= bo <= raw * 1.2  # jittered, never below raw
+    assert backoffs[-1] <= 4.0 * 1.2   # capped
+
+
+def test_breaker_probe_timeout_cannot_wedge():
+    b = _breaker(probe_timeout_s=5.0)
+    for t in (0.0, 0.0, 0.0):
+        b.record_failure(now=t)
+    assert b.allow(1.5)
+    b.on_attempt(1.5)                  # probe claimed... and its
+    assert not b.allow(2.0)            # caller dies without reporting
+    assert b.allow(1.5 + 5.0 + 0.1)    # timeout frees the slot
+
+
+# ---------------------------------------------------------------------------
+# deadline propagation
+# ---------------------------------------------------------------------------
+
+class _FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def now(self):
+        return self.t
+
+
+def test_deadline_scope_and_injection():
+    clk = _FakeClock()
+    assert current_deadline() is None
+    payload = {"key": b"k"}
+    assert inject_deadline(payload) is payload    # no scope: untouched
+    with deadline_scope(2.0, clock=clk) as dl:
+        assert current_deadline() is dl
+        clk.t = 0.5
+        out = inject_deadline({"key": b"k"})
+        assert out[DEADLINE_KEY] == pytest.approx(1.5)
+        assert DEADLINE_KEY not in payload
+        clk.t = 2.5
+        assert dl.expired()
+    assert current_deadline() is None
+    # None budget is a no-op scope
+    with deadline_scope(None) as dl:
+        assert dl is None and current_deadline() is None
+
+
+def test_deadline_attach_hands_off_across_threads():
+    clk = _FakeClock()
+    seen = {}
+
+    def worker(dl):
+        with attach(dl):
+            seen["dl"] = current_deadline()
+        seen["after"] = current_deadline()
+
+    with deadline_scope(1.0, clock=clk) as dl:
+        t = threading.Thread(target=worker, args=(dl,))
+        t.start()
+        t.join(5.0)
+    assert seen["dl"] is dl and seen["after"] is None
+
+
+def test_server_rejects_expired_deadline_over_tcp():
+    class Echo:
+        def __init__(self):
+            self.calls = 0
+
+        def handle(self, op, payload):
+            self.calls += 1
+            return {"ok": True, "op": op}
+
+    h = Echo()
+    with serve_peer_tcp(h) as srv:
+        link = TCPPeerLink("p0", "127.0.0.1", srv.port, timeout=5.0)
+        resp, _, _ = link.request("ping", {DEADLINE_KEY: -0.5})
+        assert resp["deadline_exceeded"] and not resp["ok"]
+        assert h.calls == 0            # never dispatched
+        resp, _, _ = link.request("ping", {DEADLINE_KEY: 30.0})
+        assert resp["ok"] and h.calls == 1
+        link.close()
+
+
+# ---------------------------------------------------------------------------
+# cancel frame over real sockets
+# ---------------------------------------------------------------------------
+
+class _Chunky:
+    """Streams 8 chunks for any op; answers plain ops too."""
+
+    def __init__(self, n=8, size=400):
+        self.chunks = [bytes([i]) * size for i in range(n)]
+
+    def handle(self, op, payload):
+        if op == "ping":
+            return {"ok": True}
+        return {"ok": True, "chunks": list(self.chunks)}
+
+
+def test_cancel_frame_aborts_stream_and_connection_survives():
+    with serve_peer_tcp(_Chunky()) as srv:
+        # pace the server so the cancel lands mid-stream, not after
+        srv.chaos["stall_chunk_s"] = 0.05
+        link = TCPPeerLink("p0", "127.0.0.1", srv.port, timeout=10.0)
+        cancel = threading.Event()
+        got = []
+
+        def on_chunk(b, dt, nb):
+            got.append(b)
+            if len(got) >= 2:
+                cancel.set()
+
+        with pytest.raises(StreamCancelled):
+            link.request_stream("get_chunks", {"key": b"k"},
+                                on_chunk, cancel=cancel)
+        assert 2 <= len(got) < 8       # aborted mid-flight
+        # the abort is an ACKED protocol event, not an error teardown:
+        # the same connection serves the next request in sync
+        assert link.request("ping", {})[0]["ok"]
+        deadline = time.monotonic() + 5.0
+        while srv.stats["cancels"] < 1 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert srv.stats["cancels"] == 1
+        link.close()
+
+
+def test_pre_set_cancel_aborts_before_chunks():
+    with serve_peer_tcp(_Chunky()) as srv:
+        srv.chaos["stall_chunk_s"] = 0.05
+        link = TCPPeerLink("p0", "127.0.0.1", srv.port, timeout=10.0)
+        cancel = threading.Event()
+        cancel.set()
+        with pytest.raises(StreamCancelled):
+            link.request_stream("get_chunks", {"key": b"k"},
+                                lambda b, dt, nb: None, cancel=cancel)
+        assert link.request("ping", {})[0]["ok"]
+        link.close()
+
+
+def test_graceful_drain_mid_stream_finishes_or_bounded_error():
+    """close(graceful=True) while a chunk stream is in flight: the
+    stream must run to completion (it counts as in-flight for the
+    whole write) — never a hang, never a truncated frame."""
+    first_chunk = threading.Event()
+    out = {}
+
+    with serve_peer_tcp(_Chunky(n=6), drain_timeout_s=10.0) as srv:
+        srv.chaos["stall_chunk_s"] = 0.1
+        link = TCPPeerLink("p0", "127.0.0.1", srv.port, timeout=10.0)
+        got = []
+
+        def on_chunk(b, dt, nb):
+            got.append(b)
+            first_chunk.set()
+
+        def go():
+            try:
+                out["resp"] = link.request_stream(
+                    "get_chunks", {"key": b"k"}, on_chunk)[0]
+            except (TransportError, StreamCancelled) as e:
+                out["err"] = e
+
+        t = threading.Thread(target=go)
+        t.start()
+        assert first_chunk.wait(5.0)   # stream is in flight
+        srv.close(graceful=True)       # must drain the whole stream
+        t.join(15.0)
+        assert not t.is_alive(), "stream hung across graceful close"
+        assert out.get("resp", {}).get("ok") is True
+        assert len(got) == 6           # every chunk arrived intact
+        with pytest.raises(TransportError):
+            link.request("ping", {})   # server really gone, bounded
+        link.close()
+
+
+def test_injected_corruption_flips_first_byte_of_next_chunks():
+    with serve_peer_tcp(_Chunky(n=4, size=16)) as srv:
+        srv.chaos["corrupt_chunks"] = 1
+        link = TCPPeerLink("p0", "127.0.0.1", srv.port, timeout=10.0)
+        got = []
+        link.request_stream("get_chunks", {"key": b"k"},
+                            lambda b, dt, nb: got.append(b))
+        assert len(got) == 4
+        assert got[0][0] == 0x00 ^ 0xFF     # injected flip
+        assert got[1][0] == 0x01            # only the budgeted chunk
+        # budget exhausted: the next stream is clean again
+        got2 = []
+        link.request_stream("get_chunks", {"key": b"k"},
+                            lambda b, dt, nb: got2.append(b))
+        assert got2[0][0] == 0x00
+        link.close()
+
+
+def test_partition_inbound_times_out_but_inject_heals():
+    with serve_peer_tcp(_Chunky()) as srv:
+        srv.chaos["partition_inbound"] = True
+        link = TCPPeerLink("p0", "127.0.0.1", srv.port, timeout=0.5)
+        t0 = time.monotonic()
+        with pytest.raises(TransportError):
+            link.request("ping", {})
+        assert time.monotonic() - t0 < 5.0  # bounded, not a hang
+        link.close()
+        # the partition drops everything EXCEPT the inject control op,
+        # so a drill can always heal the fault it planted
+        srv.chaos.pop("partition_inbound")
+        link2 = TCPPeerLink("p0", "127.0.0.1", srv.port, timeout=5.0)
+        assert link2.request("ping", {})[0]["ok"]
+        link2.close()
+
+
+# ---------------------------------------------------------------------------
+# fault schedule: seeded, replayable, self-healing
+# ---------------------------------------------------------------------------
+
+def test_schedule_same_seed_same_event_order():
+    peers = ["p0", "p1", "p2"]
+    a = FaultSchedule.generate(seed=42, peers=peers)
+    b = FaultSchedule.generate(seed=42, peers=peers)
+    assert a.event_order() == b.event_order()
+    c = FaultSchedule.generate(seed=43, peers=peers)
+    assert a.event_order() != c.event_order()
+
+
+def test_schedule_covers_all_kinds_and_pairs_heals():
+    sched = FaultSchedule.generate(seed=7, peers=["p0", "p1"],
+                                   n_faults=6, heal_after=3)
+    faults = sched.faults()
+    assert len(faults) >= 6
+    assert {f.kind for f in faults} == {
+        "kill", "partition", "corrupt", "stall", "bandwidth",
+        "delay_ack"}
+    # every fault has its heal/revive/un-throttle scheduled later
+    heals = [e for e in sched.events if e not in faults]
+    for f in faults:
+        partner = [h for h in heals
+                   if h.peer == f.peer and h.step == f.step + 3]
+        assert partner, f"fault {f.fingerprint()} never heals"
+
+
+def test_schedule_json_roundtrip_preserves_order():
+    sched = FaultSchedule.generate(seed=5, peers=["p0", "p1"])
+    back = FaultSchedule.from_json(sched.to_json())
+    assert back.event_order() == sched.event_order()
+    assert back.seed == sched.seed
+    json.loads(sched.to_json())        # valid JSON on the wire
+
+
+class _RecordingSup:
+    """Supervisor stand-in recording which control surface each fault
+    kind lands on; peer 'dead' refuses inject ops."""
+
+    def __init__(self):
+        self.procs = {"p0": None, "dead": None}
+        self.calls = []
+
+    def kill(self, pid, hard=False):
+        self.calls.append(("kill", pid, hard))
+
+    def restart(self, pid):
+        self.calls.append(("restart", pid))
+
+    def set_throttle(self, pid, bps):
+        self.calls.append(("throttle", pid, bps))
+
+    def inject_faults(self, pid, chaos=None, reset=False):
+        if pid == "dead":
+            raise TransportError("connection refused")
+        self.calls.append(("inject", pid, chaos, reset))
+        return {"ok": True}
+
+
+def test_driver_maps_kinds_to_control_surfaces():
+    events = [
+        FaultEvent(1, "kill", "p0", {}),
+        FaultEvent(2, "corrupt", "p0", {"chunks": 3}),
+        FaultEvent(3, "stall", "p0", {"seconds": 0.2}),
+        FaultEvent(4, "partition", "p0", {}),
+        FaultEvent(5, "bandwidth", "p0", {"bps": 1e4}),
+        FaultEvent(6, "heal", "p0", {}),
+        FaultEvent(7, "revive", "p0", {}),
+    ]
+    sup = _RecordingSup()
+    drv = FaultDriver(sup, FaultSchedule(events, seed=0, n_steps=10))
+    drv.advance(3)
+    assert [c[0] for c in sup.calls] == ["kill", "inject", "inject"]
+    assert sup.calls[0] == ("kill", "p0", True)
+    assert sup.calls[1][2] == {"corrupt_chunks": 3}
+    assert sup.calls[2][2] == {"stall_chunk_s": 0.2}
+    drv.finish()
+    assert sup.calls[3][2] == {"partition_inbound": True}
+    assert sup.calls[4] == ("throttle", "p0", 1e4)
+    assert sup.calls[5] == ("inject", "p0", None, True)   # heal
+    assert sup.calls[6] == ("restart", "p0")
+    assert drv.applied_order() == [e.fingerprint() for e in events]
+
+
+def test_driver_records_and_skips_dead_target():
+    events = [FaultEvent(1, "corrupt", "dead", {"chunks": 1}),
+              FaultEvent(2, "kill", "p0", {})]
+    sup = _RecordingSup()
+    drv = FaultDriver(sup, FaultSchedule(events, seed=0, n_steps=5))
+    drv.finish()                       # must not raise
+    assert [e.kind for e in drv.skipped] == ["corrupt"]
+    assert [e.kind for e in drv.applied] == ["kill"]
+
+
+# ---------------------------------------------------------------------------
+# supervisor restart-storm guard (no real processes)
+# ---------------------------------------------------------------------------
+
+class _StubSup(PeerSupervisor):
+    """health()/restart() stubbed so the storm guard runs without
+    spawning daemons."""
+
+    def __init__(self, **kw):
+        super().__init__([PeerSpec(peer_id="p0", port=1)], **kw)
+        self.healthy = False
+        self.restarted = []
+
+    def health(self):
+        return {"p0": self.healthy}
+
+    def restart(self, pid):
+        self.procs[pid].restarts += 1
+        self.restarted.append(pid)
+
+
+def test_restart_storm_backoff_then_circuit_then_forgiveness():
+    sup = _StubSup(restart_backoff_s=0.0, max_restarts=2,
+                   restart_stable_s=0.0)
+    pp = sup.procs["p0"]
+    # zero backoff: both budgeted restarts fire on consecutive sweeps
+    assert sup.check_and_restart() == ["p0"]
+    assert pp.storm == 1
+    assert sup.check_and_restart() == ["p0"]
+    assert pp.storm == 2
+    # budget spent: circuit opens, peer stays down
+    assert sup.check_and_restart() == []
+    assert pp.circuit_open
+    assert sup.check_and_restart() == []
+    assert sup.restarted == ["p0", "p0"]
+    st = sup.restart_states()["p0"]
+    assert st["circuit_open"] and st["storm"] == 2
+    assert st["restarts"] == 2
+    # a stable healthy period forgives the storm and closes the circuit
+    sup.healthy = True
+    sup.check_and_restart()
+    assert pp.storm == 0 and not pp.circuit_open
+
+
+def test_restart_backoff_window_skips_supervised_restart():
+    sup = _StubSup(restart_backoff_s=60.0, restart_jitter=0.0,
+                   max_restarts=8)
+    # first death restarts immediately (common one-off crash)
+    assert sup.check_and_restart() == ["p0"]
+    # next sweep is inside the 60s backoff window: skipped, no storm
+    assert sup.check_and_restart() == []
+    assert sup.procs["p0"].storm == 1
+    st = sup.restart_states()["p0"]
+    assert 0.0 < st["backoff_remaining_s"] <= 60.0
+    # explicit operator restart bypasses the guard entirely
+    sup.restart("p0")
+    assert sup.restarted == ["p0", "p0"]
